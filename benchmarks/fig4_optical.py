@@ -1,0 +1,43 @@
+"""Paper Fig. 4: WRHT vs Ring/H-Ring/BT on the optical ring.
+
+Four DNN gradient payloads × N ∈ {1024, 2048, 3072, 4096}, flit-level
+simulation with Table II parameters.  Reports per-cell times and the average
+reduction of WRHT vs each baseline next to the paper's claimed numbers
+(75.59 % / 49.25 % / 70.1 %); our baselines are bandwidth-optimal
+implementations (stronger than the paper's — see EXPERIMENTS.md §Repro).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import simulator, step_models as sm
+
+PAPER_CLAIMS = {"ring": 75.59, "hring": 49.25, "bt": 70.1}
+
+
+def rows() -> list[dict]:
+    p = sm.OpticalParams()
+    out = []
+    reductions = {a: [] for a in ("ring", "hring", "bt")}
+    for n in (1024, 2048, 3072, 4096):
+        for model, bits in sm.PAPER_MODELS_BITS.items():
+            t0 = time.perf_counter()
+            res = {a: simulator.run_optical(a, n, bits, p)
+                   for a in ("wrht", "ring", "bt", "hring")}
+            us = (time.perf_counter() - t0) * 1e6
+            for a in reductions:
+                reductions[a].append(1 - res["wrht"].total_s / res[a].total_s)
+            out.append({
+                "name": f"fig4/{model}/N={n}",
+                "us_per_call": us,
+                "derived": {a: round(r.total_s * 1e3, 2) for a, r in res.items()},
+            })
+    for a, vals in reductions.items():
+        out.append({
+            "name": f"fig4/avg_reduction_vs_{a}",
+            "us_per_call": 0.0,
+            "derived": f"{100 * sum(vals) / len(vals):.2f}%",
+            "paper": f"{PAPER_CLAIMS[a]}%",
+        })
+    return out

@@ -1,0 +1,48 @@
+"""Paper Fig. 5: electrical fat-tree (E-Ring, RD) vs optical (O-Ring, WRHT).
+
+N ∈ {128, 256, 512, 1024} × four DNN payloads.  Paper claims: WRHT reduces
+comm time by 86.69 % vs E-Ring and 84.71 % vs RD; O-Ring beats E-Ring by
+74.74 % on average.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import simulator, step_models as sm
+
+
+def rows() -> list[dict]:
+    p, e = sm.OpticalParams(), sm.ElectricalParams()
+    out = []
+    red_er, red_rd, red_oring = [], [], []
+    for n in (128, 256, 512, 1024):
+        for model, bits in sm.PAPER_MODELS_BITS.items():
+            t0 = time.perf_counter()
+            wrht_t = simulator.run_optical("wrht", n, bits, p).total_s
+            oring_t = simulator.run_optical("ring", n, bits, p).total_s
+            ering_t = sm.t_ring_electrical(n, bits, e)
+            rd_t = sm.t_rd_electrical(n, bits, e)
+            us = (time.perf_counter() - t0) * 1e6
+            red_er.append(1 - wrht_t / ering_t)
+            red_rd.append(1 - wrht_t / rd_t)
+            red_oring.append(1 - oring_t / ering_t)
+            out.append({
+                "name": f"fig5/{model}/N={n}",
+                "us_per_call": us,
+                "derived": {"wrht_ms": round(wrht_t * 1e3, 2),
+                            "o_ring_ms": round(oring_t * 1e3, 2),
+                            "e_ring_ms": round(ering_t * 1e3, 2),
+                            "rd_ms": round(rd_t * 1e3, 2)},
+            })
+    out.append({"name": "fig5/wrht_vs_ering", "us_per_call": 0.0,
+                "derived": f"{100 * statistics.mean(red_er):.2f}%",
+                "paper": "86.69%"})
+    out.append({"name": "fig5/wrht_vs_rd", "us_per_call": 0.0,
+                "derived": f"{100 * statistics.mean(red_rd):.2f}%",
+                "paper": "84.71%"})
+    out.append({"name": "fig5/oring_vs_ering", "us_per_call": 0.0,
+                "derived": f"{100 * statistics.mean(red_oring):.2f}%",
+                "paper": "74.74%"})
+    return out

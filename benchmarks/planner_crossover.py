@@ -1,0 +1,34 @@
+"""Beyond-paper: the α–β planner's schedule choice vs bucket size (Lemma 1 on
+TPU).  Small buckets -> WRHT m-ary tree (latency-bound); large -> hierarchical
+scatter (bandwidth-bound).  Also shows the paper's optical regime."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.planner import CostParams, crossover_table, plan_bucket
+
+
+def rows() -> list[dict]:
+    out = []
+    t0 = time.perf_counter()
+    for row in crossover_table(256):
+        out.append({
+            "name": f"planner/tpu_v5e/bytes={row['bytes']}",
+            "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "derived": {"strategy": row["strategy"], "m": row["m"],
+                        "factors": list(row["factors"]),
+                        "cost_us": round(row["cost_us"], 2)},
+        })
+        t0 = time.perf_counter()
+    # the paper's optical regime: 25 µs steps, AlexNet gradients
+    p = CostParams.optical(64)
+    plan = plan_bucket(1024, 62.3e6 * 4, p, m_candidates=(2, 8, 129))
+    out.append({
+        "name": "planner/optical_w64/alexnet",
+        "us_per_call": 0.0,
+        "derived": {"strategy": plan.strategy, "m": plan.m,
+                    "factors": list(plan.factors),
+                    "cost_ms": round(plan.cost_s * 1e3, 2)},
+    })
+    return out

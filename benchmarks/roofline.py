@@ -1,0 +1,81 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch × shape × mesh): the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio and roofline fraction.  Also renders
+the markdown table embedded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    cells = []
+    for p in sorted(OUT_DIR.glob(pattern)):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def rows() -> list[dict]:
+    out = []
+    for c in load_cells():
+        if not c.get("ok"):
+            out.append({"name": f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+                        "us_per_call": 0.0,
+                        "derived": {"ok": False, "error": c.get("error", "?")[:80]}})
+            continue
+        r = c["roofline"]
+        out.append({
+            "name": f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            "us_per_call": c.get("seconds", 0) * 1e6,
+            "derived": {
+                "compute_ms": round(r["compute_s"] * 1e3, 2),
+                "memory_ms": round(r["memory_s"] * 1e3, 2),
+                "collective_ms": round(r["collective_s"] * 1e3, 2),
+                "bottleneck": r["bottleneck"],
+                "useful": round(r["useful_ratio"], 3),
+                "roofline_frac": round(r["roofline_fraction"], 4),
+                "hbm_gib": round(c["memory"]["per_device_hbm_bytes"] / 2**30, 2),
+                "fits": c["fits_16gb"],
+            },
+        })
+    return out
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    """Baseline cells only (tagged hillclimb variants are excluded).
+
+    'steady (GiB)' = argument residency (weights + optimizer + caches) —
+    the true per-device steady state; 'HBM/dev' additionally includes XLA
+    CPU temp modelling (f32-promotion of bf16 dot operands + scan cache
+    double-buffering, both absent on TPU — EXPERIMENTS.md §Methodology-5)."""
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "bottleneck | steady (GiB) | HBM/dev (GiB) | fits 16G | useful | "
+        "roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load_cells():
+        if c.get("mesh") != mesh or not c.get("ok") or c.get("tag"):
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']*1e3:.2f} | "
+            f"{r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} | "
+            f"{r['bottleneck']} | "
+            f"{c['memory']['argument_size_in_bytes']/2**30:.2f} | "
+            f"{c['memory']['per_device_hbm_bytes']/2**30:.2f} | "
+            f"{'yes' if c['fits_16gb'] else 'NO'} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

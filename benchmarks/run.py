@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Modules:
+  table1_steps       paper Table I step counts
+  fig4_optical       paper Fig. 4 (optical ring comparison)
+  fig5_electrical    paper Fig. 5 (electrical vs optical)
+  planner_crossover  beyond-paper alpha-beta planner behaviour
+  roofline           aggregated dry-run roofline terms (reads experiments/)
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> None:
+    from . import fig4_optical, fig5_electrical, planner_crossover, roofline, table1_steps
+
+    modules = {
+        "table1_steps": table1_steps,
+        "fig4_optical": fig4_optical,
+        "fig5_electrical": fig5_electrical,
+        "planner_crossover": planner_crossover,
+        "roofline": roofline,
+    }
+    selected = sys.argv[1:] or list(modules)
+    print("name,us_per_call,derived")
+    for name in selected:
+        mod = modules[name]
+        for row in mod.rows():
+            derived = row.get("derived", "")
+            if isinstance(derived, (dict, list)):
+                derived = json.dumps(derived, separators=(",", ":"))
+            paper = row.get("paper")
+            suffix = f",paper={paper}" if paper is not None else ""
+            print(f"{row['name']},{row.get('us_per_call', 0.0):.1f},"
+                  f"\"{derived}\"{suffix}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Table I: communication-step comparison, N=1000, w=64 (+ scaling)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import step_models as sm, wrht
+
+
+def rows() -> list[dict]:
+    out = []
+    n, w = 1000, 64
+    m = 2 * w + 1
+    t0 = time.perf_counter()
+    sched = wrht.build_schedule(n, w, 1.0)
+    build_us = (time.perf_counter() - t0) * 1e6
+    out.append({"name": "table1/ring_steps", "us_per_call": 0.0,
+                "derived": sm.ring_steps(n), "paper": 1998})
+    out.append({"name": "table1/hring_steps(g=5)", "us_per_call": 0.0,
+                "derived": sm.hring_steps(n, 5, w, table_variant=True),
+                "paper": 411})
+    out.append({"name": "table1/bt_steps", "us_per_call": 0.0,
+                "derived": sm.bt_steps(n), "paper": 20})
+    out.append({"name": "table1/wrht_steps(closed_form)", "us_per_call": 0.0,
+                "derived": sm.wrht_steps(n, m, with_alltoall=False), "paper": 4})
+    out.append({"name": "table1/wrht_steps(built_schedule)",
+                "us_per_call": build_us, "derived": sched.num_steps,
+                "paper": "4 (3 with all-to-all)"})
+    # scaling check across the paper's cluster sizes
+    for nn in (1024, 2048, 3072, 4096):
+        s = wrht.build_schedule(nn, w, 1.0, validate=False)
+        out.append({"name": f"table1/wrht_steps(N={nn})", "us_per_call": 0.0,
+                    "derived": s.num_steps, "paper": "≤4"})
+    return out

@@ -1,0 +1,46 @@
+"""Quickstart: the paper's all-reduce end to end, in three acts.
+
+  1. Build the WRHT schedule for a 64-node optical ring and show the paper's
+     step-count win over Ring/BT (Sec. III).
+  2. Time all four algorithms in the flit-level optical simulator (Fig. 4).
+  3. Train a tiny LM for 30 steps with WRHT-planned gradient sync (the TPU
+     port) and watch the loss drop.
+
+Runs on CPU in ~1 minute:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import TrainConfig
+from repro.core import simulator, step_models as sm, wrht
+from repro.data.pipeline import CorpusLM
+from repro.train import Trainer, TrainerOptions
+
+# ---- 1. the schedule itself ------------------------------------------------
+n, w = 64, 8
+sched = wrht.build_schedule(n, w, d_bits=25e6 * 32)
+print(f"WRHT on a {n}-node ring with {w} wavelengths: m={sched.m}, "
+      f"{sched.num_steps} steps "
+      f"(ring: {sm.ring_steps(n)}, binary tree: {sm.bt_steps(n)})")
+for i, step in enumerate(sched.steps):
+    print(f"  step {i}: {step.kind:9s} {len(step.transfers):3d} transfers, "
+          f"{step.wavelengths} wavelengths")
+
+# ---- 2. simulated communication time (Fig. 4 machinery) --------------------
+print("\nResNet50 gradients (100 MB), 1024-node ring:")
+for alg in ("wrht", "hring", "ring", "bt"):
+    r = simulator.run_optical(alg, 1024, 25e6 * 32)
+    print(f"  {alg:6s} {r.total_s*1e3:9.2f} ms  ({r.steps} steps)")
+
+# ---- 3. the TPU port: WRHT-planned gradient sync in a real train loop ------
+print("\nTraining a tiny LM (planner-scheduled hierarchical sync on 1 CPU "
+      "device degenerates to local sum — same code path as the 512-chip "
+      "dry-run):")
+cfg = registry.get("qwen2-1.5b", smoke=True)
+tc = TrainConfig(lr=1e-3, total_steps=30, warmup_steps=5, remat="none")
+src = CorpusLM(cfg.vocab_size, seq_len=32, global_batch=8)
+trainer = Trainer(cfg, tc, src, options=TrainerOptions(
+    ckpt_dir="/tmp/repro_quickstart", ckpt_every=1000, log_every=10))
+trainer.run(30)
+print("loss:", " -> ".join(f"{h['loss']:.2f}" for h in trainer.history))

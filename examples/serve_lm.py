@@ -1,0 +1,56 @@
+"""Serve a small model with batched requests through the KV-cache engine.
+
+Optionally load the checkpoint produced by examples/train_lm.py (the
+engine's decode step is exactly the serve_step the decode_32k dry-run cells
+lower, at production shapes).
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 6
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint import load_latest
+from repro.configs import registry
+from repro.models import api as mapi
+from repro.serve import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch, smoke=True)
+    api = mapi.get_api(cfg, remat="none")
+    params = api.init(jax.random.key(0))
+    restored, step = load_latest(args.ckpt_dir, {"params": params})
+    if restored is not None and args.arch == "qwen2-1.5b":
+        params, note = restored["params"], f"(checkpoint step {step})"
+    else:
+        note = "(random weights)"
+
+    eng = Engine(cfg, params, batch_slots=4, max_seq=128)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    reqs = [eng.submit(list(rng.integers(1, cfg.vocab_size, rng.integers(3, 10))),
+                       max_new_tokens=args.max_new)
+            for _ in range(args.requests)]
+    eng.run()
+    dt = time.time() - t0
+    tokens = sum(len(r.output) for r in reqs)
+    print(f"served {len(reqs)} requests {note}: {tokens} tokens "
+          f"in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
+    for r in reqs[:4]:
+        print(f"  req {r.rid}: {r.prompt[:5]}... -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

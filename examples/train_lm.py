@@ -1,0 +1,63 @@
+"""End-to-end driver: train an LM with WRHT gradient sync + checkpointing +
+fault tolerance.
+
+Presets:
+  tiny  (default)  ~0.4M params, 200 steps — CPU-friendly demo (~2 min)
+  100m             ~100M params, few hundred steps — the assignment's
+                   end-to-end scale; run on real hardware (or be patient)
+
+Demonstrates: corpus data pipeline, cosine schedule, grad clip, periodic
+checkpoints, auto-resume (kill it mid-run and rerun: it continues), and
+the straggler watchdog.
+
+  PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 200
+"""
+
+import argparse
+import dataclasses
+import logging
+
+from repro.configs import registry
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import CorpusLM
+from repro.train import Trainer, TrainerOptions
+
+
+def preset_config(name: str):
+    base = registry.get("qwen2-1.5b", smoke=True)
+    if name == "tiny":
+        return base
+    if name == "100m":  # ~100M params, qwen2-family
+        return dataclasses.replace(
+            base, name="qwen2-100m", n_layers=12, d_model=640, n_heads=10,
+            n_kv_heads=2, d_ff=2560, vocab_size=32000)
+    raise SystemExit(f"unknown preset {name}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=("tiny", "100m"))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--sync", default="auto",
+                    help="gradient sync: auto|psum|ring|rd|bt|wrht|planned")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+    cfg = preset_config(args.preset)
+    tc = TrainConfig(lr=3e-4 if args.preset == "100m" else 1e-3,
+                     total_steps=args.steps, warmup_steps=max(10, args.steps // 20),
+                     remat="none", sync_algorithm=args.sync)
+    src = CorpusLM(cfg.vocab_size, args.seq, args.batch)
+    trainer = Trainer(cfg, tc, src, options=TrainerOptions(
+        ckpt_dir=args.ckpt_dir, ckpt_every=max(20, args.steps // 5)))
+    trainer.run(args.steps)
+    hist = trainer.history
+    print(f"\nloss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} over "
+          f"{args.steps} steps; straggler events: {len(trainer.watchdog.events)}")
+
+
+if __name__ == "__main__":
+    main()

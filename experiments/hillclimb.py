@@ -1,0 +1,33 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, time
+from pathlib import Path
+from repro.configs import registry
+from repro.launch.dryrun import run_cell, OUT_DIR
+
+def save(r, tag):
+    p = OUT_DIR / f"{r['arch']}__{r['shape']}__{r['mesh']}__{tag}.json"
+    r["tag"] = tag
+    with open(p, "w") as f: json.dump(r, f, indent=2)
+    rr = r["roofline"]
+    print(f"[HC:{tag}] {r['arch']} {r['shape']}: hbm={r['memory']['per_device_hbm_bytes']/2**30:.2f}GiB "
+          f"args={r['memory']['argument_size_in_bytes']/2**30:.2f} "
+          f"c/m/coll={rr['compute_s']*1e3:.1f}/{rr['memory_s']*1e3:.1f}/{rr['collective_s']*1e3:.1f}ms "
+          f"frac={rr['roofline_fraction']:.3f} coll_counts={r['raw_cost_analysis']['collective_counts']}", flush=True)
+
+# --- A: deepseek-67b train_4k memory ladder -------------------------------
+for tag, over in [("A_mb16", {"microbatches": 16}),
+                  ("A_mb16_bf16acc", {"microbatches": 16, "grad_accum_dtype": "bfloat16"})]:
+    try: save(run_cell("deepseek-67b", "train_4k", False, over, verbose=False), tag)
+    except Exception as e: print(f"[HC:{tag}] FAIL {e}", flush=True)
+
+# --- B: 67b serve with TP-only weights (threshold change already applied) --
+for shape in ("prefill_32k", "decode_32k"):
+    try: save(run_cell("deepseek-67b", shape, False, None, verbose=False), "B_tponly")
+    except Exception as e: print(f"[HC:B {shape}] FAIL {e}", flush=True)
+
+# --- C: paper technique on qwen2 train — sync algorithm comparison ---------
+for alg in ("auto", "psum", "hier_faithful", "hier_scatter", "wrht", "planned"):
+    over = {"sync_algorithm": alg, "fsdp": False, "microbatches": 8, "sync_m": 5}
+    try: save(run_cell("qwen2-1.5b", "train_4k", False, over, verbose=False), f"C_{alg}")
+    except Exception as e: print(f"[HC:C {alg}] FAIL {type(e).__name__} {str(e)[:150]}", flush=True)

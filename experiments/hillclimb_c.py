@@ -1,0 +1,21 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.configs import registry
+from repro.launch.dryrun import run_cell, OUT_DIR
+
+def save(r, tag):
+    p = OUT_DIR / f"{r['arch']}__{r['shape']}__{r['mesh']}__{tag}.json"
+    r["tag"] = tag
+    with open(p, "w") as f: json.dump(r, f, indent=2)
+    rr = r["roofline"]
+    cb = r["raw_cost_analysis"]["collective_by_kind"]
+    print(f"[HC:{tag}] coll={rr['collective_s']*1e3:.1f}ms mem={rr['memory_s']*1e3:.1f}ms "
+          f"hbm={r['memory']['per_device_hbm_bytes']/2**30:.2f} frac={rr['roofline_fraction']:.3f} "
+          f"counts={r['raw_cost_analysis']['collective_counts']} "
+          f"bytesMB={ {k: round(v/1e6,1) for k,v in cb.items()} }", flush=True)
+
+for alg in ("auto", "psum", "hier_faithful", "hier_scatter", "wrht", "planned"):
+    over = {"sync_algorithm": alg, "fsdp": False, "microbatches": 8, "sync_m": 5}
+    try: save(run_cell("qwen2-1.5b", "train_4k", False, over, verbose=False), f"C_{alg}")
+    except Exception as e: print(f"[HC:C {alg}] FAIL {type(e).__name__} {str(e)[:150]}", flush=True)

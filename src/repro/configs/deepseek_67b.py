@@ -1,0 +1,21 @@
+"""DeepSeek-67B — dense llama-arch decoder [arXiv:2401.02954; hf].
+
+95L, d_model 8192, 64 heads (GQA kv=8), d_ff 22016, vocab 102400.
+Pure full attention -> long_500k is skipped (see DESIGN.md §5).
+"""
+
+from .base import ModelConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="decoder",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    rope_theta=1e4,
+)
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,28 @@
+"""DeepSeek-V2-236B — MoE with Multi-head Latent Attention [arXiv:2405.04434; hf].
+
+60L, d_model 5120, 128 heads, vocab 102400.  MLA: kv_lora_rank 512,
+q_lora_rank 1536, qk_nope 128 + qk_rope 64, v_head 128.  MoE: 2 shared +
+160 routed experts, top-6, expert width 1536; the first layer uses a dense
+FFN (width 12288).  Full attention (MLA is exact attention) -> long_500k
+skipped.
+"""
+
+from .base import MLAConfig, ModelConfig, MoEConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,      # MLA: kv heads = q heads after decompression
+    d_ff=1536,
+    dense_d_ff=12288,
+    first_k_dense=1,
+    vocab_size=102400,
+    moe=MoEConfig(n_experts=160, top_k=6, d_expert=1536, n_shared=2),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+)
+
+SMOKE = smoke_variant(CONFIG, n_heads=4, n_kv_heads=4)

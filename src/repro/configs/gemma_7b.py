@@ -1,0 +1,23 @@
+"""Gemma-7B — dense decoder, GeGLU, head_dim 256 [arXiv:2403.08295; hf].
+
+28L, d_model 3072, 16 heads (kv=16), d_ff 24576, vocab 256000.  Embeddings
+tied and scaled by sqrt(d_model) (gemma convention).
+"""
+
+from .base import ModelConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="decoder",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=24576,
+    vocab_size=256000,
+    head_dim=256,
+    act="geglu",
+    tie_embeddings=True,
+)
+
+SMOKE = smoke_variant(CONFIG, n_kv_heads=4)

@@ -1,0 +1,22 @@
+"""Granite-3.0-1B-A400M — MoE decoder [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24L, d_model 1024, 16 heads (GQA kv=8), vocab 49155; MoE with 32 experts,
+top-8 routing, expert FFN width 512.  Full attention -> long_500k skipped.
+"""
+
+from .base import ModelConfig, MoEConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    tie_embeddings=True,
+    moe=MoEConfig(n_experts=32, top_k=8, d_expert=512),
+)
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,27 @@
+"""InternVL2-1B — InternViT frontend + Qwen2-0.5B LM [arXiv:2404.16821; hf].
+
+LM backbone: 24L, d_model 896, 14 heads (GQA kv=2), d_ff 4864, vocab 151655.
+The InternViT-300M vision tower is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings [batch, 256, d_model]
+prepended to the token stream.  Full attention -> long_500k skipped.
+"""
+
+from .base import ModelConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151655,
+    qkv_bias=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    frontend="patch_embed",
+    frontend_seq=256,
+)
+
+SMOKE = smoke_variant(CONFIG, n_kv_heads=2)

@@ -1,0 +1,21 @@
+"""Qwen1.5-4B — dense decoder, MHA + QKV bias [hf:Qwen/Qwen1.5-4B; hf].
+
+40L, d_model 2560, 20 heads (kv=20, i.e. full MHA), d_ff 6912, vocab 151936.
+"""
+
+from .base import ModelConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="decoder",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+SMOKE = smoke_variant(CONFIG, n_kv_heads=4)

@@ -1,0 +1,31 @@
+"""Whisper-medium — encoder-decoder audio transformer [arXiv:2212.04356].
+
+24+24L, d_model 1024, 16 heads, d_ff 4096, vocab 51865.  LayerNorm, learned
+positions, plain GELU MLP.  The conv audio frontend is a STUB per the
+assignment: ``input_specs()`` provides precomputed frame embeddings
+[batch, 1500, d_model] for the encoder.  Full attention -> long_500k skipped.
+"""
+
+from .base import ModelConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,                  # decoder layers
+    encoder_layers=24,
+    encoder_seq=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    qkv_bias=True,
+    act="gelu",
+    norm="layernorm",
+    pos_embed="learned",
+    frontend="audio_frames",
+    norm_eps=1e-5,
+    tie_embeddings=True,
+)
+
+SMOKE = smoke_variant(CONFIG, n_kv_heads=4)

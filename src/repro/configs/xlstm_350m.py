@@ -1,0 +1,24 @@
+"""xLSTM-350M — sLSTM + mLSTM recurrent blocks [arXiv:2405.04517].
+
+24 blocks, d_model 1024, 4 heads, vocab 50304.  d_ff=0 per assignment: the
+blocks carry their own up/down projections (proj_factor 2.0) instead of a
+separate MLP.  Fully recurrent -> subquadratic -> long_500k runs.
+"""
+
+from .base import ModelConfig, XLSTMConfig, smoke_variant
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="xlstm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pos_embed="none",
+    xlstm=XLSTMConfig(slstm_every=2, n_heads=4, proj_factor=2.0),
+    subquadratic=True,
+)
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,15 @@
+# The paper's primary contribution — WRHT all-reduce — and its substrate:
+#   wrht          explicit optical-ring schedule builder (the paper, faithfully)
+#   wavelength    routing & wavelength assignment (first-fit RWA)
+#   step_models   closed-form step counts / times (Table I, Eq. 1)
+#   simulator     optical-ring event simulator (Fig. 4/5 reproduction)
+#   collectives   shard_map all-reduce zoo (ring/BT/RD/WRHT) — the TPU port
+#   planner       α–β schedule planner (Lemma 1/Theorem 1 on TPU)
+#   bucketing     gradient bucketing for overlap + per-size planning
+#   compression   int8 + error-feedback cross-pod sync
+#
+# NOTE: jax is imported lazily by the submodules that need it; the pure
+# Python/NumPy modules (wrht, simulator, ...) stay importable without
+# touching jax device state, so `from repro.core import wrht` is always safe
+# before XLA_FLAGS are pinned.
+from . import step_models, topology, wavelength, wrht, simulator, planner  # noqa: F401

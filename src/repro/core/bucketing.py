@@ -1,0 +1,96 @@
+"""Gradient bucketing: pytree -> size-capped flat buckets -> collective -> pytree.
+
+Why buckets:
+  1. overlap — each bucket's collective is an independent HLO op, so XLA can
+     overlap bucket k's all-reduce with bucket k+1's backprop compute;
+  2. per-size planning — the α–β planner picks a different schedule for a
+     4 KB layernorm bucket (latency-bound -> WRHT tree) than for a 256 MB
+     embedding bucket (bandwidth-bound -> hierarchical scatter);
+  3. padding amortization — scatter-mode collectives need divisibility by the
+     axis-size product; padding one bucket beats padding every leaf.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """Assignment of flat leaf ranges to buckets (static, trace-time)."""
+
+    leaf_shapes: tuple[tuple[int, ...], ...]
+    leaf_buckets: tuple[int, ...]       # bucket id per leaf
+    bucket_sizes: tuple[int, ...]       # elements per bucket (unpadded)
+    treedef: object
+
+
+def plan_buckets(tree, max_bucket_bytes: int = 32 * 2**20) -> BucketSpec:
+    """Greedy sequential packing of leaves into <= max_bucket_bytes buckets.
+
+    Leaves larger than the cap get their own bucket (never split — keeps the
+    unflatten cheap and the collective count bounded).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    sizes = [math.prod(s) for s in shapes]
+    nbytes = [sz * leaves[i].dtype.itemsize for i, sz in enumerate(sizes)]
+
+    leaf_buckets: list[int] = []
+    bucket_sizes: list[int] = []
+    cur_bytes = 0
+    cur_id = -1
+    for i, b in enumerate(nbytes):
+        if cur_id < 0 or cur_bytes + b > max_bucket_bytes:
+            cur_id += 1
+            bucket_sizes.append(0)
+            cur_bytes = 0
+        leaf_buckets.append(cur_id)
+        bucket_sizes[cur_id] += sizes[i]
+        cur_bytes += b
+    return BucketSpec(shapes, tuple(leaf_buckets), tuple(bucket_sizes), treedef)
+
+
+def flatten_to_buckets(tree, spec: BucketSpec, dtype=None) -> list[jax.Array]:
+    leaves = jax.tree.leaves(tree)
+    buckets: list[list[jax.Array]] = [[] for _ in spec.bucket_sizes]
+    for leaf, bid in zip(leaves, spec.leaf_buckets):
+        flat = leaf.reshape(-1)
+        if dtype is not None:
+            flat = flat.astype(dtype)
+        buckets[bid].append(flat)
+    return [jnp.concatenate(b) if len(b) > 1 else b[0] for b in buckets]
+
+
+def unflatten_buckets(buckets: list[jax.Array], spec: BucketSpec, dtypes=None):
+    leaves = []
+    offsets = [0] * len(buckets)
+    for i, (shape, bid) in enumerate(zip(spec.leaf_shapes, spec.leaf_buckets)):
+        n = math.prod(shape)
+        seg = jax.lax.dynamic_slice_in_dim(buckets[bid], offsets[bid], n)
+        if dtypes is not None:
+            seg = seg.astype(dtypes[i])
+        leaves.append(seg.reshape(shape))
+        offsets[bid] += n
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def bucketed_allreduce(
+    tree,
+    apply_fn,
+    max_bucket_bytes: int = 32 * 2**20,
+    sync_dtype=None,
+):
+    """Apply ``apply_fn(flat_bucket, bucket_bytes) -> flat_bucket`` to every
+    bucket of ``tree`` and reassemble.  ``apply_fn`` is where the planner's
+    per-size schedule choice plugs in."""
+    leaves = jax.tree.leaves(tree)
+    dtypes = [l.dtype for l in leaves]
+    spec = plan_buckets(tree, max_bucket_bytes)
+    buckets = flatten_to_buckets(tree, spec, dtype=sync_dtype)
+    out = [apply_fn(b, b.size * b.dtype.itemsize) for b in buckets]
+    return unflatten_buckets(out, spec, dtypes=dtypes)

@@ -1,0 +1,103 @@
+"""Gradient compression for cross-pod sync (distributed-optimization trick).
+
+Cross-pod ICI/DCN links are the scarcest bandwidth at 512+ chips, so the
+trainer can quantize the pod-axis exchange to int8 with per-bucket scales.
+Error feedback (Seide et al. / EF-SGD) keeps SGD unbiased-in-the-limit: the
+residual of each step's quantization is added back before the next step's
+compression.  The EF accumulator lives in the train state (a pytree mirroring
+the gradients).
+
+Exchange pattern: recursive-doubling over the pod axis with quantized
+payloads — log2(P) steps, each moving bytes/4 (fp32→int8) per chip, which the
+planner's α–β model credits as a 4× β-term reduction on that axis.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class QuantChunk(NamedTuple):
+    q: jax.Array       # int8 payload
+    scale: jax.Array   # f32 scalar scale
+
+
+def quantize(x: jax.Array, bits: int = 8) -> QuantChunk:
+    """Symmetric linear quantization with a per-tensor scale."""
+    qmax = float(2 ** (bits - 1) - 1)
+    if x.size == 0:  # zero-size leaves (e.g. depth-0 scan stacks)
+        return QuantChunk(x.astype(jnp.int8), jnp.ones((), jnp.float32))
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return QuantChunk(q, scale.astype(jnp.float32))
+
+
+def dequantize(c: QuantChunk, dtype=jnp.float32) -> jax.Array:
+    return c.q.astype(dtype) * c.scale.astype(dtype)
+
+
+def compressed_allreduce_rd(
+    x: jax.Array, axis_name: str, axis_size: int, bits: int = 8
+) -> jax.Array:
+    """All-reduce with int8-quantized recursive-doubling exchanges.
+
+    Every hop transmits (int8 payload, f32 scale); the local accumulator
+    stays full precision.  Bytes on the wire per chip: log2(S) · n/4 of the
+    fp32 cost (plus one scalar per hop).
+    """
+    s = axis_size
+    if s == 1:
+        return x
+    if s & (s - 1):
+        raise ValueError("compressed RD needs a power-of-two axis")
+    acc = x.astype(jnp.float32)
+    for k in range(int(math.log2(s))):
+        bit = 1 << k
+        perm = [(i, i ^ bit) for i in range(s)]
+        q = quantize(acc, bits)
+        recv_q = lax.ppermute(q.q, axis_name, perm)
+        recv_scale = lax.ppermute(q.scale, axis_name, perm)
+        acc = acc + recv_q.astype(jnp.float32) * recv_scale
+    return acc.astype(x.dtype)
+
+
+def ef_compress(grad: jax.Array, residual: jax.Array, bits: int = 8):
+    """Error-feedback step: compress (grad + residual), return the quantized
+    value to transmit and the new residual."""
+    target = grad + residual
+    c = quantize(target, bits)
+    deq = dequantize(c, target.dtype)
+    return c, target - deq
+
+
+def init_ef_state(grads: jax.Array | dict) -> jax.Array | dict:
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def ef_allreduce_tree(
+    grads,
+    ef_state,
+    axis_name: str,
+    axis_size: int,
+    bits: int = 8,
+):
+    """Pytree-level error-feedback compressed all-reduce over one axis.
+
+    Returns (synced_grads, new_ef_state).  Each leaf is compressed with EF,
+    exchanged via quantized recursive doubling, and averaged.
+    """
+    def leaf(g, e):
+        c, new_e = ef_compress(g, e, bits)
+        deq = dequantize(c, jnp.float32)
+        summed = compressed_allreduce_rd(deq, axis_name, axis_size, bits)
+        return (summed / axis_size).astype(g.dtype), new_e
+
+    pairs = jax.tree.map(leaf, grads, ef_state)
+    synced = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    new_ef = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return synced, new_ef

@@ -1,0 +1,172 @@
+"""α–β planner: choose the all-reduce schedule per bucket (Lemma 1 on TPU).
+
+The paper minimizes communication *steps* because each optical step pays a
+fixed MRR-reconfiguration delay ``a``.  On TPU the same role is played by the
+per-collective launch/hop latency α, against the per-byte term β = 1/BW.
+This module is the TPU restatement of Lemma 1/Theorem 1: enumerate candidate
+schedules, cost them under the α–β model, return the argmin.
+
+    flat ring (psum)      T = 2(S-1)·α + 2·(S-1)/S·bytes·β
+    recursive doubling    T = log2(S)·(α + bytes·β)
+    m-ary WRHT tree       T = Σ_levels (α + ⌈(m-1)/links⌉·bytes·β)   [full-d]
+                          (+ mirrored broadcast levels; optional final
+                           all-to-all replaces the top reduce+broadcast pair)
+    hierarchical scatter  T = Σ_i [2(f_i-1)·α + 2·bytes_i·(f_i-1)/f_i·β],
+                          bytes_i = bytes / Π_{j<i} f_j   (mesh-factorized)
+
+The crossover the paper exploits appears exactly here: small buckets are
+latency-bound (few-step WRHT tree wins), huge buckets are bandwidth-bound
+(flat or hierarchical scatter wins).  ``benchmarks/planner_crossover.py``
+plots it; the trainer uses :func:`plan_bucket` per gradient bucket.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+# TPU v5e-ish defaults (assignment constants; α calibratable, see DESIGN.md)
+DEFAULT_ALPHA_S = 1e-6          # per collective step: launch + hop latency
+DEFAULT_LINK_GBPS = 50.0        # ICI per link
+DEFAULT_LINKS = 4               # links per chip usable concurrently (ring: 2x2 dirs)
+
+
+@dataclass(frozen=True)
+class CostParams:
+    alpha_s: float = DEFAULT_ALPHA_S
+    link_bw_Bps: float = DEFAULT_LINK_GBPS * 1e9 / 8 * 8  # bytes/s (GB/s * 1e9)
+    links: int = DEFAULT_LINKS
+
+    @staticmethod
+    def tpu_v5e() -> "CostParams":
+        return CostParams(alpha_s=DEFAULT_ALPHA_S, link_bw_Bps=50e9, links=DEFAULT_LINKS)
+
+    @staticmethod
+    def optical(w: int = 64) -> "CostParams":
+        """The paper's regime: huge per-step cost, w parallel channels."""
+        return CostParams(alpha_s=25e-6, link_bw_Bps=40e9 / 8, links=2 * w)
+
+
+@dataclass(frozen=True)
+class Plan:
+    """A chosen schedule for one bucket."""
+
+    strategy: str                     # "flat" | "rd" | "wrht_tree" | "hier_scatter"
+    cost_s: float
+    m: int = 2                       # branching for wrht_tree
+    alltoall: bool = False           # finish tree with all-to-all
+    factors: tuple[int, ...] = ()    # per-level sizes for hier_scatter
+    detail: dict = field(default_factory=dict, compare=False, hash=False)
+
+
+def t_flat_ring(s: int, bytes_: float, p: CostParams) -> float:
+    if s == 1:
+        return 0.0
+    return 2 * (s - 1) * p.alpha_s + 2 * bytes_ * (s - 1) / s / p.link_bw_Bps
+
+
+def t_rd(s: int, bytes_: float, p: CostParams) -> float:
+    if s == 1:
+        return 0.0
+    return math.ceil(math.log2(s)) * (p.alpha_s + bytes_ / p.link_bw_Bps)
+
+
+def t_wrht_tree(s: int, bytes_: float, p: CostParams, m: int,
+                alltoall: bool = True) -> float:
+    """Full-vector m-ary tree, per the paper's Eq. (1) with the TPU twist
+    that a head drains its m-1 members over ``links`` parallel channels."""
+    if s == 1:
+        return 0.0
+    serial = math.ceil((m - 1) / p.links)  # sequential link occupations/level
+    levels = max(1, math.ceil(math.log(s, m)))
+    steps = 2 * levels - (1 if alltoall else 0)
+    return steps * (p.alpha_s + serial * bytes_ / p.link_bw_Bps)
+
+
+def t_hier_scatter(factors: tuple[int, ...], bytes_: float, p: CostParams) -> float:
+    total = 0.0
+    b = bytes_
+    for f in factors:
+        if f == 1:
+            continue
+        total += 2 * (f - 1) * p.alpha_s + 2 * b * (f - 1) / f / p.link_bw_Bps
+        b /= f
+    return total
+
+
+def _factorizations(n: int, max_levels: int = 3) -> list[tuple[int, ...]]:
+    """All ordered factorizations of n into 1..max_levels factors >= 2."""
+    out = [(n,)]
+    if max_levels == 1:
+        return out
+    f = 2
+    while f * f <= n:
+        if n % f == 0:
+            for rest in _factorizations(n // f, max_levels - 1):
+                out.append((f,) + rest)
+                if n // f != f:
+                    out.append(rest + (f,))
+        f += 1
+    # dedupe preserving order
+    seen, uniq = set(), []
+    for t in out:
+        if t not in seen:
+            seen.add(t)
+            uniq.append(t)
+    return uniq
+
+
+def plan_bucket(
+    axis_size: int,
+    bytes_: float,
+    params: CostParams | None = None,
+    m_candidates: tuple[int, ...] = (2, 3, 4, 8, 16),
+    allow: tuple[str, ...] = ("flat", "rd", "wrht_tree", "hier_scatter"),
+) -> Plan:
+    """Return the minimum-cost schedule for one bucket on one device axis."""
+    p = params or CostParams.tpu_v5e()
+    best: Plan | None = None
+
+    def consider(plan: Plan):
+        nonlocal best
+        if best is None or plan.cost_s < best.cost_s:
+            best = plan
+
+    if "flat" in allow:
+        consider(Plan("flat", t_flat_ring(axis_size, bytes_, p)))
+    if "rd" in allow and axis_size & (axis_size - 1) == 0:
+        consider(Plan("rd", t_rd(axis_size, bytes_, p)))
+    if "wrht_tree" in allow:
+        for m in m_candidates:
+            if m < 2 or m > axis_size:
+                continue
+            for a2a in (True, False):
+                consider(
+                    Plan("wrht_tree", t_wrht_tree(axis_size, bytes_, p, m, a2a),
+                         m=m, alltoall=a2a)
+                )
+    if "hier_scatter" in allow:
+        for factors in _factorizations(axis_size):
+            consider(Plan("hier_scatter", t_hier_scatter(factors, bytes_, p),
+                          factors=factors))
+    assert best is not None
+    return best
+
+
+def crossover_table(
+    axis_size: int,
+    byte_sizes: tuple[float, ...] = tuple(2.0 ** e for e in range(10, 31, 2)),
+    params: CostParams | None = None,
+) -> list[dict]:
+    """Bucket-size sweep: which schedule wins where (benchmark + tests)."""
+    rows = []
+    for b in byte_sizes:
+        plan = plan_bucket(axis_size, b, params)
+        rows.append({
+            "bytes": int(b),
+            "strategy": plan.strategy,
+            "m": plan.m,
+            "factors": plan.factors,
+            "cost_us": plan.cost_s * 1e6,
+        })
+    return rows

@@ -1,0 +1,209 @@
+"""Optical ring interconnect simulator (the paper's in-house simulator, re-built).
+
+Executes explicit per-step transfer schedules on the TeraRack-style ring of
+``topology.Ring``: each step pays the MRR reconfiguration delay ``a`` plus the
+serialization time of its *slowest* concurrent transfer (transfers inside one
+step are wavelength-parallel by construction; the RWA validator guarantees
+conflict-freedom).  Flit alignment and O/E/O conversion follow Table II.
+
+Besides WRHT (schedule from ``wrht.build_schedule``) this module builds the
+explicit optical schedules of the three baselines the paper compares against
+(Sec. IV-B): Ring, Binary-Tree and H-Ring — all validated for wavelength
+conflicts before timing.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from . import step_models, wrht
+from .topology import CCW, CW, Ring, Transfer
+from .wavelength import validate_no_conflicts
+
+
+@dataclass
+class SimResult:
+    algorithm: str
+    n: int
+    d_bits: float
+    steps: int
+    serialization_s: float
+    reconfig_s: float
+    max_wavelengths: int = 0
+    per_step_s: list[float] = field(default_factory=list)
+
+    @property
+    def total_s(self) -> float:
+        return self.serialization_s + self.reconfig_s
+
+
+def simulate_steps(
+    name: str, steps: list[wrht.Step], ring: Ring, d_bits: float,
+    validate: bool = True, bits_override: float | None = None,
+) -> SimResult:
+    ser = 0.0
+    per_step = []
+    maxw = 0
+    for step in steps:
+        if validate:
+            validate_no_conflicts(step.transfers, ring.n, ring.w)
+        if bits_override is not None:
+            s = ring.serialization_time(bits_override) if step.transfers else 0.0
+        else:
+            s = max((ring.serialization_time(t.bits) for t in step.transfers), default=0.0)
+        ser += s
+        per_step.append(s + ring.reconfig_delay_s)
+        maxw = max(maxw, step.wavelengths)
+    return SimResult(
+        algorithm=name,
+        n=ring.n,
+        d_bits=d_bits,
+        steps=len(steps),
+        serialization_s=ser,
+        reconfig_s=len(steps) * ring.reconfig_delay_s,
+        max_wavelengths=maxw,
+        per_step_s=per_step,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Baseline schedules on the optical ring.
+# ---------------------------------------------------------------------------
+
+def ring_allreduce_schedule(n: int, d_bits: float) -> list[wrht.Step]:
+    """Bandwidth-optimal ring all-reduce: reduce-scatter + all-gather,
+    2(N-1) steps, every node forwards a d/N chunk to its CW neighbour.
+    Neighbour hops occupy disjoint segments -> wavelength 0 everywhere
+    (the paper's point: only ONE of w wavelengths is ever used)."""
+    chunk = d_bits / n
+    steps = []
+    for _ in range(2 * (n - 1)):
+        transfers = [
+            Transfer(i, (i + 1) % n, CW, chunk, wavelength=0) for i in range(n)
+        ]
+        steps.append(wrht.Step("ring", 0, transfers))
+    return steps
+
+
+def bt_allreduce_schedule(n: int, d_bits: float) -> list[wrht.Step]:
+    """Binary-tree all-reduce (Sec. III-B, Fig. 2a): ⌈log₂N⌉ reduce steps
+    (sender at offset 2^{i-1} inside each 2^i-group sends the FULL vector to
+    the group head) + the mirrored broadcast."""
+    levels = max(1, math.ceil(math.log2(n)))
+    reduce_steps = []
+    for i in range(1, levels + 1):
+        span, half = 2**i, 2 ** (i - 1)
+        transfers = []
+        for head in range(0, n, span):
+            sender = head + half
+            if sender < n:
+                transfers.append(Transfer(sender, head, CCW, d_bits, wavelength=0))
+        reduce_steps.append(wrht.Step("reduce", i - 1, transfers))
+    bcast_steps = [
+        wrht.Step("broadcast", s.level, [
+            Transfer(t.dst, t.src, CW, d_bits, wavelength=0) for t in s.transfers
+        ])
+        for s in reversed(reduce_steps)
+    ]
+    return reduce_steps + bcast_steps
+
+
+def hring_allreduce_schedule(n: int, g: int, d_bits: float) -> list[wrht.Step]:
+    """Hierarchical ring [13]: intra-group ring reduce-scatter (chunks d/g),
+    inter-group ring all-reduce among the g-group heads on each d/g shard,
+    intra-group all-gather.  Intra wrap-links ride the CCW fiber; all other
+    hops ride CW, so one wavelength per fiber suffices."""
+    if n % g:
+        raise ValueError("H-Ring needs g | N")
+    n_groups = n // g
+    steps: list[wrht.Step] = []
+
+    def intra_step(chunk_bits: float) -> wrht.Step:
+        transfers = []
+        for head in range(0, n, g):
+            for j in range(g - 1):
+                transfers.append(
+                    Transfer(head + j, head + j + 1, CW, chunk_bits, wavelength=0)
+                )
+            transfers.append(  # wrap link of the logical intra ring
+                Transfer(head + g - 1, head, CCW, chunk_bits, wavelength=0)
+            )
+        return wrht.Step("intra", 0, transfers)
+
+    def inter_step(chunk_bits: float) -> wrht.Step:
+        transfers = []
+        for k in range(n_groups - 1):
+            transfers.append(Transfer(k * g, (k + 1) * g, CW, chunk_bits, wavelength=0))
+        # wrap link closes the logical ring CW through the last group's span
+        transfers.append(Transfer((n_groups - 1) * g, 0, CW, chunk_bits, wavelength=0))
+        return wrht.Step("inter", 1, transfers)
+
+    for _ in range(g - 1):                      # intra reduce-scatter
+        steps.append(intra_step(d_bits / g))
+    for _ in range(2 * (n_groups - 1)):          # inter ring all-reduce
+        steps.append(inter_step((d_bits / g) / n_groups))
+    for _ in range(g - 1):                      # intra all-gather
+        steps.append(intra_step(d_bits / g))
+    return steps
+
+
+# ---------------------------------------------------------------------------
+# Front-ends used by the benchmarks.
+# ---------------------------------------------------------------------------
+
+import functools
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_wrht_schedule(n: int, w: int, m: int | None) -> wrht.WRHTSchedule:
+    """WRHT schedule structure is independent of the payload size — build
+    (and validate, for n small enough that it is cheap) once per (n, w, m)."""
+    return wrht.build_schedule(n, w, 1.0, m=m, validate=n <= 1024)
+
+
+def run_optical(
+    algorithm: str,
+    n: int,
+    d_bits: float,
+    p: step_models.OpticalParams | None = None,
+    g: int = 8,
+    m: int | None = None,
+) -> SimResult:
+    p = p or step_models.OpticalParams()
+    ring = Ring(n, p.wavelengths, bandwidth_bps=p.bandwidth_bps,
+                reconfig_delay_s=p.reconfig_delay_s)
+    if algorithm == "wrht":
+        sched = _cached_wrht_schedule(n, p.wavelengths, m)
+        # every WRHT transfer carries the constant full vector d
+        return simulate_steps("wrht", sched.steps, ring, d_bits,
+                              validate=False, bits_override=d_bits)
+    if algorithm == "ring":
+        # every one of the 2(N-1) steps is the identical neighbour pattern:
+        # validate/time one representative step and scale (exact, since the
+        # per-step payload d/N is constant).
+        one = [wrht.Step("ring", 0, [
+            Transfer(i, (i + 1) % n, CW, d_bits / n, wavelength=0) for i in range(n)
+        ])]
+        r = simulate_steps("ring", one, ring, d_bits)
+        k = 2 * (n - 1)
+        return SimResult("ring", n, d_bits, k, r.serialization_s * k,
+                         k * ring.reconfig_delay_s, r.max_wavelengths)
+    if algorithm == "bt":
+        return simulate_steps("bt", bt_allreduce_schedule(n, d_bits), ring, d_bits)
+    if algorithm == "hring":
+        while n % g:
+            g -= 1
+        sched = hring_allreduce_schedule(2 * g, g, d_bits)  # one intra + inter template
+        intra = simulate_steps("hring-intra", [sched[0]], Ring(2 * g, ring.w,
+                               bandwidth_bps=ring.bandwidth_bps,
+                               reconfig_delay_s=ring.reconfig_delay_s), d_bits)
+        n_groups = n // g
+        intra_steps = 2 * (g - 1)
+        inter_steps = 2 * (n_groups - 1)
+        inter_ser = ring.serialization_time((d_bits / g) / n_groups)
+        total_steps = intra_steps + inter_steps
+        ser = intra_steps * intra.serialization_s + inter_steps * inter_ser
+        return SimResult("hring", n, d_bits, total_steps, ser,
+                         total_steps * ring.reconfig_delay_s, 1)
+    raise ValueError(f"unknown optical algorithm {algorithm!r}")

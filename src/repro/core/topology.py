@@ -1,0 +1,98 @@
+"""Optical ring topology model (TeraRack-style).
+
+The physical substrate of the paper: ``N`` nodes on a bidirectional WDM ring.
+Each direction is an independent fiber ring carrying ``w`` wavelengths; a
+directed transfer from ``src`` to ``dst`` occupies every unit *segment*
+(i, i+1 mod N) (clockwise) or (i, i-1 mod N) (counter-clockwise) along its
+path, on one wavelength.  Two transfers conflict iff they share a directed
+segment *and* a wavelength.
+
+This module is pure Python/NumPy — it backs the schedule builder, the RWA
+(routing and wavelength assignment) pass and the optical simulator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator
+
+CW = +1   # clockwise
+CCW = -1  # counter-clockwise
+
+
+@dataclass(frozen=True)
+class Transfer:
+    """One directed optical transmission within a communication step."""
+
+    src: int
+    dst: int
+    direction: int          # CW or CCW
+    bits: float             # payload size in bits
+    wavelength: int = -1    # assigned by RWA; -1 = unassigned
+
+    def __post_init__(self) -> None:
+        if self.direction not in (CW, CCW):
+            raise ValueError(f"direction must be +1/-1, got {self.direction}")
+        if self.src == self.dst:
+            raise ValueError("transfer src == dst")
+
+
+def ring_distance(src: int, dst: int, n: int, direction: int) -> int:
+    """Number of unit segments traversed from src to dst going `direction`."""
+    if direction == CW:
+        return (dst - src) % n
+    return (src - dst) % n
+
+
+def shortest_direction(src: int, dst: int, n: int) -> int:
+    """Direction with the fewest hops (ties broken clockwise)."""
+    return CW if (dst - src) % n <= (src - dst) % n else CCW
+
+
+def path_segments(src: int, dst: int, n: int, direction: int) -> Iterator[int]:
+    """Yield directed segment ids along the path.
+
+    Segment ``i`` on the CW ring is the fiber from node ``i`` to ``i+1``;
+    on the CCW ring it is the fiber from node ``i+1`` to ``i``.  The two
+    rings are physically distinct so segment ids never collide across
+    directions (callers key conflicts on (direction, segment)).
+    """
+    hops = ring_distance(src, dst, n, direction)
+    node = src
+    for _ in range(hops):
+        if direction == CW:
+            yield node
+            node = (node + 1) % n
+        else:
+            node = (node - 1) % n
+            yield node
+
+
+@dataclass
+class Ring:
+    """A bidirectional WDM ring with ``n`` nodes and ``w`` wavelengths/fiber."""
+
+    n: int
+    w: int
+    bandwidth_bps: float = 40e9        # per wavelength (Table II)
+    reconfig_delay_s: float = 25e-6    # MRR reconfiguration delay (Table II)
+    flit_bits: int = 32 * 8            # flit size (Table II)
+    oeo_cycle_s: float = field(default=0.0)  # O/E/O conversion, per flit
+
+    def __post_init__(self) -> None:
+        if self.n < 2:
+            raise ValueError("ring needs >= 2 nodes")
+        if self.w < 1:
+            raise ValueError("need >= 1 wavelength")
+        if self.oeo_cycle_s == 0.0:
+            # Table II: O/E/O delay is 1 cycle/flit.  At 40 Gb/s a 32 B flit
+            # serializes in 256/40e9 s; one extra cycle per flit models the
+            # conversion pipeline.
+            self.oeo_cycle_s = self.flit_bits / self.bandwidth_bps
+
+    def serialization_time(self, bits: float) -> float:
+        """Wire time for one transfer: flit-aligned serialization + O/E/O."""
+        if bits <= 0:
+            return 0.0
+        flits = -(-int(bits) // self.flit_bits)  # ceil
+        return flits * self.flit_bits / self.bandwidth_bps + self.oeo_cycle_s

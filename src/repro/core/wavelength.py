@@ -1,0 +1,79 @@
+"""Routing and Wavelength Assignment (RWA) for one communication step.
+
+The paper (Sec. III-C-2) notes that within each WRHT subgroup the
+communications must be wavelength-conflict-free, and that classic greedy
+assignment (First Fit / Best Fit) suffices because different subgroups never
+share ring segments.  We implement First Fit over the directed-segment
+occupancy map, plus a validator used by both the simulator and the property
+tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Sequence
+
+from .topology import Transfer, path_segments
+
+
+class WavelengthConflictError(ValueError):
+    pass
+
+
+def first_fit_assign(
+    transfers: Sequence[Transfer], n: int, w: int
+) -> list[Transfer]:
+    """Assign wavelengths greedily (First Fit, [18] in the paper).
+
+    Transfers are processed longest-path-first (a standard RWA heuristic:
+    long lightpaths are the hardest to place).  Raises if more than ``w``
+    wavelengths would be needed.
+    """
+    # (direction, segment) -> set of wavelengths in use
+    occupancy: dict[tuple[int, int], set[int]] = {}
+
+    def segs(t: Transfer) -> list[tuple[int, int]]:
+        return [(t.direction, s) for s in path_segments(t.src, t.dst, n, t.direction)]
+
+    order = sorted(range(len(transfers)), key=lambda i: -len(segs(transfers[i])))
+    assigned: list[Transfer | None] = [None] * len(transfers)
+    for i in order:
+        t = transfers[i]
+        used = set()
+        for key in segs(t):
+            used |= occupancy.get(key, set())
+        lam = next(l for l in range(w + len(transfers) + 1) if l not in used)
+        if lam >= w:
+            raise WavelengthConflictError(
+                f"step needs wavelength {lam} but only {w} available "
+                f"(transfer {t.src}->{t.dst})"
+            )
+        for key in segs(t):
+            occupancy.setdefault(key, set()).add(lam)
+        assigned[i] = replace(t, wavelength=lam)
+    return [t for t in assigned if t is not None]
+
+
+def validate_no_conflicts(transfers: Sequence[Transfer], n: int, w: int) -> None:
+    """Check wavelength-conflict-freedom of an already-assigned step."""
+    occupancy: dict[tuple[int, int, int], Transfer] = {}
+    for t in transfers:
+        if t.wavelength < 0:
+            raise WavelengthConflictError(f"unassigned wavelength on {t}")
+        if t.wavelength >= w:
+            raise WavelengthConflictError(
+                f"wavelength {t.wavelength} out of range (w={w})"
+            )
+        for seg in path_segments(t.src, t.dst, n, t.direction):
+            key = (t.direction, seg, t.wavelength)
+            if key in occupancy:
+                o = occupancy[key]
+                raise WavelengthConflictError(
+                    f"conflict on dir={t.direction} segment={seg} "
+                    f"lambda={t.wavelength}: {o.src}->{o.dst} vs {t.src}->{t.dst}"
+                )
+            occupancy[key] = t
+
+
+def wavelengths_used(transfers: Sequence[Transfer]) -> int:
+    return 0 if not transfers else 1 + max(t.wavelength for t in transfers)

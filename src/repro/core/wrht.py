@@ -1,0 +1,233 @@
+"""WRHT — Wavelength-Reused Hierarchical Tree all-reduce schedule builder.
+
+This is the paper's primary contribution (Sec. III-C).  Given ``N`` nodes on a
+bidirectional WDM ring with ``w`` wavelengths per fiber, build the explicit
+per-step transfer schedule:
+
+Reduce stage
+    Level 0 partitions the ring into contiguous groups of ``m`` nodes; the
+    *middle* node of each group is the representative and receives every
+    member's (partially reduced) vector in ONE step — members to its left
+    transmit clockwise, members to its right counter-clockwise, so the two
+    fibers are loaded symmetrically and ``⌈m/2⌉`` wavelengths suffice.
+    Representatives of level ``ℓ`` are regrouped at level ``ℓ+1``.  Recursion
+    stops when the surviving representatives can finish with a single
+    all-to-all exchange within the wavelength budget (paper Sec. III-C-2:
+    ``⌈m*²/8⌉`` wavelengths, citation [16]), or when one root remains.
+
+Broadcast stage
+    Exact reverse of the reduce stage (paths reversed, same wavelength
+    budget).  Because a reduction is applied at every reduce step, every
+    transfer in BOTH stages carries the constant full vector of ``d`` bits.
+
+Total steps: ``2⌈log_m N⌉`` (single root) or ``2⌈log_m N⌉ − 1`` (final
+all-to-all) — asserted against the closed forms in ``step_models`` by the
+test-suite.  ``m = 2w + 1`` is the Lemma-1 optimum: each fiber then carries
+exactly ``w`` concurrent intra-group lightpaths.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from .topology import CCW, CW, Ring, Transfer, shortest_direction
+from .wavelength import WavelengthConflictError, first_fit_assign, validate_no_conflicts
+
+
+@dataclass
+class Step:
+    kind: str                      # "reduce" | "alltoall" | "broadcast"
+    level: int                     # tree level (alltoall: top level)
+    transfers: list[Transfer]
+
+    @property
+    def wavelengths(self) -> int:
+        return 0 if not self.transfers else 1 + max(t.wavelength for t in self.transfers)
+
+
+@dataclass
+class WRHTSchedule:
+    n: int
+    w: int
+    m: int
+    steps: list[Step] = field(default_factory=list)
+    levels: list[list[int]] = field(default_factory=list)  # active nodes per level
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    @property
+    def reduce_steps(self) -> int:
+        return sum(1 for s in self.steps if s.kind in ("reduce", "alltoall"))
+
+    @property
+    def broadcast_steps(self) -> int:
+        return sum(1 for s in self.steps if s.kind == "broadcast")
+
+
+def optimal_group_size(w: int) -> int:
+    """Lemma 1: with two fibers and two Tx/Rx sets per node, the largest
+    group a representative can drain in one step is ``m = 2w + 1``."""
+    return 2 * w + 1
+
+
+def _chunks(seq: list[int], m: int) -> list[list[int]]:
+    return [seq[i : i + m] for i in range(0, len(seq), m)]
+
+
+def _alltoall_fits(reps: list[int], ring: Ring, d_bits: float) -> list[Transfer] | None:
+    """Try to schedule a one-step all-to-all among ``reps``; None if > w."""
+    if len(reps) < 2:
+        return None
+    # Paper Sec. III-C-2 / [16]: all-to-all among m* ring nodes needs
+    # ⌈m*²/8⌉ wavelengths.  Cheap necessary condition before running RWA —
+    # also keeps the O(r²) enumeration off the N=4096 level-0 case.
+    if math.ceil(len(reps) ** 2 / 8) > ring.w:
+        return None
+    transfers = []
+    for src in reps:
+        for dst in reps:
+            if src == dst:
+                continue
+            direction = shortest_direction(src, dst, ring.n)
+            transfers.append(Transfer(src, dst, direction, d_bits))
+    try:
+        return first_fit_assign(transfers, ring.n, ring.w)
+    except WavelengthConflictError:
+        return None
+
+
+def build_schedule(
+    n: int,
+    w: int,
+    d_bits: float,
+    m: int | None = None,
+    allow_alltoall: bool = True,
+    bandwidth_bps: float = 40e9,
+    reconfig_delay_s: float = 25e-6,
+    validate: bool = True,
+) -> WRHTSchedule:
+    """Construct and validate the full WRHT schedule for an N-node ring."""
+    if n < 1:
+        raise ValueError("need >= 1 node")
+    ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps, reconfig_delay_s=reconfig_delay_s)
+    if m is None:
+        m = optimal_group_size(w)
+    if m < 2:
+        raise ValueError("group size m must be >= 2")
+    # Lemma 1 feasibility: a group of m nodes drains over two fibers with
+    # ⌈(m-1)/2⌉ wavelengths per side; beyond m = 2w+1 the step cannot be
+    # conflict-free, so clamp (callers probing larger m get the feasible max).
+    m = min(m, optimal_group_size(w))
+
+    sched = WRHTSchedule(n=n, w=w, m=m)
+    sched.levels.append(list(range(n)))
+    if n == 1:
+        return sched
+
+    # ---------------- reduce stage ----------------
+    reduce_groups: list[list[list[int]]] = []  # per level: list of groups
+    level = 0
+    while len(sched.levels[-1]) > 1:
+        active = sched.levels[-1]
+        if allow_alltoall:
+            a2a = _alltoall_fits(active, ring, d_bits)
+            if a2a is not None:
+                sched.steps.append(Step("alltoall", level, a2a))
+                break
+        groups = _chunks(active, m)
+        transfers: list[Transfer] = []
+        reps: list[int] = []
+        for g in groups:
+            mid = len(g) // 2
+            rep = g[mid]
+            reps.append(rep)
+            for i, node in enumerate(g):
+                if node == rep:
+                    continue
+                # left-of-rep members transmit clockwise, right-of-rep
+                # counter-clockwise (two Rx sets per node, Sec. III-B).
+                direction = CW if i < mid else CCW
+                transfers.append(Transfer(node, rep, direction, d_bits))
+        assigned = first_fit_assign(transfers, ring.n, ring.w)
+        sched.steps.append(Step("reduce", level, assigned))
+        reduce_groups.append(groups)
+        sched.levels.append(reps)
+        level += 1
+
+    # ---------------- broadcast stage ----------------
+    # Reverse of the reduce tree (the all-to-all step, if any, already left
+    # every surviving representative with the full reduction).
+    for level in range(len(reduce_groups) - 1, -1, -1):
+        transfers = []
+        for g in reduce_groups[level]:
+            mid = len(g) // 2
+            rep = g[mid]
+            for i, node in enumerate(g):
+                if node == rep:
+                    continue
+                direction = CCW if i < mid else CW  # reversed paths
+                transfers.append(Transfer(rep, node, direction, d_bits))
+        assigned = first_fit_assign(transfers, ring.n, ring.w)
+        sched.steps.append(Step("broadcast", level, assigned))
+
+    if validate:
+        validate_schedule(sched, ring)
+    return sched
+
+
+# ------------------------------------------------------------------
+# Validation: structural (wavelengths) and semantic (all-reduce).
+# ------------------------------------------------------------------
+
+def validate_schedule(sched: WRHTSchedule, ring: Ring | None = None) -> None:
+    ring = ring or Ring(max(sched.n, 2), sched.w)
+    for step in sched.steps:
+        validate_no_conflicts(step.transfers, ring.n, ring.w)
+    masks = simulate_contribution_masks(sched)
+    full = (1 << sched.n) - 1
+    bad = [i for i, s in enumerate(masks) if s != full]
+    if bad:
+        raise AssertionError(
+            f"all-reduce semantics violated: nodes {bad[:8]} missing contributions"
+        )
+
+
+def simulate_contribution_masks(sched: WRHTSchedule) -> list[int]:
+    """Data-flow simulation: node i starts with bit i; transfers OR bitmasks.
+
+    A correct all-reduce leaves every node with all n bits set (summation is
+    a commutative-associative reduction, so bit-union tracks it faithfully).
+    Bitmask ints keep this O(n·steps) with tiny constants even at n=4096.
+    """
+    state: list[int] = [1 << i for i in range(sched.n)]
+    for step in sched.steps:
+        snapshot = list(state)  # ints are immutable: O(n) snapshot
+        incoming: dict[int, int] = {}
+        for t in step.transfers:
+            incoming[t.dst] = incoming.get(t.dst, 0) | snapshot[t.src]
+        for dst, data in incoming.items():
+            if step.kind == "broadcast":
+                # broadcast overwrites with the rep's full value
+                state[dst] = data
+            else:
+                state[dst] |= data
+    return state
+
+
+def simulate_contributions(sched: WRHTSchedule) -> list[frozenset[int]]:
+    """Set view of :func:`simulate_contribution_masks` (test convenience)."""
+    return [
+        frozenset(i for i in range(sched.n) if mask >> i & 1)
+        for mask in simulate_contribution_masks(sched)
+    ]
+
+
+def theoretical_steps(n: int, m: int) -> tuple[int, int]:
+    """Closed form of Sec. III-D: (with all-to-all, without) step counts."""
+    if n <= 1:
+        return (0, 0)
+    l = max(1, math.ceil(math.log(n, m)))
+    return (2 * l - 1, 2 * l)

@@ -1,0 +1,1 @@
+from .pipeline import CorpusLM, SyntheticLM, make_batch_iter, shard_batch  # noqa: F401

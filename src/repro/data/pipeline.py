@@ -1,0 +1,110 @@
+"""Host-side data pipeline: deterministic sources, sharded placement, prefetch.
+
+Two sources:
+  * ``SyntheticLM`` — deterministic per-step random tokens (throughput /
+    dry-run / fault-tolerance tests: batch at step k is a pure function of
+    (seed, k), so a restarted run sees identical data).
+  * ``CorpusLM`` — a small byte-level corpus with real next-byte structure so
+    example training runs show a *decreasing* loss.
+
+``shard_batch`` places host numpy onto the mesh with batch over
+('pod','data'); ``make_batch_iter`` adds background-thread prefetch.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_DEFAULT_CORPUS = (
+    b"the quick brown fox jumps over the lazy dog. "
+    b"all-reduce in optical interconnects reuses wavelengths hierarchically. "
+    b"communication time is dominated by the number of steps when the "
+    b"reconfiguration delay is large. "
+) * 64
+
+
+@dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        toks = rng.integers(0, self.vocab_size,
+                            (self.global_batch, self.seq_len + 1), dtype=np.int64)
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+
+@dataclass
+class CorpusLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    corpus: bytes = _DEFAULT_CORPUS
+
+    def __post_init__(self):
+        data = np.frombuffer(self.corpus, np.uint8).astype(np.int32)
+        self._data = data % self.vocab_size
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, step]))
+        starts = rng.integers(0, len(self._data) - self.seq_len - 1,
+                              self.global_batch)
+        rows = np.stack([self._data[s : s + self.seq_len + 1] for s in starts])
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+def shard_batch(batch: dict, mesh=None, extra_specs: dict | None = None) -> dict:
+    """Place a host batch on devices, batch-dim over ('pod','data')."""
+    if mesh is None:
+        return {k: jax.numpy.asarray(v) for k, v in batch.items()}
+    names = [a for a in ("pod", "data") if a in mesh.axis_names]
+    out = {}
+    for k, v in batch.items():
+        spec = P(tuple(names), *([None] * (v.ndim - 1)))
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out
+
+
+def make_batch_iter(source, mesh=None, start_step: int = 0, prefetch: int = 2):
+    """Background-prefetching iterator over (step, device_batch)."""
+    q: queue.Queue = queue.Queue(maxsize=prefetch)
+    stop = threading.Event()
+
+    def producer():
+        step = start_step
+        while not stop.is_set():
+            try:
+                q.put((step, shard_batch(source.batch(step), mesh)), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+
+    class _Iter:
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            return q.get()
+
+        def close(self):
+            stop.set()
+
+    return _Iter()

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the framework's compute hot spots, each with a
+# jit'd wrapper (ops.py) and a pure-jnp oracle (ref.py):
+#   flash_attention   online-softmax attention (q/kv block grid, VMEM scratch)
+#   rmsnorm           fused row-blocked RMSNorm
+#   mamba_scan        Mamba2 SSD intra-chunk compute + carried state
+#   quant             int8 block quantize / fused dequant-add (compressed sync)
+# Kernels are TPU targets; on CPU (this container) ops.py runs interpret=True
+# and tests/test_kernels.py sweeps shapes/dtypes against the oracles.

@@ -1,0 +1,111 @@
+"""Pallas TPU flash attention (forward).
+
+Grid = (batch*heads, q_blocks, kv_blocks); the kv axis is the innermost
+(sequential on TPU), so the online-softmax running state (m, l, acc) lives in
+VMEM scratch and persists across kv steps.  Block shapes are MXU-aligned
+(q_block × head_dim and kv_block × head_dim tiles, multiples of 128 on the
+matmul dims).  The output tile is written once, on the last kv step.
+
+HBM -> VMEM traffic per q block: Q·D + S·D·2 (streamed kv) — the flash
+pattern; nothing S×S ever exists.  The pure-jnp oracle is
+``kernels/ref.py::flash_attention_ref`` (also the model-layer implementation
+``models.layers.blocked_attention`` modulo layout).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, sm_scale: float, q_block: int, kv_block: int,
+                  kv_seq: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # [qb, d]
+    k = k_ref[0].astype(jnp.float32)          # [kvb, d]
+    v = v_ref[0].astype(jnp.float32)          # [kvb, dv]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale  # [qb, kvb]
+    kv_ids = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kv_ids < kv_seq
+    if causal:
+        q_ids = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = jnp.logical_and(mask, q_ids >= kv_ids)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    q_block: int = 256, kv_block: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """q [BH, Sq, D]; k/v [BH, Skv, D(v)] (kv already expanded across GQA
+    groups by ops.py).  Returns [BH, Sq, Dv]."""
+    bh, sq, d = q.shape
+    skv, dv = k.shape[1], v.shape[2]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+
+    qb = min(q_block, sq)
+    kvb = min(kv_block, skv)
+    pad_q = (-sq) % qb
+    pad_kv = (-skv) % kvb
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0)))
+    nq, nk = q.shape[1] // qb, k.shape[1] // kvb
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sm_scale=sm_scale,
+        q_block=qb, kv_block=kvb, kv_seq=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qb, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kvb, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kvb, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq * qb, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :sq]
+    return out

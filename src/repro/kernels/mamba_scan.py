@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk compute.
+
+Grid = (batch*heads, n_chunks); the chunk axis is sequential, so the carried
+SSM state h [N, P] lives in VMEM scratch and flows across chunks — the
+inter-chunk recurrence costs nothing extra.  Per chunk the kernel does the
+three MXU matmuls of the SSD dual form:
+
+    G   = (C · Bᵀ) ∘ L          [Q, Q]   decay-masked attention-like weights
+    Y   = G · X̄  +  (exp(cum)·C) · h     intra + carried contribution
+    h'  = exp(seg) · h + Bᵀ · (X̄ ∘ exp(seg - cum))
+
+Block shapes: Q×N and Q×P tiles, Q=chunk (128), N=state (64..128), P=head_dim
+— all MXU-friendly.  Oracle: ``kernels/ref.py::ssd_ref`` (=
+models.ssm.ssd_chunked modulo layout).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)      # [Q, 1]
+    a = a_ref[0].astype(jnp.float32)        # [1, 1] (negative decay rate)
+    bm = b_ref[0].astype(jnp.float32)       # [Q, N]
+    cm = c_ref[0].astype(jnp.float32)       # [Q, N]
+
+    adt = dt * a                            # [Q, 1]
+    cum = jnp.cumsum(adt, axis=0)           # [Q, 1]
+    seg = cum[q - 1]                        # [1]
+
+    # decay-masked intra weights
+    li = cum - cum.T                        # [Q, Q]  cum_i - cum_j
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(row >= col, jnp.exp(li), 0.0)
+    g = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ()))) * lmat  # [Q, Q]
+    xbar = x * dt                           # [Q, P]
+    y = jax.lax.dot(g, xbar)                # [Q, P]
+
+    # carried-state contribution
+    y = y + jax.lax.dot(cm * jnp.exp(cum), h_scr[...])
+
+    # state update (xbar already carries dt_j)
+    w = jnp.exp(seg - cum)                  # [Q, 1]
+    h_scr[...] = jnp.exp(seg) * h_scr[...] + jax.lax.dot_general(
+        bm, xbar * w, (((0,), (0,)), ((), ())))   # [N, P]
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+             cm: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """x [BH, S, P]; dt [BH, S]; a [BH]; bm/cm [BH, S, N] -> y [BH, S, P].
+
+    (batch and heads pre-folded by ops.py; B/C shared across heads are
+    broadcast there.)
+    """
+    bh, s, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+    dt2 = dt[..., None]
+    a2 = a[:, None, None]
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, q, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nc * q, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt2, a2, bm, cm)
+    if pad:
+        out = out[:, :s]
+    return out

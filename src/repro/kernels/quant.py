@@ -1,0 +1,73 @@
+"""Pallas TPU int8 symmetric quantize / dequant-accumulate kernels.
+
+The compute hot-spot of the compressed cross-pod all-reduce
+(core.compression): quantize before the wire, fused dequant+add after.
+Per-block scales ([block] f32 alongside the int8 payload) keep the VPU busy
+and the error bounded; block size 1024 aligns with the lane width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)                  # [blk]
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = jnp.full_like(s_ref, scale)
+
+
+def _dequant_add_kernel(q_ref, s_ref, acc_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                  + q * s_ref[0]).astype(o_ref.dtype)
+
+
+def quantize_blocks(x: jax.Array, *, block: int = 1024, bits: int = 8,
+                    interpret: bool = False):
+    """x [n] -> (q int8 [n_pad], scales f32 [nblocks], n)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    nb = x.shape[0] // block
+    q, s = pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * block,), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s, n
+
+
+def dequant_add(q: jax.Array, scales: jax.Array, acc: jax.Array, *,
+                block: int = 1024, interpret: bool = False) -> jax.Array:
+    """acc [n_pad] += dequant(q) (fused); returns same length as acc."""
+    nb = scales.shape[0]
+    return pl.pallas_call(
+        _dequant_add_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+        interpret=interpret,
+    )(q, scales, acc)

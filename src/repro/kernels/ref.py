@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, sm_scale=None):
+    """q [BH, Sq, D]; k/v [BH, Skv, D(v)]."""
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        sq, sk = s.shape[1], s.shape[2]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_ref(x, dt, a, bm, cm):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    x [BH,S,P]; dt [BH,S]; a [BH]; bm/cm [BH,S,N] -> y [BH,S,P].
+    """
+    bh, s, p = x.shape
+    n = bm.shape[-1]
+
+    def per_batch(xb, dtb, ab, bb, cb):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            dec = jnp.exp(dtt * ab)
+            h = dec * h + jnp.outer(bt, xt * dtt)
+            return h, ct @ h
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        dtb.astype(jnp.float32),
+                                        bb.astype(jnp.float32),
+                                        cb.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(per_batch)(x, dt, a, bm, cm).astype(x.dtype)
+
+
+def quantize_blocks_ref(x, *, block=1024, bits=8):
+    qmax = float(2 ** (bits - 1) - 1)
+    n = x.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    xb = xp.reshape(-1, block).astype(jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-30) / qmax
+    q = jnp.clip(jnp.round(xb / scales[:, None]), -qmax, qmax).astype(jnp.int8)
+    return q.reshape(-1), scales, n
+
+
+def dequant_add_ref(q, scales, acc, *, block=1024):
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    deq = (qb * scales[:, None]).reshape(-1)
+    return (acc.astype(jnp.float32) + deq).astype(acc.dtype)

@@ -1,0 +1,48 @@
+"""Pallas TPU fused RMSNorm (+ scale) kernel.
+
+Grid over row blocks; each step loads a [rows_block, d] tile into VMEM,
+reduces mean-square in f32, rescales, multiplies by the weight vector —
+one HBM read + one write per element (vs. 3+ for the unfused chain).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)              # [rb, d]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            rows_block: int = 256, interpret: bool = False) -> jax.Array:
+    """x [..., d]; w [d].  Row-blocked fused RMSNorm."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    n = xf.shape[0]
+    rb = min(rows_block, n)
+    pad = (-n) % rb
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(xf.shape[0] // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    if pad:
+        out = out[:n]
+    return out.reshape(shape)

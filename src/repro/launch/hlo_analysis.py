@@ -1,0 +1,183 @@
+"""Post-compile HLO analysis: collective bytes, op census, roofline terms.
+
+``collective_bytes`` is not in ``cost_analysis()``; we parse the compiled
+(post-SPMD, per-device) HLO text: build an instruction-name -> byte-size map
+from result shapes, then sum *operand* sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+KNOWN XLA LIMITATION (verified in this container): HloCostAnalysis visits a
+``while`` body ONCE — scanned layers / sequence-block loops are undercounted
+by their trip count.  The dry-run therefore lowers each cell at two reduced
+depths and linearly extrapolates ("2-point depth extrapolation", exact for
+the layer dimension), plus per-family analytic corrections for the inner
+sequence-block loops (attention q/kv blocks, SSD chunks, xLSTM scans) —
+see ``launch.dryrun`` and EXPERIMENTS.md §Methodology.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def scaled(self, factor: float) -> "CollectiveStats":
+        out = CollectiveStats()
+        for k, v in self.bytes_by_kind.items():
+            out.bytes_by_kind[k] = v * factor
+        for k, v in self.count_by_kind.items():
+            out.count_by_kind[k] = v
+        return out
+
+    def merged_with(self, other: "CollectiveStats", w: float = 1.0) -> "CollectiveStats":
+        out = CollectiveStats()
+        for src, ww in ((self, 1.0), (other, w)):
+            for k, v in src.bytes_by_kind.items():
+                out.bytes_by_kind[k] += v * ww
+            for k, v in src.count_by_kind.items():
+                out.count_by_kind[k] += int(v * ww)
+        return out
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective in (per-device) HLO text.
+
+    Operand sizes are looked up from the result shapes of the producing
+    instructions; for variadic collectives every operand is counted.
+    """
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, _ = m.groups()
+            sizes[name] = _shape_bytes(type_str)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        # operands: %refs inside the parens
+        args = line[line.index("(") + 1 : line.rindex(")")]
+        operand_names = re.findall(r"%?([\w\.\-]+)", args)
+        b = 0
+        for o in operand_names:
+            if o in sizes:
+                b += sizes[o]
+        if b == 0:  # fallback: use result size
+            b = _shape_bytes(type_str)
+        stats.bytes_by_kind[kind] += b
+        stats.count_by_kind[kind] += 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e-class, per assignment)
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (≈ per-chip effective here)
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_per_device: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap estimate: max of the three terms (they pipeline)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step runs at the
+        dominant term's speed: (useful flops / peak) / step_time."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_per_device / PEAK_FLOPS) / t
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_per_device": self.model_flops_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "step_time_s": self.step_time_s,
+            "roofline_fraction": self.roofline_fraction,
+        }

@@ -1,0 +1,22 @@
+"""Production meshes.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — dryrun.py must pin XLA_FLAGS before first init.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for multi-device CPU tests (8 fake devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))

@@ -1,0 +1,162 @@
+"""Unified model API: family dispatch + input specs for every (arch, shape).
+
+``get_api(cfg)`` returns a ``ModelAPI`` whose five functions share signatures
+across families, so the trainer / server / dry-run never branch on family.
+
+``input_specs(cfg, shape, ...)`` builds jax.ShapeDtypeStruct stand-ins for
+every input of the lowered step — tokens, labels, frontend-stub embeddings,
+decode caches — without allocating anything (the dry-run contract).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec, ssm, transformer, xlstm
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    init: Callable[..., Any]            # (key, dtype) -> params
+    loss: Callable[..., Any]            # (params, batch) -> (loss, metrics)
+    prefill: Callable[..., Any]         # (params, batch, cache) -> (logits, cache)
+    decode: Callable[..., Any]          # (params, token, pos, cache) -> (logits, cache)
+    init_cache: Callable[..., Any]      # (batch, max_seq, dtype) -> cache
+
+
+def get_api(cfg: ModelConfig, compute_dtype=jnp.bfloat16, remat: str = "full") -> ModelAPI:
+    if cfg.family in ("decoder", "moe", "vlm"):
+        mod = transformer
+        window = cfg.sliding_window
+
+        def loss(params, batch):
+            return mod.loss_fn(params, batch, cfg, compute_dtype=compute_dtype,
+                               remat=remat)
+
+        def prefill(params, batch, cache):
+            return mod.prefill(params, batch["tokens"], cfg, cache,
+                               compute_dtype=compute_dtype,
+                               patch_embeds=batch.get("patch_embeds"),
+                               window=window)
+
+        def decode(params, token, pos, cache):
+            return mod.decode_step(params, token, pos, cfg, cache,
+                                   compute_dtype=compute_dtype, window=window)
+
+        return ModelAPI(
+            init=lambda key, dtype=jnp.float32: mod.init_params(key, cfg, dtype),
+            loss=loss,
+            prefill=prefill,
+            decode=decode,
+            init_cache=lambda b, s, dtype=jnp.bfloat16: mod.init_cache(cfg, b, s, dtype),
+        )
+    if cfg.family == "hybrid":
+        mod = ssm
+    elif cfg.family == "xlstm":
+        mod = xlstm
+    elif cfg.family == "encdec":
+        mod = encdec
+
+        def loss_ed(params, batch):
+            return mod.loss_fn(params, batch, cfg, compute_dtype=compute_dtype,
+                               remat=remat)
+
+        def prefill_ed(params, batch, cache):
+            return mod.prefill(params, batch["tokens"], cfg, cache,
+                               frames=batch["frames"], compute_dtype=compute_dtype)
+
+        def decode_ed(params, token, pos, cache):
+            return mod.decode_step(params, token, pos, cfg, cache,
+                                   compute_dtype=compute_dtype)
+
+        return ModelAPI(
+            init=lambda key, dtype=jnp.float32: mod.init_params(key, cfg, dtype),
+            loss=loss_ed,
+            prefill=prefill_ed,
+            decode=decode_ed,
+            init_cache=lambda b, s, dtype=jnp.bfloat16: mod.init_cache(cfg, b, s, dtype),
+        )
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    # hybrid / xlstm share the plain-LM signature
+    def loss_lm(params, batch):
+        return mod.loss_fn(params, batch, cfg, compute_dtype=compute_dtype,
+                           remat=remat)
+
+    def prefill_lm(params, batch, cache):
+        return mod.prefill(params, batch["tokens"], cfg, cache,
+                           compute_dtype=compute_dtype)
+
+    def decode_lm(params, token, pos, cache):
+        return mod.decode_step(params, token, pos, cfg, cache,
+                               compute_dtype=compute_dtype)
+
+    return ModelAPI(
+        init=lambda key, dtype=jnp.float32: mod.init_params(key, cfg, dtype),
+        loss=loss_lm,
+        prefill=prefill_lm,
+        decode=decode_lm,
+        init_cache=lambda b, s, dtype=jnp.bfloat16: mod.init_cache(cfg, b, s, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run contract: ShapeDtypeStruct only, no allocation)
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "patch_embed":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """Abstract cache pytree via eval_shape (no allocation)."""
+    api = get_api(cfg)
+    extra = cfg.frontend_seq if cfg.frontend == "patch_embed" else 0
+    return jax.eval_shape(partial(api.init_cache, shape.global_batch,
+                                  shape.seq_len + extra, dtype))
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.float32):
+    """Abstract params pytree via eval_shape (no allocation)."""
+    api = get_api(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: api.init(k, dtype), key)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    specs = param_specs(cfg)
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(specs))

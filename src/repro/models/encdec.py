@@ -1,0 +1,177 @@
+"""Encoder-decoder transformer (Whisper-style).
+
+Encoder: bidirectional attention over stubbed audio-frame embeddings
+([B, 1500, d] — the conv frontend is a stub per the assignment).
+Decoder: causal self-attention (KV-cached) + cross-attention whose K/V are
+computed once from the encoder output at prefill and reused every decode
+step.  LayerNorm + learned positions + plain-GELU MLPs per Whisper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel import context as pctx
+from . import layers as L
+
+
+def init_enc_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(k2, cfg, dtype),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "self_attn": L.init_attention(k1, cfg, dtype),
+        "ln_x": L.init_norm(cfg, dtype),
+        "cross_attn": L.init_attention(k2, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(k3, cfg, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ke, kenc, kdec, kp = jax.random.split(key, 4)
+    ekeys = jax.random.split(kenc, cfg.encoder_layers)
+    dkeys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "enc_pos": L._dense_init(kp, (cfg.encoder_seq, cfg.d_model), dtype),
+        "encoder": jax.vmap(lambda k: init_enc_layer(k, cfg, dtype))(ekeys),
+        "enc_norm": L.init_norm(cfg, dtype),
+        "decoder": jax.vmap(lambda k: init_dec_layer(k, cfg, dtype))(dkeys),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+           remat="full"):
+    """frames: [B, enc_seq, d] stub embeddings -> encoder hidden states."""
+    b, s, _ = frames.shape
+    x = frames.astype(compute_dtype) + params["enc_pos"][None, :s].astype(compute_dtype)
+    x = pctx.constrain_acts(x)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+
+    def body(xc, lp):
+        h = L.norm_apply(lp["ln1"], xc, cfg)
+        a, _ = L.attention_apply(lp["attn"], h, cfg, positions, causal=False)
+        xc = xc + a
+        h = L.norm_apply(lp["ln2"], xc, cfg)
+        xc = xc + L.mlp_apply(lp["mlp"], h, cfg)
+        return pctx.constrain_acts(xc), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["encoder"])
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+def cross_kv(params, enc_out, cfg: ModelConfig):
+    """Precompute per-decoder-layer cross-attention K/V from encoder output:
+    leaves [L, B, enc_seq, K, hd]."""
+    hd = cfg.resolved_head_dim
+
+    def one(lp):
+        k = L._proj(enc_out, lp["cross_attn"]["wk"], lp["cross_attn"].get("bk"))
+        v = L._proj(enc_out, lp["cross_attn"]["wv"], lp["cross_attn"].get("bv"))
+        b, s, _ = enc_out.shape
+        return (k.reshape(b, s, cfg.n_kv_heads, hd),
+                v.reshape(b, s, cfg.n_kv_heads, hd))
+
+    return jax.vmap(one)(params["decoder"])
+
+
+def decode_forward(params, tokens, cfg: ModelConfig, xkv, *,
+                   compute_dtype=jnp.bfloat16, cache=None, cache_index=None,
+                   remat="full"):
+    """Decoder stack.  xkv: stacked cross K/V.  cache: self-attn KV stack."""
+    b, s = tokens.shape
+    base_pos = 0 if cache_index is None else cache_index
+    positions = base_pos + jnp.arange(s)[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (b, s))
+    x = L.embed_apply(params["embed"], tokens, cfg, compute_dtype,
+                      positions=jnp.minimum(positions, cfg.learned_pos_max - 1))
+    x = pctx.constrain_acts(x)
+
+    def body(xc, inp):
+        lp, (xk, xv), lcache = inp
+        h = L.norm_apply(lp["ln1"], xc, cfg)
+        a, ncache = L.attention_apply(lp["self_attn"], h, cfg, positions,
+                                      causal=True, cache=lcache,
+                                      cache_index=cache_index)
+        xc = xc + a
+        h = L.norm_apply(lp["ln_x"], xc, cfg)
+        a, _ = L.attention_apply(lp["cross_attn"], h, cfg, positions,
+                                 causal=False,
+                                 kv_override=(xk.astype(compute_dtype),
+                                              xv.astype(compute_dtype)))
+        xc = xc + a
+        h = L.norm_apply(lp["ln2"], xc, cfg)
+        xc = xc + L.mlp_apply(lp["mlp"], h, cfg)
+        return pctx.constrain_acts(xc), ncache
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, new_cache = lax.scan(body, x, (params["decoder"], xkv, cache))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, (new_cache if cache is not None else None)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            remat="full"):
+    """batch: frames [B,enc_seq,d], tokens [B,S], labels [B,S]."""
+    enc = encode(params, batch["frames"], cfg, compute_dtype=compute_dtype,
+                 remat=remat)
+    xkv = cross_kv(params, enc, cfg)
+    hidden, _ = decode_forward(params, batch["tokens"], cfg, xkv,
+                               compute_dtype=compute_dtype, remat=remat)
+    logits = L.unembed_apply(params["embed"], hidden, cfg)
+    loss = L.masked_xent(logits, batch["labels"])
+    return loss, {"nll": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    return {
+        "self": {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+        },
+        "cross": (
+            jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), dtype),
+            jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), dtype),
+        ),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, *, frames=None,
+            compute_dtype=jnp.bfloat16):
+    enc = encode(params, frames, cfg, compute_dtype=compute_dtype, remat="none")
+    xkv = jax.tree.map(lambda a, proto: a.astype(proto.dtype),
+                       cross_kv(params, enc, cfg), cache["cross"])
+    hidden, new_self = decode_forward(params, tokens, cfg, xkv,
+                                      compute_dtype=compute_dtype,
+                                      cache=cache["self"], cache_index=0,
+                                      remat="none")
+    logits = L.unembed_apply(params["embed"], hidden[:, -1:], cfg)
+    return logits[:, 0], {"self": new_self, "cross": xkv}
+
+
+def decode_step(params, token, pos, cfg: ModelConfig, cache, *,
+                compute_dtype=jnp.bfloat16):
+    hidden, new_self = decode_forward(params, token[:, None], cfg, cache["cross"],
+                                      compute_dtype=compute_dtype,
+                                      cache=cache["self"], cache_index=pos,
+                                      remat="none")
+    logits = L.unembed_apply(params["embed"], hidden, cfg)
+    return logits[:, 0], {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,608 @@
+"""Shared neural layers (pure functional JAX — params are nested dicts).
+
+Conventions:
+  * ``init_*`` returns a params pytree; ``*_apply`` consumes it.
+  * activations flow in ``cdt`` (compute dtype, usually bf16); params are
+    stored in the config's param dtype and cast at use.
+  * attention tensors use [batch, seq, heads, head_dim] at rest and
+    [batch, heads, seq, head_dim] inside kernels.
+  * every sequence-quadratic op goes through :func:`blocked_attention`
+    (online-softmax flash pattern) so the 32k prefill shapes never
+    materialize an S×S score matrix.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+Init = jax.nn.initializers.normal
+
+
+def _dense_init(key, shape, dtype, scale=0.02):
+    return Init(scale)(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def norm_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked (flash-pattern) attention — pure jnp oracle of kernels/flash_attention
+# ---------------------------------------------------------------------------
+
+def blocked_attention(
+    q: jax.Array,              # [B, Sq, H, D]
+    k: jax.Array,              # [B, Skv, K, D]
+    v: jax.Array,              # [B, Skv, K, Dv]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    window: int | None = None,
+    scale: float | None = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention; never materializes [Sq, Skv].
+
+    GQA: H = K * G handled by folding the group into the batch of the
+    einsum.  Peak live intermediate: [B, H, q_block, kv_block].
+    """
+    b, sq, h, d = q.shape
+    skv, kh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    qb = min(q_block, sq)
+    kvb = min(kv_block, skv)
+    pad_q = (-sq) % qb
+    pad_kv = (-skv) % kvb
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kf = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0))) if pad_kv else k
+    vf = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0))) if pad_kv else v
+    nq, nkv = qf.shape[1] // qb, kf.shape[1] // kvb
+
+    # [nq, B, K, G, qb, D] / [nkv, B, K, kvb, D]
+    qs = qf.reshape(b, nq, qb, kh, g, d).transpose(1, 0, 3, 4, 2, 5)
+    ks = kf.reshape(b, nkv, kvb, kh, d).transpose(1, 0, 3, 2, 4)
+    vs = vf.reshape(b, nkv, kvb, kh, dv).transpose(1, 0, 3, 2, 4)
+
+    kv_pos = jnp.arange(nkv * kvb).reshape(nkv, kvb)
+
+    def q_block_fn(args):
+        qi, qblk = args                      # qblk [B, K, G, qb, D]
+        q_pos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kblk, vblk, kpos = inp           # [B,K,kvb,D], [B,K,kvb,Dv], [kvb]
+            s = jnp.einsum(
+                "bkgqd,bksd->bkgqs", qblk.astype(jnp.float32),
+                kblk.astype(jnp.float32),
+            ) * scale
+            mask = jnp.ones((qb, kvb), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows (padded tail): keep m finite
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qb, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (ks, vs, kv_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                            # [B, K, G, qb, Dv]
+
+    outs = lax.map(q_block_fn, (jnp.arange(nq), qs))   # [nq, B, K, G, qb, Dv]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * qb, h, dv)
+    if pad_q:
+        out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,              # [B, 1, H, D]
+    k_cache: jax.Array,        # [B, S, K, D]
+    v_cache: jax.Array,        # [B, S, K, Dv]
+    length: jax.Array | int,   # valid prefix length (scalar or [B])
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a KV cache: [B,H,S] scores, no S×S."""
+    b, _, h, d = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qh = q.reshape(b, kh, g, d)
+    # preferred_element_type keeps the accumulation in f32 WITHOUT
+    # materializing an f32 copy of the whole cache (measured 2×6.4 GiB/device
+    # on the 67B decode cell — see §Perf hypothesis log)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qh, k_cache.astype(qh.dtype),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    pos = jnp.arange(s)
+    larr = jnp.asarray(length)
+    if larr.ndim == 0:
+        valid = (pos < larr)[None, None, None, :]
+        if window is not None:
+            valid = jnp.logical_and(valid, (pos >= larr - window)[None, None, None, :])
+    else:
+        valid = (pos[None, :] < larr[:, None])[:, None, None, :]
+        if window is not None:
+            valid = jnp.logical_and(
+                valid, (pos[None, :] >= larr[:, None] - window)[:, None, None, :])
+    scores = jnp.where(valid, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard GQA attention layer (with optional cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype),
+        "wk": _dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        "wv": _dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype),
+        "wo": _dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def attention_apply(
+    p: dict,
+    x: jax.Array,                # [B, S, d]
+    cfg: ModelConfig,
+    positions: jax.Array,        # [B, S]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_override: tuple | None = None,   # cross-attention: (k, v) precomputed
+    cache: dict | None = None,          # {"k","v"} [B, S_max, K, hd]
+    cache_index: jax.Array | int | None = None,
+) -> tuple[jax.Array, dict | None]:
+    from repro.parallel import context as pctx
+
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = _proj(x, p["wq"], p.get("bq")).reshape(b, s, cfg.n_heads, hd)
+    # settle attention layouts ONCE per layer: q sharded over heads ('model'),
+    # kv replicated over 'model' when kv-heads don't divide it — otherwise
+    # GSPMD re-shards per kv block inside the scan (measured 6.4 GB/layer of
+    # all-reduce on the 67B prefill cell; §Perf iteration 11)
+    q = pctx.constrain(q, pctx.BATCH, None, pctx.MODEL, None)
+    if kv_override is None:
+        k = _proj(x, p["wk"], p.get("bk")).reshape(b, s, cfg.n_kv_heads, hd)
+        v = _proj(x, p["wv"], p.get("bv")).reshape(b, s, cfg.n_kv_heads, hd)
+        if cfg.pos_embed == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        kv_spec = pctx.MODEL if cfg.n_kv_heads % pctx.model_axis_size() == 0 else None
+        k = pctx.constrain(k, pctx.BATCH, None, kv_spec, None)
+        v = pctx.constrain(v, pctx.BATCH, None, kv_spec, None)
+    else:
+        k, v = kv_override
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        kc = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                             cache_index, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                             cache_index, axis=1)
+        new_cache = {"k": kc, "v": vc}
+        if s == 1:
+            out = decode_attention(q, kc, vc, cache_index + 1, window=window)
+        else:
+            out = blocked_attention(q, kc[:, : cache_index + s], vc[:, : cache_index + s],
+                                    causal=causal, q_offset=cache_index, window=window)
+    else:
+        out = blocked_attention(q, k, v, causal=causal, window=window)
+    y = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": _dense_init(ks[0], (cfg.d_model, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, h * qk), dtype),
+        "wkv_a": _dense_init(ks[2], (cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": _dense_init(ks[3], (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)), dtype),
+        "wo": _dense_init(ks[4], (h * m.v_head_dim, cfg.d_model), dtype),
+    }
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_compress(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """Produce the compressed KV the cache stores: c_kv [B,S,r], k_rope [B,S,1,dr]."""
+    m: MLAConfig = cfg.mla
+    kv_a = _proj(x, p["wkv_a"])
+    c_kv, k_rope = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    c_kv = _rms(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_expand_kv(p: dict, c_kv: jax.Array, cfg: ModelConfig):
+    """Decompress cached latents into per-head K_nope and V."""
+    m: MLAConfig = cfg.mla
+    h = cfg.n_heads
+    kv = _proj(c_kv, p["wkv_b"]).reshape(*c_kv.shape[:-1], h, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+
+def mla_queries(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    m: MLAConfig = cfg.mla
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = _proj(_rms(_proj(x, p["wq_a"]), p["q_norm"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(*x.shape[:-1], h, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache: dict | None = None,         # {"c_kv": [B,Smax,r], "k_rope": [B,Smax,1,dr]}
+    cache_index: jax.Array | int | None = None,
+) -> tuple[jax.Array, dict | None]:
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = mla_queries(p, x, cfg, positions)
+    c_kv, k_rope = mla_compress(p, x, cfg, positions)
+
+    new_cache = None
+    if cache is not None:
+        ckv_c = lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cache_index, axis=1)
+        krope_c = lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), cache_index, axis=1)
+        new_cache = {"c_kv": ckv_c, "k_rope": krope_c}
+        if s == 1:
+            # decode: traced position -> keep the full cache, mask by length
+            c_kv_all, k_rope_all = ckv_c, krope_c
+        else:
+            upto = cache_index + s  # prefill: static start (0)
+            c_kv_all, k_rope_all = ckv_c[:, :upto], krope_c[:, :upto]
+    else:
+        c_kv_all, k_rope_all = c_kv, k_rope
+
+    if s == 1 and cache is not None:
+        # ---- absorbed decode (MLA's raison d'etre): score & combine in the
+        # r-dim latent space; per-head K/V are never materialized over the
+        # cache.  w_kv_b is folded into the query / output projections.
+        h = cfg.n_heads
+        w_b = p["wkv_b"].astype(x.dtype).reshape(
+            m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+        w_k, w_v = w_b[..., : m.qk_nope_head_dim], w_b[..., m.qk_nope_head_dim:]
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_k)      # [B,H,r]
+        s_lat = jnp.einsum("bhr,bsr->bhs", q_lat.astype(c_kv_all.dtype),
+                           c_kv_all, preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bhd,bsd->bhs",
+                            q_rope[:, 0].astype(k_rope_all.dtype),
+                            k_rope_all[:, :, 0],
+                            preferred_element_type=jnp.float32)
+        scores = (s_lat + s_rope) * scale                          # [B,H,Smax]
+        length = cache_index + 1
+        valid = jnp.arange(scores.shape[-1])[None, None, :] < length
+        scores = jnp.where(valid, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c_kv_all.dtype)
+        lat = jnp.einsum("bhs,bsr->bhr", probs, c_kv_all,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        out = jnp.einsum("bhr,rhd->bhd", lat, w_v)[:, None]        # [B,1,H,dv]
+    else:
+        k_nope, v = mla_expand_kv(p, c_kv_all, cfg)     # [B,Skv,H,dn], [B,Skv,H,dv]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_all, (*k_nope.shape[:-1], m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = blocked_attention(q_full, k_full, v, causal=True, scale=scale,
+                                q_offset=0 if cache_index is None else cache_index)
+    y = out.reshape(b, s, cfg.n_heads * m.v_head_dim) @ p["wo"].astype(x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":  # plain 2-matrix MLP (whisper)
+        return {
+            "w_up": _dense_init(ks[0], (cfg.d_model, ff), dtype),
+            "b_up": jnp.zeros((ff,), dtype),
+            "w_down": _dense_init(ks[1], (ff, cfg.d_model), dtype),
+            "b_down": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return {  # gated (swiglu / geglu)
+        "w_gate": _dense_init(ks[0], (cfg.d_model, ff), dtype),
+        "w_up": _dense_init(ks[1], (cfg.d_model, ff), dtype),
+        "w_down": _dense_init(ks[2], (ff, cfg.d_model), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.act == "gelu":
+        h = jax.nn.gelu(_proj(x, p["w_up"], p["b_up"]))
+        return _proj(h, p["w_down"], p["b_down"])
+    gate = _proj(x, p["w_gate"])
+    gate = jax.nn.gelu(gate) if cfg.act == "geglu" else jax.nn.silu(gate)
+    return _proj(gate * _proj(x, p["w_up"]), p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based dropless-with-capacity dispatch; EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    mo: MoEConfig = cfg.moe
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (cfg.d_model, mo.n_experts), dtype),
+        # stacked expert weights: [E, d, ff] / [E, ff, d] — EP shards dim 0
+        "w_gate": _dense_init(ks[1], (mo.n_experts, cfg.d_model, mo.d_expert), dtype),
+        "w_up": _dense_init(ks[2], (mo.n_experts, cfg.d_model, mo.d_expert), dtype),
+        "w_down": _dense_init(ks[3], (mo.n_experts, mo.d_expert, cfg.d_model), dtype),
+    }
+    if mo.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg, dtype, d_ff=mo.d_expert * mo.n_shared)
+    return p
+
+
+def _moe_groups(t: int) -> int:
+    """Dispatch-group count: one group per DP shard (GShard-style), so every
+    sort/gather/scatter keeps a leading sharded batch dim and stays local."""
+    from repro.parallel import context as pctx
+
+    mesh = pctx.get_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            g *= mesh.shape[ax]
+    return g if g > 0 and t % g == 0 else 1
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  Grouped sort-based dispatch (GShard-style):
+
+      tokens reshaped to [G, T_g] with G sharded over the DP axes -> per-group
+      top-k -> per-group sort by expert -> position-in-expert -> scatter into
+      [G, E, C_g, d] slots (per-group capacity, overflow dropped) -> expert
+      FFN einsum contracted over d with E sharded over 'model' (EP) -> gather
+      back with routing weights.
+
+    Every gather/scatter carries the G batch dim, so GSPMD keeps dispatch
+    local per data shard; the [G, E, C, *] buffers are 2-D sharded
+    (data × model).  A globally-sorted variant was measured 20+ GiB/device
+    worse (see EXPERIMENTS.md §Perf, hypothesis log).
+    """
+    from repro.parallel import context as pctx
+
+    mo: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = _moe_groups(t)
+    tg = t // g
+    e, k = mo.n_experts, mo.top_k
+    xt = pctx.constrain(x.reshape(g, tg, d), pctx.BATCH, None, None)
+
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)   # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, eids = lax.top_k(probs, k)                               # [G,Tg,k]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style, computed over all tokens)
+    gi = jnp.arange(g)[:, None]
+    density = jnp.zeros((g, e), jnp.float32).at[
+        jnp.broadcast_to(gi[..., None], eids.shape), eids].add(1.0)
+    density = density.sum(0) / (t * k)
+    router_prob = probs.mean((0, 1))
+    aux = e * jnp.sum(density * router_prob) * mo.router_aux_weight
+
+    cap = int(mo.capacity_factor * k * tg / e) + 1                    # C per (group, expert)
+    tgk = tg * k
+
+    # ---- gather-only dispatch.  The obvious scatter formulation
+    # (slot_buf.at[g, e, c].set(tokens)) makes GSPMD's scatter partitioner
+    # replicate both operands with full-size all-reduces (+95 GiB/device on
+    # the 236B cell, see the §Perf hypothesis log); with the sort, every
+    # expert's entries are a contiguous range, so slots can be *gathered*.
+    flat_e = eids.reshape(g, tgk)                                     # [G,Tg*k]
+    order = jnp.argsort(flat_e, axis=-1)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    inv_order = jnp.argsort(order, axis=-1)                           # entry -> sorted pos
+    counts = jnp.zeros((g, e), jnp.int32).at[
+        jnp.broadcast_to(gi, flat_e.shape), flat_e].add(1)            # tiny scatter
+    seg_start = jnp.cumsum(counts, axis=-1) - counts                  # [G,E]
+
+    # slot (e, c) reads sorted position seg_start[e] + c while c < counts[e]
+    slot_src = seg_start[..., None] + jnp.arange(cap)[None, None]     # [G,E,C]
+    slot_valid = jnp.arange(cap)[None, None] < counts[..., None]
+    slot_src = jnp.clip(slot_src, 0, tgk - 1).reshape(g, e * cap)
+    tok_of = order // k                                               # [G,Tg*k]
+    slot_tok = jnp.take_along_axis(tok_of, slot_src, axis=1)          # [G,E*C]
+    xs = jnp.take_along_axis(xt, slot_tok[..., None], axis=1)         # [G,E*C,d]
+    slot_buf = jnp.where(slot_valid.reshape(g, e * cap, 1), xs, 0)
+    slot_buf = slot_buf.reshape(g, e, cap, d)
+    slot_buf = pctx.constrain(slot_buf, pctx.BATCH, pctx.MODEL, None, None)
+
+    # expert FFN: [G,E,C,d] x [E,d,f] -> [G,E,C,f]; d contracted, E sharded
+    h_g = jnp.einsum("gecd,edf->gecf", slot_buf, p["w_gate"].astype(x.dtype))
+    h_u = jnp.einsum("gecd,edf->gecf", slot_buf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h_g) * h_u
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    # replicate the (small) expert outputs over 'model' for the local
+    # combine-gather — this reshard is the EP "return" all-to-all
+    y_e = pctx.constrain(y_e, pctx.BATCH, None, None, None)
+
+    # combine: entry j (sorted) lives at flat slot sorted_e*C + pos; dropped
+    # entries (pos >= C) are masked.  Un-sort via the inverse permutation and
+    # fold k back into the token dim with a reshape+sum — no scatter.
+    pos_in_e = jnp.arange(tgk)[None] - jnp.take_along_axis(
+        seg_start, sorted_e, axis=-1)                                 # [G,Tg*k]
+    dropped = pos_in_e >= cap
+    slot_of = sorted_e * cap + jnp.clip(pos_in_e, 0, cap - 1)
+    y_sorted = jnp.take_along_axis(
+        y_e.reshape(g, e * cap, d), slot_of[..., None], axis=1)
+    y_sorted = jnp.where(dropped[..., None], 0, y_sorted)
+    y_entries = jnp.take_along_axis(y_sorted, inv_order[..., None], axis=1)
+    contrib = y_entries * weights.reshape(g, tgk)[..., None].astype(x.dtype)
+    out = contrib.reshape(g, tg, k, d).sum(axis=2)                    # [G,Tg,d]
+    out = pctx.constrain(out, pctx.BATCH, None, None)
+
+    if mo.n_shared:
+        out = out + mlp_apply(p["shared"], xt, cfg)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"tok": _dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(ks[1], (cfg.d_model, cfg.padded_vocab), dtype)
+    if cfg.pos_embed == "learned":
+        p["pos"] = _dense_init(ks[2], (cfg.learned_pos_max, cfg.d_model), dtype)
+    return p
+
+
+def embed_apply(p: dict, tokens: jax.Array, cfg: ModelConfig, dtype,
+                positions: jax.Array | None = None) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.pos_embed == "learned" and positions is not None:
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(dtype)
+    return x
+
+
+def unembed_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ p["tok"].T.astype(x.dtype)
+    else:
+        logits = x @ p["unembed"].astype(x.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padding rows out of softmax
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e9, logits.dtype), logits)
+    return logits
+
+
+def masked_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross entropy over labels >= 0.
+
+    Uses the one-hot/logsumexp formulation rather than take_along_axis: the
+    vocab dim stays 'model'-sharded end to end (a vocab gather makes GSPMD
+    replicate the [B,S,V] logits — measured at +45 GiB/device on the 236B
+    train cell; see EXPERIMENTS.md §Perf hypothesis log)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    oh = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(oh * logits, axis=-1)
+    nll = lse - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,354 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid (Mamba2 + shared attention).
+
+The selective-state-space block follows the Mamba2 "state space duality"
+chunked algorithm: quadratic attention *within* length-Q chunks (MXU-friendly
+matmuls) and a linear recurrence *across* chunks (lax.scan over nc = S/Q
+carries) — O(S·Q) work, O(1) state.  ``kernels/mamba_scan.py`` is the Pallas
+version of the intra-chunk compute; this module is (and tests against) the
+pure-jnp oracle.
+
+Zamba2: 54 Mamba2 layers with ONE shared transformer block (attention + MLP)
+inserted every ``attn_every`` layers — same weights at every insertion
+(Zamba's parameter-sharing trick).  The forward is a scan over groups of
+[attn_every] Mamba2 layers, with the shared block applied between groups.
+At long context the shared attention runs with a sliding window
+(cfg.sliding_window), keeping the whole model sub-quadratic.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.parallel import context as pctx
+from . import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim
+    return s, d_inner, nheads, conv_dim
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block params
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> dict:
+    s, d_inner, nheads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    in_cols = 2 * d_inner + 2 * s.state_dim + nheads  # z, x, B, C, dt
+    return {
+        "ln": L.init_norm(cfg, dtype),
+        "in_proj": L._dense_init(ks[0], (cfg.d_model, in_cols), dtype),
+        "conv_w": L._dense_init(ks[1], (conv_dim, s.conv_width), dtype, scale=0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nheads,), dtype),          # A = -exp(A_log)
+        "D": jnp.ones((nheads,), dtype),
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": L._dense_init(ks[2], (d_inner, cfg.d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, width W.  x [B,S,C]; w [C,W]; optional carried
+    state [B,W-1,C] (decode).  Returns (y [B,S,C], new_state)."""
+    width = w.shape[1]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)          # [B, S+W-1, C]
+    y = sum(
+        xx[:, i : i + x.shape[1]] * w[:, i].astype(x.dtype)
+        for i in range(width)
+    ) + b.astype(x.dtype)
+    new_state = xx[:, -(width - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Mamba2 SSD over a sequence.
+
+    x  [B,S,H,P]   per-head inputs
+    dt [B,S,H]     positive step sizes
+    A  [H]         negative decay rates
+    Bm [B,S,N], Cm [B,S,N]  input/output mixing (n_groups=1, shared by heads)
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    # [nc, B, Q, ...] so one lax.scan walks chunks with the state carry —
+    # peak live intermediate is per-chunk [B,Q,Q,H], never [B,S,Q,H].
+    xc = x.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    bc = Bm.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    cc = Cm.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_step(hprev, inp):
+        xk, dtk, bk, ck = inp                        # [B,Q,H,P],[B,Q,H],[B,Q,N]x2
+        a = dtk * A[None, None, :]                   # [B,Q,H] (negative)
+        cum = jnp.cumsum(a, axis=1)
+        seg_end = cum[:, -1, :]                      # [B,H]
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j), i >= j
+        li = cum[:, :, None, :] - cum[:, None, :, :]     # [B,Q,Q,H]
+        lmat = jnp.where(causal[None, :, :, None], jnp.exp(li), 0.0)
+        cbk = jnp.einsum("bin,bjn->bij", ck, bk)         # [B,Q,Q]
+        w_intra = cbk[..., None] * lmat * dtk[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w_intra, xk)
+        # state flowing out of this chunk
+        decay_to_end = jnp.exp(seg_end[:, None, :] - cum)  # [B,Q,H]
+        state_c = jnp.einsum("bjn,bjh,bjhp->bhnp", bk, decay_to_end * dtk, xk)
+        # contribution of the carried state
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", ck, jnp.exp(cum), hprev)
+        hnew = hprev * jnp.exp(seg_end)[..., None, None] + state_c
+        return hnew, y_intra + y_inter
+
+    h0 = jnp.zeros((b, h, n, p), x.dtype)
+    hlast, ys = lax.scan(chunk_step, h0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, p)
+    if pad:
+        y = y[:, :s]
+    return y, hlast
+
+
+def mamba_block_apply(p, x, cfg: ModelConfig, *, state=None):
+    """x [B,S,d].  state (decode): {"ssm": [B,H,N,P], "conv": [B,W-1,C]}.
+    Returns (y, new_state) — new_state is None when state is None."""
+    s_cfg, d_inner, nheads, conv_dim = _dims(cfg)
+    res = x
+    xn = L.norm_apply(p["ln"], x, cfg)
+    proj = xn @ p["in_proj"].astype(x.dtype)
+    z, xb = proj[..., :d_inner], proj[..., d_inner : d_inner + conv_dim]
+    dt_raw = proj[..., d_inner + conv_dim :]
+    conv_state = None if state is None else state["conv"]
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    xm = xb[..., :d_inner]
+    Bm = xb[..., d_inner : d_inner + s_cfg.state_dim]
+    Cm = xb[..., d_inner + s_cfg.state_dim :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    b, s, _ = x.shape
+    xh = xm.reshape(b, s, nheads, s_cfg.head_dim)
+    if state is None or s > 1:
+        y, hlast = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                               Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                               s_cfg.chunk)
+    else:
+        # single-step recurrence (decode)
+        hprev = state["ssm"].astype(jnp.float32)          # [B,H,N,P]
+        dt1 = dt[:, 0]                                    # [B,H]
+        dec = jnp.exp(dt1 * A[None, :])                   # [B,H]
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                         dt1, xh[:, 0].astype(jnp.float32))
+        hlast = hprev * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), hlast)[:, None]
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = L._rms(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = res + y @ p["out_proj"].astype(x.dtype)
+    out = pctx.constrain(out, pctx.BATCH, None, None)
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": hlast.astype(state["ssm"].dtype), "conv": new_conv}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid model
+# ---------------------------------------------------------------------------
+
+def _shared_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(k2, cfg, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    assert cfg.attn_every and cfg.n_layers % cfg.attn_every == 0
+    groups = cfg.n_layers // cfg.attn_every
+    ke, km, ka = jax.random.split(key, 3)
+    mkeys = jax.random.split(km, cfg.n_layers)
+    # reshape is key-representation agnostic (typed keys: [n]; raw: [n, 2])
+    mkeys = mkeys.reshape(groups, cfg.attn_every, *mkeys.shape[1:])
+    stacked = jax.vmap(jax.vmap(lambda k: init_mamba_block(k, cfg, dtype)))(mkeys)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "mamba": stacked,                      # [G, E, ...] leaves
+        "shared_attn": _shared_block_init(ka, cfg, dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+
+
+def _attn_cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.sliding_window or max_seq)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            cache=None, cache_index=None, remat="full"):
+    """Returns (hidden, new_cache, aux=0).  cache:
+    {"mamba": {ssm [G,E,B,H,N,P], conv [G,E,B,W-1,C]},
+     "attn": {k/v [G, B, Lc, K, hd]}}"""
+    b, s = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, cfg, compute_dtype)
+    x = pctx.constrain_acts(x)
+    groups = cfg.n_layers // cfg.attn_every
+    base_pos = 0 if cache_index is None else cache_index
+    positions = base_pos + jnp.arange(s)[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (b, s))
+    window = cfg.sliding_window
+
+    shared = params["shared_attn"]
+
+    def group_body(carry, inp):
+        xc = carry
+        gparams, gcache = inp
+
+        def inner(lp, xc2, lcache):
+            return mamba_block_apply(lp, xc2, cfg, state=lcache)
+
+        if remat == "full":
+            inner = jax.checkpoint(inner)
+        mcache = None if gcache is None else gcache["mamba"]
+        # python-unrolled over the attn_every mamba blocks (small constant):
+        # keeps their flops visible to HLO cost analysis (a scan here would
+        # be counted once) and lets XLA pipeline across blocks.
+        states = []
+        for e in range(cfg.attn_every):
+            lp = jax.tree.map(lambda a: a[e], gparams)
+            lcache = None if mcache is None else jax.tree.map(lambda a: a[e], mcache)
+            xc, nstate = inner(lp, xc, lcache)
+            states.append(nstate)
+        new_m = None
+        if mcache is not None:
+            new_m = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+        # shared attention block (same weights every group).  The decode
+        # cache is a RING of length clen = min(max_seq, sliding_window):
+        # position p lives in slot p % clen, keys stored pre-rotated at
+        # absolute positions, so the window mask is simply "slot is filled".
+        h = L.norm_apply(shared["ln1"], xc, cfg)
+        acache = None if gcache is None else gcache["attn"]
+        if acache is not None and s == 1:
+            clen = acache["k"].shape[1]
+            hd = cfg.resolved_head_dim
+            q = L._proj(h, shared["attn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+            k = L._proj(h, shared["attn"]["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+            v = L._proj(h, shared["attn"]["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            widx = cache_index % clen
+            kc = lax.dynamic_update_slice_in_dim(
+                acache["k"], k.astype(acache["k"].dtype), widx, axis=1)
+            vc = lax.dynamic_update_slice_in_dim(
+                acache["v"], v.astype(acache["v"].dtype), widx, axis=1)
+            filled = jnp.minimum(cache_index + 1, clen)
+            out = L.decode_attention(q, kc, vc, filled)
+            a = out.reshape(b, 1, cfg.n_heads * hd) @ shared["attn"]["wo"].astype(h.dtype)
+            new_a = {"k": kc, "v": vc}
+        elif acache is not None:
+            clen = acache["k"].shape[1]
+            a, _ = L.attention_apply(
+                shared["attn"], h, cfg, positions, causal=True, window=window,
+                cache=None)
+            # seed the ring with the last clen keys/values (slot p % clen
+            # alignment holds because clen | stored-range start)
+            hd = cfg.resolved_head_dim
+            k = L._proj(h, shared["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+            v = L._proj(h, shared["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            if s >= clen:
+                kw, vw = k[:, -clen:], v[:, -clen:]
+            else:
+                kw = lax.dynamic_update_slice_in_dim(
+                    acache["k"], k.astype(acache["k"].dtype), 0, axis=1)
+                vw = lax.dynamic_update_slice_in_dim(
+                    acache["v"], v.astype(acache["v"].dtype), 0, axis=1)
+            new_a = {"k": kw.astype(acache["k"].dtype),
+                     "v": vw.astype(acache["v"].dtype)}
+        else:
+            a, _ = L.attention_apply(shared["attn"], h, cfg, positions,
+                                     causal=True, window=window, cache=None)
+            new_a = None
+        xc = xc + a
+        hh = L.norm_apply(shared["ln2"], xc, cfg)
+        xc = xc + L.mlp_apply(shared["mlp"], hh, cfg)
+        xc = pctx.constrain_acts(xc)
+        new_gcache = None if gcache is None else {"mamba": new_m, "attn": new_a}
+        return xc, new_gcache
+
+    gcaches = None if cache is None else cache
+    if remat == "full":
+        # checkpoint the whole group (6 mamba blocks + shared attn): the
+        # layer scan then stashes only the [B,S,d] carry per group, not the
+        # SSD intermediates; inner per-block checkpoints bound the recompute.
+        group_body = jax.checkpoint(group_body)
+    x, new_cache = lax.scan(group_body, x, (params["mamba"], gcaches))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    s_cfg, d_inner, nheads, conv_dim = _dims(cfg)
+    groups = cfg.n_layers // cfg.attn_every
+    e = cfg.attn_every
+    clen = _attn_cache_len(cfg, max_seq)
+    hd = cfg.resolved_head_dim
+    return {
+        "mamba": {
+            "ssm": jnp.zeros((groups, e, batch, nheads, s_cfg.state_dim,
+                              s_cfg.head_dim), dtype),
+            "conv": jnp.zeros((groups, e, batch, s_cfg.conv_width - 1, conv_dim), dtype),
+        },
+        "attn": {
+            "k": jnp.zeros((groups, batch, clen, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((groups, batch, clen, cfg.n_kv_heads, hd), dtype),
+        },
+    }
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            remat="full"):
+    hidden, _, _ = forward(params, batch["tokens"], cfg,
+                           compute_dtype=compute_dtype, remat=remat)
+    logits = L.unembed_apply(params["embed"], hidden, cfg)
+    loss = L.masked_xent(logits, batch["labels"])
+    return loss, {"nll": loss}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, *, compute_dtype=jnp.bfloat16):
+    hidden, new_cache, _ = forward(params, tokens, cfg, compute_dtype=compute_dtype,
+                                   cache=cache, cache_index=0, remat="none")
+    logits = L.unembed_apply(params["embed"], hidden[:, -1:], cfg)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, token, pos, cfg: ModelConfig, cache, *,
+                compute_dtype=jnp.bfloat16):
+    hidden, new_cache, _ = forward(params, token[:, None], cfg,
+                                   compute_dtype=compute_dtype,
+                                   cache=cache, cache_index=pos, remat="none")
+    logits = L.unembed_apply(params["embed"], hidden, cfg)
+    return logits[:, 0], new_cache

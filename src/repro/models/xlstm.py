@@ -1,0 +1,308 @@
+"""xLSTM: alternating sLSTM (scalar memory) and mLSTM (matrix memory) blocks.
+
+mLSTM trains with the *chunkwise-parallel* formulation (quadratic within a
+chunk, recurrent across chunks — same shape as Mamba2's SSD), with
+log-domain exponential gating and the max-stabilizer carried across chunks.
+A naive per-token scan would store the [dh, dh] matrix memory per step for
+backprop (hundreds of GB at 4k); the chunkwise form stores it per *chunk*.
+
+sLSTM is inherently sequential (recurrent gate connections through h_{t-1});
+it runs as a lax.scan over time with tiny per-step state — the paper's
+trade-off, kept faithfully.
+
+Layer pattern: blocks alternate [sLSTM, mLSTM] (cfg.xlstm.slstm_every == 2),
+scanned in pairs so the stacked-params trick still applies.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.parallel import context as pctx
+from . import layers as L
+
+CHUNK = 64
+
+
+def _dims(cfg: ModelConfig):
+    x: XLSTMConfig = cfg.xlstm
+    d_i = int(x.proj_factor * cfg.d_model)
+    h = x.n_heads
+    return x, d_i, h, d_i // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> dict:
+    _, d_i, h, dh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    return {
+        "ln": L.init_norm(cfg, dtype),
+        "up": L._dense_init(ks[0], (d, 2 * d_i), dtype),
+        "wq": L._dense_init(ks[1], (d_i, d_i), dtype),
+        "wk": L._dense_init(ks[2], (d_i, d_i), dtype),
+        "wv": L._dense_init(ks[3], (d_i, d_i), dtype),
+        "wi": L._dense_init(ks[4], (d_i, h), dtype),
+        "bi": jnp.zeros((h,), dtype),
+        "wf": L._dense_init(ks[5], (d_i, h), dtype),
+        "bf": jnp.full((h,), 3.0, dtype),            # forget-gate bias init
+        "gn": jnp.ones((d_i,), dtype),
+        "down": L._dense_init(ks[6], (d_i, d), dtype),
+    }
+
+
+def mlstm_chunked(q, k, v, ilog, flog, state):
+    """Chunkwise mLSTM.  q/k/v [B,S,H,dh]; ilog/flog [B,S,H] (log gates);
+    state: (C [B,H,dh,dh], n [B,H,dh], m [B,H]).  Returns (h [B,S,H,dh],
+    new_state).  All math in f32/log-domain."""
+    b, s, h, dh = q.shape
+    qn = min(CHUNK, s)
+    pad = (-s) % qn
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, ilog, flog = map(zp, (q, k, v, ilog, flog))
+        # padded steps: i = -inf (no input), f = 0 (identity decay)
+        padmask = jnp.arange(q.shape[1]) >= s
+        ilog = jnp.where(padmask[None, :, None], -1e30, ilog)
+        flog = jnp.where(padmask[None, :, None], 0.0, flog)
+    nc = q.shape[1] // qn
+
+    def r(a):  # [B, S, ...] -> [nc, B, Q, ...]
+        return a.reshape(b, nc, qn, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    qs, ks_, vs, is_, fs = map(r, (q, k, v, ilog, flog))
+    scale = 1.0 / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((qn, qn), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                      # [B,H,dh,dh], [B,H,dh], [B,H]
+        qk, kk, vk, ik, fk = inp             # [B,Q,H,*]
+        bcum = jnp.cumsum(fk, axis=1)        # [B,Q,H] cumulative log-decay
+        # D[i,j] = bcum_i - bcum_j + ilog_j  (j <= i)
+        dmat = bcum[:, :, None, :] - bcum[:, None, :, :] + ik[:, None, :, :]
+        dmat = jnp.where(causal[None, :, :, None], dmat, -1e30)
+        inter_log = bcum + m[:, None, :]     # [B,Q,H] log-weight of carry
+        m_row = jnp.maximum(dmat.max(axis=2), inter_log)   # [B,Q,H]
+        sm = jnp.exp(dmat - m_row[:, :, None, :])          # [B,Q,Q,H]
+        qk_dot = jnp.einsum("bihd,bjhd->bijh", qk, kk) * scale
+        w = qk_dot * sm
+        inter_w = jnp.exp(inter_log - m_row)               # [B,Q,H]
+        numer = jnp.einsum("bijh,bjhd->bihd", w, vk) + \
+            inter_w[..., None] * jnp.einsum("bihd,bhde->bihe", qk, C) * scale
+        denom = jnp.einsum("bijh->bih", w) + \
+            inter_w * jnp.einsum("bihd,bhd->bih", qk, n) * scale
+        hout = numer / jnp.maximum(jnp.abs(denom), jnp.exp(-m_row))[..., None]
+        # chunk-end state
+        bq = bcum[:, -1, :]                                # [B,H]
+        m_state = jnp.maximum(bq + m, (bq[:, None, :] - bcum + ik).max(axis=1))
+        wstate = jnp.exp(bq[:, None, :] - bcum + ik - m_state[:, None, :])
+        C_new = jnp.exp(bq + m - m_state)[..., None, None] * C + \
+            jnp.einsum("bjh,bjhd,bjhe->bhde", wstate, kk, vk)
+        n_new = jnp.exp(bq + m - m_state)[..., None] * n + \
+            jnp.einsum("bjh,bjhd->bhd", wstate, kk)
+        return (C_new, n_new, m_state), hout
+
+    (C, n, m), hs = lax.scan(chunk_step, state, (qs, ks_, vs, is_, fs))
+    hout = hs.transpose(1, 0, 2, 3, 4).reshape(b, nc * qn, h, dh)
+    if pad:
+        hout = hout[:, :s]
+    return hout, (C, n, m)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, *, state=None):
+    _, d_i, h, dh = _dims(cfg)
+    b, s, _ = x.shape
+    res = x
+    xn = L.norm_apply(p["ln"], x, cfg)
+    up = xn @ p["up"].astype(x.dtype)
+    xm, z = up[..., :d_i], up[..., d_i:]
+    f32 = jnp.float32
+    q = (xm @ p["wq"].astype(x.dtype)).reshape(b, s, h, dh).astype(f32)
+    k = (xm @ p["wk"].astype(x.dtype)).reshape(b, s, h, dh).astype(f32)
+    v = (xm @ p["wv"].astype(x.dtype)).reshape(b, s, h, dh).astype(f32)
+    ilog = (xm @ p["wi"].astype(x.dtype)).astype(f32) + p["bi"].astype(f32)
+    flog = jax.nn.log_sigmoid(
+        (xm @ p["wf"].astype(x.dtype)).astype(f32) + p["bf"].astype(f32))
+    st = state if state is not None else (
+        jnp.zeros((b, h, dh, dh), f32), jnp.zeros((b, h, dh), f32),
+        jnp.full((b, h), -1e30, f32),
+    )
+    hout, new_state = mlstm_chunked(q, k, v, ilog, flog, st)
+    hout = hout.reshape(b, s, d_i).astype(x.dtype)
+    hout = L._rms(hout, p["gn"], cfg.norm_eps) * jax.nn.silu(z)
+    out = res + hout @ p["down"].astype(x.dtype)
+    return pctx.constrain(out, pctx.BATCH, None, None), \
+        (new_state if state is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> dict:
+    x, _, h, _ = _dims(cfg)
+    d = cfg.d_model
+    dh = d // h
+    ks = jax.random.split(key, 10)
+    blk = lambda kk: L._dense_init(kk, (h, dh, dh), dtype)
+    return {
+        "ln": L.init_norm(cfg, dtype),
+        "wz": L._dense_init(ks[0], (d, d), dtype), "rz": blk(ks[1]),
+        "wi": L._dense_init(ks[2], (d, h), dtype), "ri": L._dense_init(ks[3], (h, dh), dtype),
+        "wf": L._dense_init(ks[4], (d, h), dtype), "rf": L._dense_init(ks[5], (h, dh), dtype),
+        "wo": L._dense_init(ks[6], (d, d), dtype), "ro": blk(ks[7]),
+        "bi": jnp.zeros((h,), dtype), "bf": jnp.full((h,), 3.0, dtype),
+        "gn": jnp.ones((d,), dtype),
+        "ff_up": L._dense_init(ks[8], (d, 2 * d), dtype),
+        "ff_down": L._dense_init(ks[9], (d, d), dtype),
+    }
+
+
+def _slstm_step(p, carry, xt, cfg, h_heads, dh):
+    """One sLSTM time step.  carry: (c [B,H,dh], n [B,H,dh], m [B,H],
+    hprev [B,d]).  xt [B,d]."""
+    f32 = jnp.float32
+    c, n, m, hprev = carry
+    hp = hprev.reshape(-1, h_heads, dh)
+    z = jnp.tanh((xt @ p["wz"].astype(xt.dtype)).astype(f32).reshape(-1, h_heads, dh)
+                 + jnp.einsum("bhd,hde->bhe", hp.astype(f32), p["rz"].astype(f32)))
+    ilog = (xt @ p["wi"].astype(xt.dtype)).astype(f32) + p["bi"].astype(f32) \
+        + jnp.einsum("bhd,hd->bh", hp.astype(f32), p["ri"].astype(f32))
+    flog = (xt @ p["wf"].astype(xt.dtype)).astype(f32) + p["bf"].astype(f32) \
+        + jnp.einsum("bhd,hd->bh", hp.astype(f32), p["rf"].astype(f32))
+    flog = jax.nn.log_sigmoid(flog)
+    o = jax.nn.sigmoid((xt @ p["wo"].astype(xt.dtype)).astype(f32).reshape(-1, h_heads, dh)
+                       + jnp.einsum("bhd,hde->bhe", hp.astype(f32), p["ro"].astype(f32)))
+    m_new = jnp.maximum(flog + m, ilog)
+    i = jnp.exp(ilog - m_new)[..., None]
+    f = jnp.exp(flog + m - m_new)[..., None]
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    h_flat = h_new.reshape(h_new.shape[0], -1)
+    return (c_new, n_new, m_new, h_flat.astype(xt.dtype)), h_flat
+
+
+def slstm_apply(p, x, cfg: ModelConfig, *, state=None):
+    xcfg, _, _, _ = _dims(cfg)
+    h_heads = xcfg.n_heads
+    d = cfg.d_model
+    dh = d // h_heads
+    b, s, _ = x.shape
+    res = x
+    xn = L.norm_apply(p["ln"], x, cfg)
+    f32 = jnp.float32
+    st = state if state is not None else (
+        jnp.zeros((b, h_heads, dh), f32), jnp.zeros((b, h_heads, dh), f32),
+        jnp.full((b, h_heads), -1e30, f32), jnp.zeros((b, d), x.dtype),
+    )
+
+    def step(carry, xt):
+        return _slstm_step(p, carry, xt, cfg, h_heads, dh)
+
+    new_state, hs = lax.scan(step, st, xn.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(x.dtype)           # [B,S,d]
+    hs = L._rms(hs, p["gn"], cfg.norm_eps)
+    x = res + hs
+    # gated FF
+    up = x @ p["ff_up"].astype(x.dtype)
+    a, g = up[..., :d], up[..., d:]
+    x = x + (a * jax.nn.silu(g)) @ p["ff_down"].astype(x.dtype)
+    return pctx.constrain_acts(x), \
+        (new_state if state is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    assert cfg.n_layers % 2 == 0
+    pairs = cfg.n_layers // 2
+    ke, ks_, km = jax.random.split(key, 3)
+    skeys = jax.random.split(ks_, pairs)
+    mkeys = jax.random.split(km, pairs)
+    return {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "slstm": jax.vmap(lambda k: init_slstm(k, cfg, dtype))(skeys),
+        "mlstm": jax.vmap(lambda k: init_mlstm(k, cfg, dtype))(mkeys),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            cache=None, cache_index=None, remat="full"):
+    b, s = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, cfg, compute_dtype)
+    x = pctx.constrain_acts(x)
+
+    def pair_body(xc, inp):
+        sp, mp, scache, mcache = inp
+        xc, new_s = slstm_apply(sp, xc, cfg, state=scache)
+        xc, new_m = mlstm_apply(mp, xc, cfg, state=mcache)
+        return xc, (new_s, new_m)
+
+    if remat == "full":
+        pair_body = jax.checkpoint(pair_body)
+    scache = None if cache is None else cache["slstm"]
+    mcache = None if cache is None else cache["mlstm"]
+    x, (new_s, new_m) = lax.scan(
+        pair_body, x, (params["slstm"], params["mlstm"], scache, mcache))
+    new_cache = None if cache is None else {"slstm": new_s, "mlstm": new_m}
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    del max_seq  # recurrent state is O(1) in sequence length
+    xcfg, d_i, h, dh = _dims(cfg)
+    pairs = cfg.n_layers // 2
+    d = cfg.d_model
+    dhs = d // xcfg.n_heads
+    f32 = jnp.float32
+    return {
+        "slstm": (
+            jnp.zeros((pairs, batch, xcfg.n_heads, dhs), f32),
+            jnp.zeros((pairs, batch, xcfg.n_heads, dhs), f32),
+            jnp.full((pairs, batch, xcfg.n_heads), -1e30, f32),
+            jnp.zeros((pairs, batch, d), dtype),
+        ),
+        "mlstm": (
+            jnp.zeros((pairs, batch, h, dh, dh), f32),
+            jnp.zeros((pairs, batch, h, dh), f32),
+            jnp.full((pairs, batch, h), -1e30, f32),
+        ),
+    }
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            remat="full"):
+    hidden, _, _ = forward(params, batch["tokens"], cfg,
+                           compute_dtype=compute_dtype, remat=remat)
+    logits = L.unembed_apply(params["embed"], hidden, cfg)
+    loss = L.masked_xent(logits, batch["labels"])
+    return loss, {"nll": loss}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, *, compute_dtype=jnp.bfloat16):
+    hidden, new_cache, _ = forward(params, tokens, cfg, compute_dtype=compute_dtype,
+                                   cache=cache, cache_index=0, remat="none")
+    logits = L.unembed_apply(params["embed"], hidden[:, -1:], cfg)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, token, pos, cfg: ModelConfig, cache, *,
+                compute_dtype=jnp.bfloat16):
+    hidden, new_cache, _ = forward(params, token[:, None], cfg,
+                                   compute_dtype=compute_dtype,
+                                   cache=cache, cache_index=pos, remat="none")
+    logits = L.unembed_apply(params["embed"], hidden, cfg)
+    return logits[:, 0], new_cache

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (warmup + cosine / linear decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def make_lr_schedule(tc: TrainConfig, kind: str = "cosine"):
+    warm = max(tc.warmup_steps, 1)
+    total = max(tc.total_steps, warm + 1)
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm_lr = tc.lr * step / warm
+        t = jnp.clip((step - warm) / (total - warm), 0.0, 1.0)
+        if kind == "cosine":
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t)) * tc.lr
+        else:
+            decay = (1.0 - t) * tc.lr
+        return jnp.where(step < warm, warm_lr, decay)
+
+    return lr

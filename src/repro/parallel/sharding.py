@@ -1,0 +1,151 @@
+"""Partitioning rules: params / batch / KV-cache PartitionSpec trees.
+
+Rules are matched on the flattened key path (suffix substrings), so every
+family's params get TP ('model') on the obvious contraction dims, optional
+FSDP/ZeRO-3 ('data') on the other dim, and replication for small leaves.
+Leading stacked-layer axes ([L] from scan stacking, [G,E] for zamba groups)
+are auto-padded with None — rules describe the *trailing* dims.
+
+KV caches shard batch over ('pod','data') and, because GQA kv-head counts
+(2..8) often do not divide the 16-way model axis, fall back to sharding
+head_dim over 'model' (always a multiple of 16 here).  The MLA latent cache
+shards its latent dim over 'model' (576/16) — without that, DeepSeek-V2's
+decode_32k cache alone is 18 GB/chip.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# (pattern, trailing-dims spec builder) — first match wins.
+# fsdp -> the data axis or None; tp -> 'model'.
+
+
+def _param_rules(fsdp):
+    tp = "model"
+    return [
+        # biases first — they must not fall through to the weight rules
+        (r"(bq|bk|bv|b_up)$", (tp,)),
+        (r"(b_down|bi|bf|conv_b|dt_bias)$", None),
+        (r"embed/tok$", (tp, fsdp)),
+        (r"embed/unembed$", (fsdp, tp)),
+        (r"embed/pos$", (None, tp)),
+        (r"enc_pos$", (None, tp)),
+        (r"patch_proj$", (fsdp, tp)),
+        # MoE stacked experts: EP over model on the expert dim
+        (r"router$", (fsdp, None)),
+        (r"moe/w_gate$", (tp, fsdp, None)),
+        (r"moe/w_up$", (tp, fsdp, None)),
+        (r"moe/w_down$", (tp, None, fsdp)),
+        # MLA
+        (r"wq_a$", (fsdp, None)),
+        (r"wq_b$", (None, tp)),
+        (r"wkv_a$", (fsdp, None)),
+        (r"wkv_b$", (None, tp)),
+        # attention / generic projections: output-dim TP for QKV+up,
+        # input-dim TP for the down/out projections
+        (r"attn/wo$", (tp, fsdp)),
+        (r"w_down$", (tp, fsdp)),
+        (r"out_proj$", (tp, fsdp)),
+        (r"down$", (tp, fsdp)),          # mlstm down
+        (r"ff_down$", (tp, fsdp)),
+        (r"conv_w$", (tp, None)),
+        (r"(wq|wk|wv|w_gate|w_up|up|in_proj|ff_up|wz)$", (fsdp, tp)),
+        (r"(wi|wf|wo)$", (fsdp, None)),  # xlstm gate projections [d, H]
+        (r"(rz|ro)$", (None, None, None)),
+        (r"(ri|rf)$", (None, None)),
+        (r".*", None),                   # 1-D scales/biases etc: replicate
+    ]
+
+
+def _spec_for(path: str, ndim: int, rules) -> P:
+    for pat, trailing in rules:
+        if re.search(pat, path):
+            if trailing is None:
+                return P()
+            t = list(trailing)
+            if len(t) > ndim:      # smoke configs may drop dims — replicate
+                return P()
+            pad = [None] * (ndim - len(t))
+            return P(*pad, *t)
+    return P()
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_partition_specs(params_tree, fsdp_axis: str | None = None):
+    """PartitionSpec tree mirroring ``params_tree`` (works on abstract trees)."""
+    rules = _param_rules(fsdp_axis)
+
+    def leaf_spec(path, leaf):
+        return _spec_for(_path_str(path), len(leaf.shape), rules)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def batch_partition_specs(batch_tree, batch_axes: Sequence[str]):
+    ba = tuple(batch_axes)
+
+    def leaf_spec(_, leaf):
+        return P(ba, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_partition_specs(cfg: ModelConfig, cache_tree, batch_axes: Sequence[str],
+                          model_size: int = 16):
+    """Decode/prefill cache specs.  Batch dim position differs per family."""
+    ba = tuple(batch_axes)
+    tp = "model"
+
+    def leaf_spec(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        if "c_kv" in p:        # [L?, B, S, r] — shard latent over model
+            pad = [None] * (nd - 3)
+            r = leaf.shape[-1]
+            return P(*pad, ba, None, tp if r % model_size == 0 else None)
+        if "k_rope" in p:      # [L?, B, S, 1, dr]
+            pad = [None] * (nd - 4)
+            dr = leaf.shape[-1]
+            return P(*pad, ba, None, None, tp if dr % model_size == 0 else None)
+        if re.search(r"(^|/)(k|v)$", p) or "self/" in p or "cross/" in p:
+            # attention KV: [L?, B, S, K, hd]
+            pad = [None] * (nd - 4)
+            kh, hd = leaf.shape[-2], leaf.shape[-1]
+            if kh % model_size == 0:
+                return P(*pad, ba, None, tp, None)
+            if hd % model_size == 0:
+                return P(*pad, ba, None, None, tp)
+            return P(*pad, ba, None, None, None)
+        if "mamba/ssm" in p:   # [G, E, B, H, N, Pd]
+            h = leaf.shape[3]
+            return P(None, None, ba, tp if h % model_size == 0 else None, None, None)
+        if "mamba/conv" in p:  # [G, E, B, W-1, C]
+            c = leaf.shape[-1]
+            return P(None, None, ba, None, tp if c % model_size == 0 else None)
+        if "slstm" in p or "mlstm" in p:
+            # tuples [pairs, B, ...]: batch at dim 1
+            return P(None, ba, *([None] * (nd - 2)))
+        # fallback: assume batch at dim 1 when stacked, dim 0 otherwise
+        if nd >= 2:
+            return P(None, ba, *([None] * (nd - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)

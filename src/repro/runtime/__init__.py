@@ -1,0 +1,5 @@
+from .fault_tolerance import (  # noqa: F401
+    FailureInjector,
+    InjectedFailure,
+    StepWatchdog,
+)

@@ -1,0 +1,117 @@
+"""Batched serving engine: prefill + step-synchronized decode.
+
+Slot-based continuous batching (lite): a fixed number of batch slots; a
+round admits up to ``batch_slots`` queued requests, right-pads them to a
+common prefill length, runs one jit'd prefill, then step-synchronized greedy
+decode until every sequence hits EOS or its token budget; finished slots are
+refilled next round.  (True per-step slot refill needs paged attention —
+out of scope; the cache layout supports it later.)
+
+Both phases are jit'd once per (batch, seq) bucket; the decode loop runs one
+token per call with a shared scalar position — the same ``serve_step`` the
+decode_32k / long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api as mapi
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_seq: int = 256, compute_dtype=jnp.bfloat16,
+                 pad_id: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch_slots = batch_slots
+        self.max_seq = max_seq
+        self.pad_id = pad_id
+        self.api = mapi.get_api(cfg, compute_dtype=compute_dtype, remat="none")
+        self._queue: list[Request] = []
+        self._rid = itertools.count()
+
+        self._prefill = jax.jit(
+            lambda params, batch, cache: self.api.prefill(params, batch, cache))
+        self._decode = jax.jit(
+            lambda params, tok, pos, cache: self.api.decode(params, tok, pos, cache))
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               eos_id: int | None = None) -> Request:
+        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        self._queue.append(r)
+        return r
+
+    def _admit(self) -> list[Request]:
+        batch, self._queue = (self._queue[: self.batch_slots],
+                              self._queue[self.batch_slots:])
+        return batch
+
+    def run(self) -> list[Request]:
+        """Serve everything queued; returns completed requests."""
+        done: list[Request] = []
+        while self._queue:
+            batch = self._admit()
+            done.extend(self._serve_round(batch))
+        return done
+
+    def _serve_round(self, reqs: list[Request]) -> list[Request]:
+        b = self.batch_slots
+        plen = max(len(r.prompt) for r in reqs)
+        plen = max(plen, 1)
+        toks = np.full((b, plen), self.pad_id, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad to align ends
+        cache = self.api.init_cache(b, self.max_seq)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "patch_embed":
+            batch["patch_embeds"] = jnp.zeros(
+                (b, self.cfg.frontend_seq, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (b, self.cfg.encoder_seq, self.cfg.d_model), jnp.bfloat16)
+        logits, cache = self._prefill(self.params, batch, cache)
+        pos = plen
+        if self.cfg.frontend == "patch_embed":
+            pos += self.cfg.frontend_seq
+        budget = max(r.max_new_tokens for r in reqs)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for step in range(budget):
+            tok_host = np.asarray(jax.device_get(next_tok))
+            for i, r in enumerate(reqs):
+                if r.done or len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                t = int(tok_host[i])
+                r.output.append(t)
+                if r.eos_id is not None and t == r.eos_id:
+                    r.done = True
+            if all(r.done or len(r.output) >= r.max_new_tokens for r in reqs):
+                break
+            if pos >= self.max_seq:
+                break
+            logits, cache = self._decode(self.params, next_tok,
+                                         jnp.asarray(pos, jnp.int32), cache)
+            next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            pos += 1
+        for r in reqs:
+            r.done = True
+        return reqs

@@ -1,0 +1,97 @@
+"""Training loop: checkpointing, auto-resume, watchdog, failure recovery.
+
+The loop is deliberately restart-transparent: the data source is a pure
+function of the step index and the train state carries its own step counter,
+so ``Trainer.run()`` after a crash (or an ``InjectedFailure``) resumes from
+the latest checkpoint and produces bit-identical results to an uninterrupted
+run — asserted by tests/test_fault_tolerance.py.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import shard_batch
+from repro.runtime.fault_tolerance import FailureInjector, InjectedFailure, StepWatchdog
+from .train_step import make_train_state, make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclass
+class TrainerOptions:
+    ckpt_dir: str | Path = "checkpoints"
+    ckpt_every: int = 50
+    keep_n: int = 3
+    max_restarts: int = 3
+    watchdog_threshold: float = 3.0
+    log_every: int = 10
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    tc: TrainConfig
+    source: object                      # .batch(step) -> host batch dict
+    mesh: object | None = None
+    options: TrainerOptions = field(default_factory=TrainerOptions)
+    injector: FailureInjector | None = None
+
+    def __post_init__(self):
+        self.ckpt = Checkpointer(self.options.ckpt_dir, keep_n=self.options.keep_n)
+        self.watchdog = StepWatchdog(self.options.watchdog_threshold)
+        self._step_fn = jax.jit(make_train_step(self.cfg, self.tc, self.mesh))
+        self.history: list[dict] = []
+
+    # -------------------------------------------------------------- state
+    def init_or_restore(self):
+        state = make_train_state(self.cfg, self.tc, jax.random.key(self.tc.seed))
+        steps = self.ckpt.steps()
+        if steps:
+            state = self.ckpt.restore(steps[-1], state)
+            log.info("restored checkpoint at step %d", steps[-1])
+        return state
+
+    # ---------------------------------------------------------------- run
+    def run(self, total_steps: int | None = None):
+        total = total_steps if total_steps is not None else self.tc.total_steps
+        restarts = 0
+        while True:
+            try:
+                return self._run_inner(total)
+            except InjectedFailure as e:
+                restarts += 1
+                log.warning("%s — restart %d/%d", e, restarts,
+                            self.options.max_restarts)
+                if restarts > self.options.max_restarts:
+                    raise
+
+    def _run_inner(self, total: int):
+        state = self.init_or_restore()
+        step = int(jax.device_get(state["step"]))
+        while step < total:
+            if self.injector is not None:
+                self.injector.check(step)
+            host_batch = self.source.batch(step)
+            batch = shard_batch(host_batch, self.mesh)
+            self.watchdog.start()
+            state, metrics = self._step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = self.watchdog.stop(step)
+            step += 1
+            if step % self.options.log_every == 0 or step == total:
+                m = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+                m.update(step=step, sec_per_step=dt)
+                self.history.append(m)
+                log.info("step %d loss %.4f (%.2fs)", step, m["loss"], dt)
+            if step % self.options.ckpt_every == 0 or step == total:
+                self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return state

@@ -1,0 +1,86 @@
+"""Checkpointer: roundtrip, integrity, retention, async, elastic reshard."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer, load_latest
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = _tree()
+    ck.save(7, t, blocking=True)
+    out = ck.restore(7, jax.tree.map(lambda x: jnp.zeros_like(x), t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_latest(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree())
+    ck.save(2, _tree())
+    ck.wait()
+    out, step = load_latest(tmp_path, _tree())
+    assert step == 2 and out is not None
+
+
+def test_crc_detects_corruption(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(3, _tree(), blocking=True)
+    man = tmp_path / "step_3" / "manifest.json"
+    m = json.loads(man.read_text())
+    m["leaves"][0]["crc32"] ^= 0xFF
+    man.write_text(json.dumps(m))
+    with pytest.raises(IOError, match="crc"):
+        ck.restore(3, _tree())
+
+
+def test_retention_keeps_newest(tmp_path):
+    ck = Checkpointer(tmp_path, keep_n=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(), blocking=True)
+    assert ck.steps() == [3, 4]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _tree(), blocking=True)
+    bad = {"a": jnp.zeros((2, 2)), "nested": {"b": jnp.zeros((5,), jnp.int32)}}
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(1, bad)
+
+
+ELASTIC = """
+import numpy as np, tempfile, jax, jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.checkpoint import Checkpointer
+
+tmp = tempfile.mkdtemp()
+mesh8 = jax.make_mesh((8,), ('data',), axis_types=(AxisType.Auto,))
+x = jnp.arange(64.0).reshape(8, 8)
+xs = jax.device_put(x, NamedSharding(mesh8, P('data', None)))
+ck = Checkpointer(tmp)
+ck.save(1, {'x': xs}, blocking=True)
+
+# elastic restore onto a SHRUNKEN 4-way mesh with a different layout
+mesh4 = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+out = ck.restore(1, {'x': jax.ShapeDtypeStruct((8, 8), jnp.float32)},
+                 mesh=mesh4, spec_tree={'x': P('data', 'model')})
+assert out['x'].sharding.mesh.shape['data'] == 4
+np.testing.assert_array_equal(np.asarray(out['x']), np.asarray(x))
+print('ELASTIC_OK')
+"""
+
+
+def test_elastic_reshard_across_meshes(subproc):
+    assert "ELASTIC_OK" in subproc(ELASTIC)

@@ -1,0 +1,47 @@
+"""The dry-run pipeline itself, exercised on an 8-device mesh (subprocess):
+lower + compile + memory/cost/collective extraction for train, prefill and
+decode kinds with a smoke config — guards the central deliverable without
+needing the 512-device production mesh."""
+
+import pytest
+
+CODE = """
+import dataclasses
+import jax
+from repro.configs import registry
+from repro.configs.base import ShapeConfig
+from repro.launch.dryrun import lower_cell, _memory, _costs, _train_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch import analytic
+
+mesh = make_host_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = registry.get("qwen2-1.5b", smoke=True)
+shapes = [ShapeConfig("t", 64, 8, "train"), ShapeConfig("p", 64, 8, "prefill"),
+          ShapeConfig("d", 64, 8, "decode")]
+for shape in shapes:
+    tc = _train_config(cfg, {"microbatches": 2})
+    lowered, compiled = lower_cell(cfg, shape, mesh, tc)
+    mem = _memory(compiled)
+    costs = _costs(compiled)
+    assert mem["per_device_hbm_bytes"] > 0
+    assert costs["flops"] > 0
+    assert costs["bytes"] > 0
+    # the lowered text must contain real collectives (TP/DP are active)
+    assert costs["collective_bytes"] > 0, shape.kind
+    print(shape.kind, "ok",
+          round(mem["per_device_hbm_bytes"] / 2**20, 1), "MiB",
+          costs["collective_counts"])
+
+# depth variants compile too (the extrapolation path)
+c0 = analytic.with_depth(cfg, 0)
+c1 = analytic.with_depth(cfg, 1)
+for c in (c0, c1):
+    lower_cell(c, shapes[0], mesh, _train_config(c, {"microbatches": 2}))
+print("DRYRUN_MACHINERY_OK")
+"""
+
+
+def test_dryrun_pipeline_on_host_mesh(subproc):
+    out = subproc(CODE, timeout=900)
+    assert "DRYRUN_MACHINERY_OK" in out
+    assert "train ok" in out and "prefill ok" in out and "decode ok" in out

@@ -1,0 +1,96 @@
+"""HLO collective parser + roofline arithmetic (pure text-level units)."""
+
+import pytest
+
+from repro.launch.hlo_analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                       _shape_bytes, parse_collectives)
+
+SAMPLE_HLO = """
+HloModule jit_step
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[512,256]{1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[128,256]{1,0} all-reduce(%p0), to_apply=%sum
+  %cp = f32[128,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %rs = f32[32,256]{1,0} reduce-scatter(%p0), dimensions={0}
+  %a2a = f32[128,256]{1,0} all-to-all(%p0), dimensions={0}
+  ROOT %out = f32[128,256]{1,0} add(%ar, %cp)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[4], s8[4])") == 20
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = parse_collectives(SAMPLE_HLO)
+    operand = 128 * 256 * 4
+    assert stats.count_by_kind == {"all-gather": 1, "all-reduce": 1,
+                                   "collective-permute": 1,
+                                   "reduce-scatter": 1, "all-to-all": 1}
+    # every op's single operand is p0
+    for kind in stats.bytes_by_kind:
+        assert stats.bytes_by_kind[kind] == operand
+    assert stats.total_bytes == 5 * operand
+
+
+def test_parse_variadic_allreduce():
+    hlo = """
+  %a = bf16[1024]{0} parameter(0)
+  %b = bf16[2048]{0} parameter(1)
+  %arv = (bf16[1024], bf16[2048]) all-reduce(%a, %b), to_apply=%sum
+"""
+    stats = parse_collectives(hlo)
+    assert stats.bytes_by_kind["all-reduce"] == 1024 * 2 + 2048 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops_per_device=PEAK_FLOPS,        # 1 s of compute
+                 bytes_per_device=HBM_BW / 2,        # 0.5 s of memory
+                 collective_bytes_per_device=ICI_BW / 4,  # 0.25 s
+                 model_flops_per_device=PEAK_FLOPS / 2)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.useful_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+
+def test_analytic_model_flops_scaling():
+    """MODEL_FLOPS must scale ~linearly with tokens and with N_active."""
+    from repro.configs import registry
+    from repro.configs.base import ShapeConfig
+    from repro.launch import analytic
+
+    cfg = registry.get("qwen2-1.5b")
+    s1 = ShapeConfig("a", 4096, 64, "train")
+    s2 = ShapeConfig("b", 4096, 128, "train")
+    f1, f2 = analytic.model_flops(cfg, s1), analytic.model_flops(cfg, s2)
+    assert f2 / f1 == pytest.approx(2.0, rel=1e-6)
+
+    moe = registry.get("granite-moe-1b-a400m")
+    act = analytic.n_active(moe)
+    # active params far below total for top-8/32 experts
+    from repro.models.api import param_count
+    assert act < param_count(moe)
+
+
+def test_depth_variants_consistent():
+    from repro.configs import registry
+    from repro.launch import analytic
+
+    for arch in ("deepseek-67b", "zamba2-2.7b", "xlstm-350m",
+                 "whisper-medium", "deepseek-v2-236b"):
+        cfg = registry.get(arch)
+        full = analytic.scan_depth(cfg)
+        assert full >= 2
+        c1 = analytic.with_depth(cfg, 1)
+        assert analytic.scan_depth(c1) == 1
+        c0 = analytic.with_depth(cfg, 0)
+        assert analytic.scan_depth(c0) == 0

@@ -1,0 +1,40 @@
+"""α–β planner (Lemma 1 on TPU): crossover and regime behavior."""
+
+from repro.core.planner import CostParams, crossover_table, plan_bucket
+
+
+def test_small_buckets_latency_bound_tree_wins():
+    plan = plan_bucket(256, 4096.0)
+    assert plan.strategy in ("wrht_tree", "rd")
+
+
+def test_large_buckets_bandwidth_bound():
+    plan = plan_bucket(256, 1 << 30)
+    assert plan.strategy in ("flat", "hier_scatter")
+
+
+def test_crossover_is_monotone():
+    """Once the bandwidth-optimal family wins it keeps winning as buckets grow."""
+    rows = crossover_table(256)
+    kinds = [r["strategy"] in ("flat", "hier_scatter") for r in rows]
+    first = kinds.index(True) if True in kinds else len(kinds)
+    assert all(kinds[first:])
+
+
+def test_optical_regime_prefers_few_steps():
+    """With the paper's 25 µs per-step cost, a small payload must map to a
+    minimum-step schedule (the WRHT regime)."""
+    p = CostParams.optical(64)
+    plan = plan_bucket(1024, 1e4, p, m_candidates=(2, 8, 129))
+    assert plan.strategy in ("wrht_tree", "rd")
+    if plan.strategy == "wrht_tree":
+        assert plan.m >= 8
+
+
+def test_hier_scatter_beats_flat_alpha():
+    """Multi-level reduce-scatter moves the same bytes in fewer steps."""
+    from repro.core.planner import t_flat_ring, t_hier_scatter
+
+    p = CostParams.tpu_v5e()
+    b = 64 * 2**20
+    assert t_hier_scatter((4, 8, 8), b, p) < t_flat_ring(256, b, p)

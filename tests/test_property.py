@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, blocked_attention, masked_xent
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(2, 40), h=st.integers(1, 3),
+       kv=st.integers(1, 2), d=st.sampled_from([8, 16]),
+       qb=st.sampled_from([4, 8, 16]), kvb=st.sampled_from([4, 8, 16]))
+def test_blocked_attention_matches_naive(b, s, h, kv, d, qb, kvb):
+    """Online-softmax blocking is exact w.r.t. naive masked attention, for
+    every (block size × GQA ratio × ragged seq) combination."""
+    if h % kv:
+        h = kv * h
+    rng = np.random.default_rng(b * 1000 + s)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    got = blocked_attention(q, k, v, causal=True, q_block=qb, kv_block=kvb)
+
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qh = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qh, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, -1)
+    want = jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(b, s, h, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 30), d=st.sampled_from([8, 16, 32]))
+def test_rope_preserves_norm(s, d):
+    rng = np.random.default_rng(s)
+    x = jnp.asarray(rng.normal(size=(1, s, 2, d)), jnp.float32)
+    pos = jnp.arange(s)[None]
+    y = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_invariance():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+
+    def dot(i, j):
+        qi = apply_rope(q, jnp.asarray([[i]]), 1e4)
+        kj = apply_rope(k, jnp.asarray([[j]]), 1e4)
+        return float(jnp.sum(qi * kj))
+
+    assert dot(3, 1) == np.float32(dot(10, 8)) or abs(dot(3, 1) - dot(10, 8)) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 3), s=st.integers(1, 10), v=st.sampled_from([7, 16]))
+def test_masked_xent_matches_naive(b, s, v):
+    rng = np.random.default_rng(b * 100 + s)
+    logits = jnp.asarray(rng.normal(size=(b, s, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    labels = labels.at[0, 0].set(-100)  # one masked position
+    got = float(masked_xent(logits, labels))
+    logp = jax.nn.log_softmax(logits, -1)
+    mask = np.asarray(labels) >= 0
+    nll = -np.take_along_axis(np.asarray(logp),
+                              np.maximum(np.asarray(labels), 0)[..., None],
+                              axis=-1)[..., 0]
+    want = (nll * mask).sum() / max(mask.sum(), 1)
+    assert abs(got - want) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 64), w=st.integers(1, 8))
+def test_planner_cost_positive_and_bounded(n, w):
+    from repro.core.planner import CostParams, plan_bucket
+
+    plan = plan_bucket(n, 2.0 ** (10 + w), CostParams.tpu_v5e())
+    assert plan.cost_s > 0
+    # never worse than flat ring (flat is always a candidate)
+    from repro.core.planner import t_flat_ring
+    assert plan.cost_s <= t_flat_ring(n, 2.0 ** (10 + w), CostParams.tpu_v5e()) + 1e-12

@@ -1,0 +1,59 @@
+"""Serving engine: determinism, batching equivalence, EOS handling."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import api as mapi
+from repro.serve import Engine
+
+
+def _engine(batch_slots=2, arch="qwen2-1.5b"):
+    cfg = registry.get(arch, smoke=True)
+    api = mapi.get_api(cfg, remat="none")
+    params = api.init(jax.random.key(0))
+    return cfg, Engine(cfg, params, batch_slots=batch_slots, max_seq=64)
+
+
+def test_greedy_decode_deterministic():
+    _, e1 = _engine()
+    _, e2 = _engine()
+    r1 = e1.submit([5, 6, 7], max_new_tokens=6)
+    r2 = e2.submit([5, 6, 7], max_new_tokens=6)
+    e1.run(), e2.run()
+    assert r1.output == r2.output
+    assert len(r1.output) == 6
+
+
+def test_batched_equals_singleton():
+    """A request's output must not depend on its batch-mates."""
+    _, eng = _engine(batch_slots=2)
+    ra = eng.submit([9, 10, 11], max_new_tokens=5)
+    rb = eng.submit([3, 4], max_new_tokens=5)
+    eng.run()
+
+    _, solo = _engine(batch_slots=2)
+    rs = solo.submit([9, 10, 11], max_new_tokens=5)
+    solo.run()
+    assert ra.output == rs.output
+
+
+def test_eos_stops_generation():
+    cfg, eng = _engine()
+    r = eng.submit([1, 2, 3], max_new_tokens=8)
+    eng.run()
+    eos = r.output[0]
+    _, eng2 = _engine()
+    r2 = eng2.submit([1, 2, 3], max_new_tokens=8, eos_id=eos)
+    eng2.run()
+    assert len(r2.output) == 1 and r2.output[0] == eos
+
+
+def test_queue_drains_multiple_rounds():
+    _, eng = _engine(batch_slots=2)
+    reqs = [eng.submit([i + 1, i + 2], max_new_tokens=3) for i in range(5)]
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.output) == 3 for r in reqs)

@@ -1,0 +1,57 @@
+"""Closed-form step counts and time models (paper Table I / Eq. 1)."""
+
+import math
+
+import pytest
+
+from repro.core import step_models as sm
+
+
+def test_table1_numbers_n1000_w64():
+    assert sm.ring_steps(1000) == 1998
+    assert sm.bt_steps(1000) == 20
+    # the paper's table prints 411 = formula without the −4 term
+    assert sm.hring_steps(1000, 5, 64, table_variant=True) == 411
+    assert sm.hring_steps(1000, 5, 64) == 407
+    assert sm.wrht_steps(1000, 129, with_alltoall=False) == 4
+    assert sm.wrht_steps(1000, 129, with_alltoall=True) == 3
+
+
+def test_rd_steps():
+    assert sm.rd_steps(1024) == 10
+    assert sm.rd_steps(128) == 7
+
+
+def test_eq1_time_decomposition():
+    """T = θ·d/B + θ·a exactly for full-vector algorithms."""
+    p = sm.OpticalParams()
+    d = 1e9
+    t = sm.t_wrht(1024, d, p)
+    theta = sm.wrht_steps(1024, 2 * p.wavelengths + 1, False)
+    assert t == pytest.approx(theta * d / p.bandwidth_bps
+                              + theta * p.reconfig_delay_s)
+
+
+def test_wrht_time_nearly_constant_in_n():
+    """The paper's headline: WRHT comm time ~constant from 1k to 4k nodes."""
+    p = sm.OpticalParams()
+    d = 62.3e6 * 32
+    t1 = sm.t_wrht(1024, d, p)
+    t4 = sm.t_wrht(4096, d, p)
+    assert t4 <= 2.0 * t1  # one extra ⌈log⌉ level at most
+
+
+def test_ring_time_linear_in_n():
+    p = sm.OpticalParams()
+    d = 62.3e6 * 32
+    t1 = sm.t_ring_optical(1024, d, p)
+    t4 = sm.t_ring_optical(4096, d, p)
+    assert t4 > 1.8 * t1
+
+
+def test_electrical_slower_than_optical():
+    """Fig. 5 directionality: optical ring beats the electrical fat-tree."""
+    e, o = sm.ElectricalParams(), sm.OpticalParams()
+    for d in sm.PAPER_MODELS_BITS.values():
+        assert sm.t_ring_electrical(512, d, e) > sm.t_ring_optical(512, d, o)
+        assert sm.t_rd_electrical(512, d, e) > sm.t_wrht(512, d, o)

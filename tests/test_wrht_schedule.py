@@ -1,0 +1,79 @@
+"""WRHT schedule builder: structure, wavelengths, semantics (paper Sec. III)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wrht
+from repro.core.topology import Ring
+from repro.core.wavelength import WavelengthConflictError, validate_no_conflicts
+
+
+def test_motivational_example_fig2():
+    """15 nodes, w=2: the paper's Fig. 2(b) finishes in 3 steps (vs BT's 8)."""
+    s = wrht.build_schedule(15, 2, 1e6)
+    assert s.m == 5
+    assert s.num_steps == 3
+    kinds = [st_.kind for st_ in s.steps]
+    assert kinds == ["reduce", "alltoall", "broadcast"]
+
+
+def test_table1_step_count():
+    s = wrht.build_schedule(1000, 64, 1e6)
+    lo, hi = wrht.theoretical_steps(1000, s.m)
+    assert lo <= s.num_steps <= hi
+    assert s.num_steps in (3, 4)  # 2⌈log_129 1000⌉ = 4, −1 with all-to-all
+
+
+def test_every_node_receives_full_reduction():
+    s = wrht.build_schedule(100, 8, 1.0)
+    sets = wrht.simulate_contributions(s)
+    assert all(x == frozenset(range(100)) for x in sets)
+
+
+def test_wavelength_budget_never_exceeded():
+    for n, w in [(64, 2), (100, 8), (256, 64), (31, 3)]:
+        s = wrht.build_schedule(n, w, 1.0)
+        for step in s.steps:
+            assert step.wavelengths <= w
+
+
+def test_conflict_validation_rejects_bad_assignment():
+    from repro.core.topology import CW, Transfer
+
+    # two overlapping CW paths on the same wavelength
+    t1 = Transfer(0, 3, CW, 1.0, wavelength=0)
+    t2 = Transfer(1, 4, CW, 1.0, wavelength=0)
+    with pytest.raises(WavelengthConflictError):
+        validate_no_conflicts([t1, t2], n=8, w=4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 300), w=st.integers(1, 32))
+def test_schedule_properties_random(n, w):
+    """For any (N, w): valid wavelengths, correct semantics, step count within
+    the paper's closed-form band."""
+    s = wrht.build_schedule(n, w, 1.0)
+    ring = Ring(max(n, 2), w)
+    for step in s.steps:
+        validate_no_conflicts(step.transfers, ring.n, ring.w)
+        assert step.wavelengths <= w
+    lo, hi = wrht.theoretical_steps(n, s.m)
+    assert s.num_steps <= hi
+    masks = wrht.simulate_contribution_masks(s)
+    full = (1 << n) - 1
+    assert all(m == full for m in masks)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 120), w=st.integers(1, 8), m=st.integers(2, 12))
+def test_custom_group_size(n, w, m):
+    s = wrht.build_schedule(n, w, 1.0, m=m)
+    masks = wrht.simulate_contribution_masks(s)
+    assert all(x == (1 << n) - 1 for x in masks)
+
+
+def test_lemma1_optimal_group_size():
+    assert wrht.optimal_group_size(64) == 129
+    assert wrht.optimal_group_size(2) == 5
