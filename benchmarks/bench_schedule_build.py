@@ -1,0 +1,98 @@
+"""Schedule-construction benchmark: vectorized engine vs reference greedy.
+
+Tracks the cost of ``wrht.build_schedule`` — the repo's planning hot path —
+from this PR on.  ``python -m benchmarks.bench_schedule_build`` runs the full
+sweep (N up to 32768) and writes ``BENCH_schedule.json`` at the repo root;
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness.
+
+Per (n, w) cell it reports:
+  build_s          vectorized build, no validation (the RWA itself)
+  validate_s       structural + semantic validation of the built schedule
+  reference_s      the original per-object First-Fit build (seed behaviour),
+                   measured only up to ``REFERENCE_MAX_N`` (it is >10 s above)
+  speedup          reference_s / build_s
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import wrht
+from repro.core.topology import Ring
+
+SWEEP = [(1024, 32), (4096, 32), (8192, 32), (16384, 32), (32768, 32)]
+REFERENCE_MAX_N = 8192
+REPEATS = 3
+
+
+def _best(fn, repeats: int = REPEATS) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_cell(n: int, w: int, measure_reference: bool = True) -> dict:
+    build_s = _best(lambda: wrht.build_schedule(n, w, 1.0, validate=False))
+    sched = wrht.build_schedule(n, w, 1.0, validate=False)
+    ring = Ring(n, w)
+    validate_s = _best(lambda: wrht.validate_schedule(sched, ring))
+    cell = {
+        "n": n,
+        "w": w,
+        "m": sched.m,
+        "steps": sched.num_steps,
+        "build_s": round(build_s, 6),
+        "validate_s": round(validate_s, 6),
+        "build_validate_s": round(build_s + validate_s, 6),
+    }
+    if measure_reference and n <= REFERENCE_MAX_N:
+        ref_s = _best(
+            lambda: wrht.build_schedule(n, w, 1.0, validate=False, rwa="reference"),
+            repeats=1,
+        )
+        cell["reference_s"] = round(ref_s, 6)
+        cell["speedup"] = round(ref_s / build_s, 1)
+    return cell
+
+
+def sweep(cells=SWEEP, measure_reference: bool = True) -> dict:
+    return {
+        "benchmark": "wrht.build_schedule",
+        "unit": "seconds (best of 3)",
+        "reference": "first_fit_assign_reference (seed per-object greedy), "
+                     f"measured for N <= {REFERENCE_MAX_N}",
+        "cells": [bench_cell(n, w, measure_reference) for n, w in cells],
+    }
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` CSV harness / CI smoke."""
+    out = []
+    for n, w in [(1024, 32), (4096, 32)]:
+        cell = bench_cell(n, w, measure_reference=(n <= 1024))
+        derived = {k: cell[k] for k in ("steps", "build_s", "build_validate_s")}
+        if "speedup" in cell:
+            derived["speedup"] = cell["speedup"]
+        out.append({
+            "name": f"schedule_build/N={n},w={w}",
+            "us_per_call": cell["build_s"] * 1e6,
+            "derived": derived,
+        })
+    return out
+
+
+def main() -> None:
+    result = sweep()
+    out = Path(__file__).resolve().parents[1] / "BENCH_schedule.json"
+    out.write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps(result, indent=2))
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   fig5_electrical    paper Fig. 5 (electrical vs optical)
   planner_crossover  beyond-paper alpha-beta planner behaviour
   roofline           aggregated dry-run roofline terms (reads experiments/)
+  schedule_build     WRHT schedule-construction cost (full sweep writes
+                     BENCH_schedule.json via `python -m benchmarks.bench_schedule_build`)
 """
 
 from __future__ import annotations
@@ -15,7 +17,14 @@ import sys
 
 
 def main() -> None:
-    from . import fig4_optical, fig5_electrical, planner_crossover, roofline, table1_steps
+    from . import (
+        bench_schedule_build,
+        fig4_optical,
+        fig5_electrical,
+        planner_crossover,
+        roofline,
+        table1_steps,
+    )
 
     modules = {
         "table1_steps": table1_steps,
@@ -23,6 +32,7 @@ def main() -> None:
         "fig5_electrical": fig5_electrical,
         "planner_crossover": planner_crossover,
         "roofline": roofline,
+        "schedule_build": bench_schedule_build,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

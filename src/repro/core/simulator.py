@@ -9,16 +9,20 @@ conflict-freedom).  Flit alignment and O/E/O conversion follow Table II.
 Besides WRHT (schedule from ``wrht.build_schedule``) this module builds the
 explicit optical schedules of the three baselines the paper compares against
 (Sec. IV-B): Ring, Binary-Tree and H-Ring — all validated for wavelength
-conflicts before timing.
+conflicts before timing.  Baseline steps are emitted directly as
+``TransferBatch`` arrays (DESIGN.md §1), so even the N-transfer flat-ring
+step is built in O(1) NumPy calls.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
+
+import numpy as np
 
 from . import step_models, wrht
-from .topology import CCW, CW, Ring, Transfer
+from .topology import CCW, CW, Ring, TransferBatch
 from .wavelength import validate_no_conflicts
 
 
@@ -46,12 +50,17 @@ def simulate_steps(
     per_step = []
     maxw = 0
     for step in steps:
+        batch = step.transfers
         if validate:
-            validate_no_conflicts(step.transfers, ring.n, ring.w)
-        if bits_override is not None:
-            s = ring.serialization_time(bits_override) if step.transfers else 0.0
+            validate_no_conflicts(batch, ring.n, ring.w)
+        if len(batch) == 0:
+            s = 0.0
+        elif bits_override is not None:
+            s = ring.serialization_time(bits_override)
         else:
-            s = max((ring.serialization_time(t.bits) for t in step.transfers), default=0.0)
+            # serialization_time is monotone in bits, so the slowest
+            # concurrent transfer is the one with the largest payload
+            s = ring.serialization_time(float(batch.bits.max()))
         ser += s
         per_step.append(s + ring.reconfig_delay_s)
         maxw = max(maxw, step.wavelengths)
@@ -76,14 +85,13 @@ def ring_allreduce_schedule(n: int, d_bits: float) -> list[wrht.Step]:
     2(N-1) steps, every node forwards a d/N chunk to its CW neighbour.
     Neighbour hops occupy disjoint segments -> wavelength 0 everywhere
     (the paper's point: only ONE of w wavelengths is ever used)."""
-    chunk = d_bits / n
-    steps = []
-    for _ in range(2 * (n - 1)):
-        transfers = [
-            Transfer(i, (i + 1) % n, CW, chunk, wavelength=0) for i in range(n)
-        ]
-        steps.append(wrht.Step("ring", 0, transfers))
-    return steps
+    src = np.arange(n)
+    batch = TransferBatch.from_arrays(
+        src, (src + 1) % n, CW, d_bits / n, wavelength=0, check=False
+    )
+    # every step is the identical neighbour pattern; batches are immutable
+    # by convention, so one array set backs all 2(N-1) steps
+    return [wrht.Step("ring", 0, batch) for _ in range(2 * (n - 1))]
 
 
 def bt_allreduce_schedule(n: int, d_bits: float) -> list[wrht.Step]:
@@ -94,16 +102,16 @@ def bt_allreduce_schedule(n: int, d_bits: float) -> list[wrht.Step]:
     reduce_steps = []
     for i in range(1, levels + 1):
         span, half = 2**i, 2 ** (i - 1)
-        transfers = []
-        for head in range(0, n, span):
-            sender = head + half
-            if sender < n:
-                transfers.append(Transfer(sender, head, CCW, d_bits, wavelength=0))
-        reduce_steps.append(wrht.Step("reduce", i - 1, transfers))
+        heads = np.arange(0, n, span)
+        senders = heads + half
+        heads, senders = heads[senders < n], senders[senders < n]
+        reduce_steps.append(wrht.Step("reduce", i - 1, TransferBatch.from_arrays(
+            senders, heads, CCW, d_bits, wavelength=0, check=False
+        )))
     bcast_steps = [
-        wrht.Step("broadcast", s.level, [
-            Transfer(t.dst, t.src, CW, d_bits, wavelength=0) for t in s.transfers
-        ])
+        wrht.Step("broadcast", s.level, TransferBatch.from_arrays(
+            s.transfers.dst, s.transfers.src, CW, d_bits, wavelength=0, check=False
+        ))
         for s in reversed(reduce_steps)
     ]
     return reduce_steps + bcast_steps
@@ -114,37 +122,40 @@ def hring_allreduce_schedule(n: int, g: int, d_bits: float) -> list[wrht.Step]:
     inter-group ring all-reduce among the g-group heads on each d/g shard,
     intra-group all-gather.  Intra wrap-links ride the CCW fiber; all other
     hops ride CW, so one wavelength per fiber suffices."""
+    if g < 2:
+        raise ValueError("H-Ring needs group size g >= 2 (g=1 degenerates to "
+                         "a self-transfer on the intra wrap link)")
     if n % g:
         raise ValueError("H-Ring needs g | N")
     n_groups = n // g
     steps: list[wrht.Step] = []
 
     def intra_step(chunk_bits: float) -> wrht.Step:
-        transfers = []
-        for head in range(0, n, g):
-            for j in range(g - 1):
-                transfers.append(
-                    Transfer(head + j, head + j + 1, CW, chunk_bits, wavelength=0)
-                )
-            transfers.append(  # wrap link of the logical intra ring
-                Transfer(head + g - 1, head, CCW, chunk_bits, wavelength=0)
-            )
-        return wrht.Step("intra", 0, transfers)
+        heads = np.arange(0, n, g)
+        fwd_src = (heads[:, None] + np.arange(g - 1)[None, :]).ravel()
+        src = np.concatenate([fwd_src, heads + g - 1])
+        dst = np.concatenate([fwd_src + 1, heads])
+        direction = np.concatenate([
+            np.full(fwd_src.size, CW),
+            np.full(heads.size, CCW),  # wrap link of the logical intra ring
+        ])
+        return wrht.Step("intra", 0, TransferBatch.from_arrays(
+            src, dst, direction, chunk_bits, wavelength=0, check=False
+        ))
 
     def inter_step(chunk_bits: float) -> wrht.Step:
-        transfers = []
-        for k in range(n_groups - 1):
-            transfers.append(Transfer(k * g, (k + 1) * g, CW, chunk_bits, wavelength=0))
+        heads = np.arange(n_groups) * g
         # wrap link closes the logical ring CW through the last group's span
-        transfers.append(Transfer((n_groups - 1) * g, 0, CW, chunk_bits, wavelength=0))
-        return wrht.Step("inter", 1, transfers)
+        dst = np.roll(heads, -1)
+        return wrht.Step("inter", 1, TransferBatch.from_arrays(
+            heads, dst, CW, chunk_bits, wavelength=0, check=False
+        ))
 
-    for _ in range(g - 1):                      # intra reduce-scatter
-        steps.append(intra_step(d_bits / g))
-    for _ in range(2 * (n_groups - 1)):          # inter ring all-reduce
-        steps.append(inter_step((d_bits / g) / n_groups))
-    for _ in range(g - 1):                      # intra all-gather
-        steps.append(intra_step(d_bits / g))
+    intra = intra_step(d_bits / g)
+    inter = inter_step((d_bits / g) / n_groups)
+    steps.extend([intra] * (g - 1))                 # intra reduce-scatter
+    steps.extend([inter] * (2 * (n_groups - 1)))    # inter ring all-reduce
+    steps.extend([intra] * (g - 1))                 # intra all-gather
     return steps
 
 
@@ -157,9 +168,11 @@ import functools
 
 @functools.lru_cache(maxsize=256)
 def _cached_wrht_schedule(n: int, w: int, m: int | None) -> wrht.WRHTSchedule:
-    """WRHT schedule structure is independent of the payload size — build
-    (and validate, for n small enough that it is cheap) once per (n, w, m)."""
-    return wrht.build_schedule(n, w, 1.0, m=m, validate=n <= 1024)
+    """WRHT schedule structure is independent of the payload size — build and
+    fully validate (structural + semantic, both vectorized) once per
+    (n, w, m).  The historical ``n <= 1024`` validation cap is gone: the
+    array-based validator handles N=32768 in well under a second."""
+    return wrht.build_schedule(n, w, 1.0, m=m, validate=True)
 
 
 def run_optical(
@@ -182,9 +195,10 @@ def run_optical(
         # every one of the 2(N-1) steps is the identical neighbour pattern:
         # validate/time one representative step and scale (exact, since the
         # per-step payload d/N is constant).
-        one = [wrht.Step("ring", 0, [
-            Transfer(i, (i + 1) % n, CW, d_bits / n, wavelength=0) for i in range(n)
-        ])]
+        src = np.arange(n)
+        one = [wrht.Step("ring", 0, TransferBatch.from_arrays(
+            src, (src + 1) % n, CW, d_bits / n, wavelength=0, check=False
+        ))]
         r = simulate_steps("ring", one, ring, d_bits)
         k = 2 * (n - 1)
         return SimResult("ring", n, d_bits, k, r.serialization_s * k,
@@ -192,8 +206,13 @@ def run_optical(
     if algorithm == "bt":
         return simulate_steps("bt", bt_allreduce_schedule(n, d_bits), ring, d_bits)
     if algorithm == "hring":
-        while n % g:
+        g = min(g, n)
+        while g > 1 and n % g:
             g -= 1
+        if g < 2:
+            # prime (or tiny) N admits no proper grouping: H-Ring degenerates
+            # to the flat ring; report that schedule under the hring label
+            return replace(run_optical("ring", n, d_bits, p), algorithm="hring")
         sched = hring_allreduce_schedule(2 * g, g, d_bits)  # one intra + inter template
         intra = simulate_steps("hring-intra", [sched[0]], Ring(2 * g, ring.w,
                                bandwidth_bps=ring.bandwidth_bps,

@@ -14,7 +14,9 @@ This module is pure Python/NumPy — it backs the schedule builder, the RWA
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterator
+from typing import Iterable, Iterator
+
+import numpy as np
 
 CW = +1   # clockwise
 CCW = -1  # counter-clockwise
@@ -66,6 +68,135 @@ def path_segments(src: int, dst: int, n: int, direction: int) -> Iterator[int]:
         else:
             node = (node - 1) % n
             yield node
+
+
+class TransferBatch:
+    """Structure-of-arrays schedule step: the batch counterpart of ``Transfer``.
+
+    One row per directed transmission; columns are NumPy arrays so that RWA,
+    validation and data-flow simulation run as array programs instead of
+    per-object Python loops.  ``wavelength`` is ``-1`` until RWA assigns it.
+
+    The batch is treated as immutable by convention: RWA returns a new batch
+    via :meth:`with_wavelengths` rather than mutating in place, so a batch may
+    safely be shared between schedule steps (the flat-ring schedule reuses one
+    batch for all ``2(N-1)`` identical steps).
+    """
+
+    __slots__ = ("src", "dst", "direction", "bits", "wavelength")
+
+    def __init__(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        direction: np.ndarray,
+        bits: np.ndarray,
+        wavelength: np.ndarray,
+    ) -> None:
+        self.src = src
+        self.dst = dst
+        self.direction = direction
+        self.bits = bits
+        self.wavelength = wavelength
+        if not (len(src) == len(dst) == len(direction) == len(bits) == len(wavelength)):
+            raise ValueError("TransferBatch columns must have equal length")
+
+    # -------------------------------------------------- constructors
+    @classmethod
+    def from_arrays(
+        cls,
+        src,
+        dst,
+        direction,
+        bits,
+        wavelength=None,
+        check: bool = True,
+    ) -> "TransferBatch":
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        direction = np.broadcast_to(
+            np.asarray(direction, dtype=np.int64), src.shape
+        ).copy()
+        bits = np.broadcast_to(np.asarray(bits, dtype=np.float64), src.shape).copy()
+        if wavelength is None:
+            wavelength = np.full(src.shape, -1, dtype=np.int64)
+        else:
+            wavelength = np.broadcast_to(
+                np.asarray(wavelength, dtype=np.int64), src.shape
+            ).copy()
+        if check and src.size:
+            if not np.isin(direction, (CW, CCW)).all():
+                raise ValueError("direction must be +1/-1")
+            if (src == dst).any():
+                raise ValueError("transfer src == dst")
+        return cls(src, dst, direction, bits, wavelength)
+
+    @classmethod
+    def from_transfers(cls, transfers: Iterable["Transfer"]) -> "TransferBatch":
+        ts = list(transfers)
+        return cls.from_arrays(
+            [t.src for t in ts],
+            [t.dst for t in ts],
+            [t.direction for t in ts],
+            [t.bits for t in ts],
+            [t.wavelength for t in ts],
+            check=False,  # Transfer.__post_init__ already validated each row
+        )
+
+    @classmethod
+    def empty(cls) -> "TransferBatch":
+        return cls.from_arrays([], [], [], [], check=False)
+
+    @classmethod
+    def coerce(cls, transfers) -> "TransferBatch":
+        if isinstance(transfers, cls):
+            return transfers
+        return cls.from_transfers(transfers)
+
+    # -------------------------------------------------- views
+    def __len__(self) -> int:
+        return int(self.src.size)
+
+    def __getitem__(self, i: int) -> "Transfer":
+        return Transfer(
+            int(self.src[i]), int(self.dst[i]), int(self.direction[i]),
+            float(self.bits[i]), int(self.wavelength[i]),
+        )
+
+    def __iter__(self) -> Iterator["Transfer"]:
+        for i in range(len(self)):
+            yield self[i]
+
+    def to_transfers(self) -> list["Transfer"]:
+        return list(self)
+
+    def with_wavelengths(self, wavelength: np.ndarray) -> "TransferBatch":
+        return TransferBatch(
+            self.src, self.dst, self.direction, self.bits,
+            np.asarray(wavelength, dtype=np.int64),
+        )
+
+    # -------------------------------------------------- geometry
+    def arcs(self, n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Each directed lightpath as a ring arc.
+
+        Returns ``(lane, start, hops)``: ``lane`` 0 for CW / 1 for CCW (the
+        two fibers are independent), and the path covers directed segments
+        ``start, start+1, ..., start+hops-1 (mod n)`` — the exact segment ids
+        of :func:`path_segments` for either direction.
+        """
+        cw = self.direction == CW
+        lane = np.where(cw, 0, 1)
+        hops = np.where(cw, (self.dst - self.src) % n, (self.src - self.dst) % n)
+        start = np.where(cw, self.src, self.dst)
+        return lane, start, hops
+
+    @property
+    def max_wavelength(self) -> int:
+        return -1 if len(self) == 0 else int(self.wavelength.max())
+
+    def __repr__(self) -> str:
+        return f"TransferBatch(len={len(self)})"
 
 
 @dataclass

@@ -3,9 +3,25 @@
 The paper (Sec. III-C-2) notes that within each WRHT subgroup the
 communications must be wavelength-conflict-free, and that classic greedy
 assignment (First Fit / Best Fit) suffices because different subgroups never
-share ring segments.  We implement First Fit over the directed-segment
-occupancy map, plus a validator used by both the simulator and the property
-tests.
+share ring segments.
+
+The production implementation here is array-based: each directed lightpath is
+a ring arc ``(start, hops)`` on one of the two fiber lanes, per-segment
+occupancy is a ``uint64`` bitmask (bit λ set iff wavelength λ is busy on that
+segment), and First Fit is "OR the masks along the arc, take the lowest clear
+bit".  Two further structural facts make it effectively free at scale:
+
+* arcs on the same lane conflict only if they lie in the same *covered run*
+  (maximal contiguous union of arcs), so the greedy decomposes exactly into
+  independent per-run subproblems — computed with one difference-array sweep;
+* WRHT steps consist of hundreds of translated copies of the same subgroup
+  pattern, so identical runs (same relative arcs in the same processing
+  order) are solved once and the assignment is broadcast to every copy.
+
+Assignment order is longest-path-first with ties broken by input order —
+identical to :func:`first_fit_assign_reference` (the original per-object
+greedy, kept verbatim), and enforced bit-for-bit by the golden-equivalence
+test in ``tests/test_rwa_equivalence.py``.
 """
 
 from __future__ import annotations
@@ -13,14 +29,20 @@ from __future__ import annotations
 from dataclasses import replace
 from typing import Sequence
 
-from .topology import Transfer, path_segments
+import numpy as np
+
+from .topology import Transfer, TransferBatch, path_segments
 
 
 class WavelengthConflictError(ValueError):
     pass
 
 
-def first_fit_assign(
+# ---------------------------------------------------------------------------
+# Reference implementation (original greedy, kept as the golden oracle).
+# ---------------------------------------------------------------------------
+
+def first_fit_assign_reference(
     transfers: Sequence[Transfer], n: int, w: int
 ) -> list[Transfer]:
     """Assign wavelengths greedily (First Fit, [18] in the paper).
@@ -54,8 +76,207 @@ def first_fit_assign(
     return [t for t in assigned if t is not None]
 
 
-def validate_no_conflicts(transfers: Sequence[Transfer], n: int, w: int) -> None:
-    """Check wavelength-conflict-freedom of an already-assigned step."""
+# ---------------------------------------------------------------------------
+# Vectorized implementation.
+# ---------------------------------------------------------------------------
+
+def _solve_first_fit(
+    rel_start: list[int],
+    hops: list[int],
+    w: int,
+    seg_count: int,
+    circular: bool,
+) -> np.ndarray:
+    """First-Fit one conflict component, arcs given in processing order.
+
+    ``rel_start``/``hops`` are run-local coordinates: unless ``circular``
+    (the run covers the whole ring), every arc is the contiguous slice
+    ``[s, s+h)`` of a ``seg_count``-long occupancy array, so the inner OR /
+    mark are single NumPy slice ops — O(1) NumPy calls per segment range.
+    """
+    words = (w + 63) // 64
+    occ = np.zeros((words, seg_count), dtype=np.uint64)
+    full = (1 << w) - 1
+    lam_out = np.empty(len(rel_start), dtype=np.int64)
+    for i, (s, h) in enumerate(zip(rel_start, hops)):
+        e = s + h
+        used = 0
+        for j in range(words):
+            row = occ[j]
+            if e <= seg_count:
+                u = int(np.bitwise_or.reduce(row[s:e]))
+            else:  # circular run: arc wraps the origin
+                u = int(np.bitwise_or.reduce(row[s:])) | int(
+                    np.bitwise_or.reduce(row[: e - seg_count])
+                )
+            used |= u << (64 * j)
+        free = ~used & full
+        if free == 0:
+            raise WavelengthConflictError(
+                f"step needs more than the {w} available wavelengths "
+                f"(arc start={s} hops={h})"
+            )
+        lam = (free & -free).bit_length() - 1
+        word, bit = divmod(lam, 64)
+        mask = np.uint64(1 << bit)
+        row = occ[word]
+        if e <= seg_count:
+            row[s:e] |= mask
+        else:
+            row[s:] |= mask
+            row[: e - seg_count] |= mask
+        lam_out[i] = lam
+    return lam_out
+
+
+def _lane_components(
+    start: np.ndarray, hops: np.ndarray, n: int
+) -> tuple[np.ndarray, np.ndarray, bool]:
+    """Label conflict components of same-lane arcs via a coverage sweep.
+
+    Returns ``(comp_id, base, circular)``: per-arc component id, per-component
+    base segment (run start, so local coords ``(seg - base) % n`` are
+    contiguous), and whether the single run covers the entire ring (only then
+    can local arcs wrap).
+    """
+    diff = np.zeros(n + 1, dtype=np.int64)
+    end = start + hops
+    wraps = end > n
+    np.add.at(diff, start, 1)
+    np.add.at(diff, np.where(wraps, n, end), -1)
+    if wraps.any():
+        diff[0] += int(wraps.sum())
+        np.add.at(diff, end[wraps] - n, -1)
+    covered = np.cumsum(diff[:n]) > 0
+    if covered.all():
+        return np.zeros(len(start), dtype=np.int64), np.zeros(1, dtype=np.int64), True
+    run_start = covered & ~np.roll(covered, 1)
+    ids = np.cumsum(run_start) - 1
+    n_runs = int(ids[-1]) + 1
+    # a run straddling the origin has its start late in the array; segments
+    # before the first run_start belong to it (cumsum gave them id -1)
+    ids = np.where(ids < 0, n_runs - 1, ids)
+    bases = np.flatnonzero(run_start)
+    return ids[start], bases, False
+
+
+def first_fit_assign(transfers, n: int, w: int) -> TransferBatch:
+    """Vectorized First Fit: bit-identical to the reference greedy.
+
+    Accepts a :class:`TransferBatch` (or any ``Transfer`` sequence, coerced)
+    and returns a new batch with wavelengths assigned.  Raises
+    :exc:`WavelengthConflictError` iff the reference would.
+    """
+    batch = TransferBatch.coerce(transfers)
+    t_count = len(batch)
+    if t_count == 0:
+        return batch
+    lane, start, hops = batch.arcs(n)
+    order = np.argsort(-hops, kind="stable")  # longest-first, stable ties
+
+    lam = np.empty(t_count, dtype=np.int64)
+    if t_count <= 32:
+        # tiny step: component machinery costs more than it saves
+        sel = order.tolist()
+        st = [int(start[i]) for i in sel]
+        hp = [int(hops[i]) for i in sel]
+        ln = [int(lane[i]) for i in sel]
+        for lane_id in (0, 1):
+            idxs = [k for k, l in enumerate(ln) if l == lane_id]
+            if not idxs:
+                continue
+            sub = _solve_first_fit(
+                [st[k] for k in idxs], [hp[k] for k in idxs], w, n, True
+            )
+            for k, v in zip(idxs, sub.tolist()):
+                lam[sel[k]] = v
+        return batch.with_wavelengths(lam)
+
+    # ---- component labeling per lane (the two fibers never interact) ----
+    comp = np.empty(t_count, dtype=np.int64)
+    base = np.empty(t_count, dtype=np.int64)
+    circular_lane = [False, False]
+    next_comp = 0
+    for lane_id in (0, 1):
+        sel = lane == lane_id
+        if not sel.any():
+            continue
+        ids, bases, circ = _lane_components(start[sel], hops[sel], n)
+        comp[sel] = ids + next_comp
+        base[sel] = bases[ids]
+        circular_lane[lane_id] = circ
+        next_comp += len(bases)
+
+    rel = (start - base) % n
+
+    # ---- group arcs by component, preserving global processing order ----
+    comp_in_order = comp[order]
+    grouped = order[np.argsort(comp_in_order, kind="stable")]
+    comp_sorted = comp[grouped]
+    bounds = np.flatnonzero(np.r_[True, comp_sorted[1:] != comp_sorted[:-1]])
+    bounds = np.append(bounds, t_count)
+
+    # ---- dedupe translated components, solve one representative each ----
+    cache: dict[tuple, np.ndarray] = {}
+    for b, e in zip(bounds[:-1].tolist(), bounds[1:].tolist()):
+        members = grouped[b:e]
+        rs = rel[members]
+        hp = hops[members]
+        circ = circular_lane[int(lane[members[0]])]
+        key = (circ, rs.tobytes(), hp.tobytes())
+        sub = cache.get(key)
+        if sub is None:
+            seg_count = n if circ else int((rs + hp).max())
+            sub = _solve_first_fit(rs.tolist(), hp.tolist(), w, seg_count, circ)
+            cache[key] = sub
+        lam[members] = sub
+    return batch.with_wavelengths(lam)
+
+
+def validate_no_conflicts(transfers, n: int, w: int) -> None:
+    """Check wavelength-conflict-freedom of an already-assigned step.
+
+    Vectorized: expand every transfer into its directed segments, build
+    ``(lane, segment, λ)`` keys, sort, and look for adjacent duplicates.
+    """
+    batch = TransferBatch.coerce(transfers)
+    if len(batch) == 0:
+        return
+    lam = batch.wavelength
+    if (lam < 0).any():
+        i = int(np.flatnonzero(lam < 0)[0])
+        raise WavelengthConflictError(f"unassigned wavelength on {batch[i]}")
+    if (lam >= w).any():
+        i = int(np.flatnonzero(lam >= w)[0])
+        raise WavelengthConflictError(
+            f"wavelength {int(lam[i])} out of range (w={w})"
+        )
+    lane, start, hops = batch.arcs(n)
+    total = int(hops.sum())
+    if total == 0:
+        return
+    tid = np.repeat(np.arange(len(batch)), hops)
+    first = np.cumsum(hops) - hops
+    offs = np.arange(total) - first[tid]
+    seg = (start[tid] + offs) % n
+    key = (lane[tid] * n + seg) * (int(lam.max()) + 1) + lam[tid]
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    dup = np.flatnonzero(ks[1:] == ks[:-1])
+    if dup.size:
+        a, b = tid[order[dup[0]]], tid[order[dup[0] + 1]]
+        ta, tb = batch[int(a)], batch[int(b)]
+        raise WavelengthConflictError(
+            f"conflict on dir={ta.direction} "
+            f"segment={int(seg[order[dup[0]]])} lambda={ta.wavelength}: "
+            f"{ta.src}->{ta.dst} vs {tb.src}->{tb.dst}"
+        )
+
+
+def validate_no_conflicts_reference(
+    transfers: Sequence[Transfer], n: int, w: int
+) -> None:
+    """Original dict-based validator (oracle for the equivalence tests)."""
     occupancy: dict[tuple[int, int, int], Transfer] = {}
     for t in transfers:
         if t.wavelength < 0:
@@ -75,5 +296,7 @@ def validate_no_conflicts(transfers: Sequence[Transfer], n: int, w: int) -> None
             occupancy[key] = t
 
 
-def wavelengths_used(transfers: Sequence[Transfer]) -> int:
+def wavelengths_used(transfers) -> int:
+    if isinstance(transfers, TransferBatch):
+        return 1 + transfers.max_wavelength
     return 0 if not transfers else 1 + max(t.wavelength for t in transfers)

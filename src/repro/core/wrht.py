@@ -24,6 +24,11 @@ Total steps: ``2⌈log_m N⌉`` (single root) or ``2⌈log_m N⌉ − 1`` (final
 all-to-all) — asserted against the closed forms in ``step_models`` by the
 test-suite.  ``m = 2w + 1`` is the Lemma-1 optimum: each fiber then carries
 exactly ``w`` concurrent intra-group lightpaths.
+
+Steps are represented as :class:`~repro.core.topology.TransferBatch`
+structure-of-arrays (see DESIGN.md §1); transfer generation, RWA, conflict
+validation and the semantic data-flow check are all array programs, so
+building *and fully validating* a schedule is cheap even at N=32768.
 """
 
 from __future__ import annotations
@@ -31,19 +36,29 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
-from .topology import CCW, CW, Ring, Transfer, shortest_direction
-from .wavelength import WavelengthConflictError, first_fit_assign, validate_no_conflicts
+import numpy as np
+
+from .topology import CCW, CW, Ring, TransferBatch
+from .wavelength import (
+    WavelengthConflictError,
+    first_fit_assign,
+    first_fit_assign_reference,
+    validate_no_conflicts,
+)
 
 
 @dataclass
 class Step:
     kind: str                      # "reduce" | "alltoall" | "broadcast"
     level: int                     # tree level (alltoall: top level)
-    transfers: list[Transfer]
+    transfers: TransferBatch
+
+    def __post_init__(self) -> None:
+        self.transfers = TransferBatch.coerce(self.transfers)
 
     @property
     def wavelengths(self) -> int:
-        return 0 if not self.transfers else 1 + max(t.wavelength for t in self.transfers)
+        return 1 + self.transfers.max_wavelength if len(self.transfers) else 0
 
 
 @dataclass
@@ -73,28 +88,72 @@ def optimal_group_size(w: int) -> int:
     return 2 * w + 1
 
 
-def _chunks(seq: list[int], m: int) -> list[list[int]]:
-    return [seq[i : i + m] for i in range(0, len(seq), m)]
+def _assigner(rwa: str):
+    if rwa == "fast":
+        return first_fit_assign
+    if rwa == "reference":
+        return lambda batch, n, w: TransferBatch.from_transfers(
+            first_fit_assign_reference(TransferBatch.coerce(batch).to_transfers(), n, w)
+        )
+    raise ValueError(f"unknown rwa {rwa!r} (expected 'fast' or 'reference')")
 
 
-def _alltoall_fits(reps: list[int], ring: Ring, d_bits: float) -> list[Transfer] | None:
+def _level_transfers(
+    active: np.ndarray, m: int, d_bits: float, broadcast: bool
+) -> tuple[TransferBatch, np.ndarray]:
+    """Member↔representative transfers for one tree level, as arrays.
+
+    Row order matches the original per-object builder exactly (group-major,
+    member position order, representative skipped) so that stable
+    longest-first RWA ties break identically.
+    """
+    count = active.size
+    n_groups = -(-count // m)
+    idx = np.arange(count)
+    gi = idx // m
+    pos = idx - gi * m
+    gsize = np.full(n_groups, m, dtype=np.int64)
+    gsize[-1] = count - (n_groups - 1) * m
+    mid = gsize // 2
+    reps = active[np.arange(n_groups) * m + mid]
+    member = pos != mid[gi]
+    members = active[member]
+    rep_for = reps[gi[member]]
+    # left-of-rep members transmit clockwise, right-of-rep counter-clockwise
+    # (two Rx sets per node, Sec. III-B); broadcast reverses the paths.
+    left = pos[member] < mid[gi[member]]
+    if broadcast:
+        batch = TransferBatch.from_arrays(
+            rep_for, members, np.where(left, CCW, CW), d_bits, check=False
+        )
+    else:
+        batch = TransferBatch.from_arrays(
+            members, rep_for, np.where(left, CW, CCW), d_bits, check=False
+        )
+    return batch, reps
+
+
+def _alltoall_fits(
+    reps: np.ndarray, ring: Ring, d_bits: float, rwa: str = "fast"
+) -> TransferBatch | None:
     """Try to schedule a one-step all-to-all among ``reps``; None if > w."""
-    if len(reps) < 2:
+    r = reps.size
+    if r < 2:
         return None
     # Paper Sec. III-C-2 / [16]: all-to-all among m* ring nodes needs
     # ⌈m*²/8⌉ wavelengths.  Cheap necessary condition before running RWA —
     # also keeps the O(r²) enumeration off the N=4096 level-0 case.
-    if math.ceil(len(reps) ** 2 / 8) > ring.w:
+    if math.ceil(r ** 2 / 8) > ring.w:
         return None
-    transfers = []
-    for src in reps:
-        for dst in reps:
-            if src == dst:
-                continue
-            direction = shortest_direction(src, dst, ring.n)
-            transfers.append(Transfer(src, dst, direction, d_bits))
+    src, dst = np.meshgrid(reps, reps, indexing="ij")
+    off = ~np.eye(r, dtype=bool)
+    src, dst = src[off], dst[off]
+    cw = (dst - src) % ring.n <= (src - dst) % ring.n  # shortest_direction
+    batch = TransferBatch.from_arrays(
+        src, dst, np.where(cw, CW, CCW), d_bits, check=False
+    )
     try:
-        return first_fit_assign(transfers, ring.n, ring.w)
+        return _assigner(rwa)(batch, ring.n, ring.w)
     except WavelengthConflictError:
         return None
 
@@ -108,8 +167,15 @@ def build_schedule(
     bandwidth_bps: float = 40e9,
     reconfig_delay_s: float = 25e-6,
     validate: bool = True,
+    rwa: str = "fast",
 ) -> WRHTSchedule:
-    """Construct and validate the full WRHT schedule for an N-node ring."""
+    """Construct and validate the full WRHT schedule for an N-node ring.
+
+    ``rwa`` selects the wavelength assigner: ``"fast"`` (vectorized bitmask
+    First Fit) or ``"reference"`` (original per-object greedy) — the two are
+    bit-identical; the knob exists for the equivalence test and the
+    schedule-build benchmark.
+    """
     if n < 1:
         raise ValueError("need >= 1 node")
     ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps, reconfig_delay_s=reconfig_delay_s)
@@ -121,57 +187,36 @@ def build_schedule(
     # ⌈(m-1)/2⌉ wavelengths per side; beyond m = 2w+1 the step cannot be
     # conflict-free, so clamp (callers probing larger m get the feasible max).
     m = min(m, optimal_group_size(w))
+    assign = _assigner(rwa)
 
     sched = WRHTSchedule(n=n, w=w, m=m)
-    sched.levels.append(list(range(n)))
+    active = np.arange(n, dtype=np.int64)
+    sched.levels.append(active.tolist())
     if n == 1:
         return sched
 
     # ---------------- reduce stage ----------------
-    reduce_groups: list[list[list[int]]] = []  # per level: list of groups
+    reduce_actives: list[np.ndarray] = []  # the grouping input per level
     level = 0
-    while len(sched.levels[-1]) > 1:
-        active = sched.levels[-1]
+    while active.size > 1:
         if allow_alltoall:
-            a2a = _alltoall_fits(active, ring, d_bits)
+            a2a = _alltoall_fits(active, ring, d_bits, rwa)
             if a2a is not None:
                 sched.steps.append(Step("alltoall", level, a2a))
                 break
-        groups = _chunks(active, m)
-        transfers: list[Transfer] = []
-        reps: list[int] = []
-        for g in groups:
-            mid = len(g) // 2
-            rep = g[mid]
-            reps.append(rep)
-            for i, node in enumerate(g):
-                if node == rep:
-                    continue
-                # left-of-rep members transmit clockwise, right-of-rep
-                # counter-clockwise (two Rx sets per node, Sec. III-B).
-                direction = CW if i < mid else CCW
-                transfers.append(Transfer(node, rep, direction, d_bits))
-        assigned = first_fit_assign(transfers, ring.n, ring.w)
-        sched.steps.append(Step("reduce", level, assigned))
-        reduce_groups.append(groups)
-        sched.levels.append(reps)
+        batch, reps = _level_transfers(active, m, d_bits, broadcast=False)
+        sched.steps.append(Step("reduce", level, assign(batch, ring.n, ring.w)))
+        reduce_actives.append(active)
+        active = reps
+        sched.levels.append(active.tolist())
         level += 1
 
     # ---------------- broadcast stage ----------------
     # Reverse of the reduce tree (the all-to-all step, if any, already left
     # every surviving representative with the full reduction).
-    for level in range(len(reduce_groups) - 1, -1, -1):
-        transfers = []
-        for g in reduce_groups[level]:
-            mid = len(g) // 2
-            rep = g[mid]
-            for i, node in enumerate(g):
-                if node == rep:
-                    continue
-                direction = CCW if i < mid else CW  # reversed paths
-                transfers.append(Transfer(rep, node, direction, d_bits))
-        assigned = first_fit_assign(transfers, ring.n, ring.w)
-        sched.steps.append(Step("broadcast", level, assigned))
+    for level in range(len(reduce_actives) - 1, -1, -1):
+        batch, _ = _level_transfers(reduce_actives[level], m, d_bits, broadcast=True)
+        sched.steps.append(Step("broadcast", level, assign(batch, ring.n, ring.w)))
 
     if validate:
         validate_schedule(sched, ring)
@@ -186,35 +231,65 @@ def validate_schedule(sched: WRHTSchedule, ring: Ring | None = None) -> None:
     ring = ring or Ring(max(sched.n, 2), sched.w)
     for step in sched.steps:
         validate_no_conflicts(step.transfers, ring.n, ring.w)
-    masks = simulate_contribution_masks(sched)
-    full = (1 << sched.n) - 1
-    bad = [i for i, s in enumerate(masks) if s != full]
+    words = _contribution_words(sched)
+    bad = _incomplete_nodes(words, sched.n)
     if bad:
         raise AssertionError(
             f"all-reduce semantics violated: nodes {bad[:8]} missing contributions"
         )
 
 
+def _contribution_words(sched: WRHTSchedule) -> np.ndarray:
+    """Data-flow simulation over uint64 bitset rows (one row per node)."""
+    n = sched.n
+    n_words = (n + 63) // 64
+    state = np.zeros((n, n_words), dtype=np.uint64)
+    ids = np.arange(n)
+    state[ids, ids // 64] = np.left_shift(
+        np.uint64(1), (ids % 64).astype(np.uint64)
+    )
+    for step in sched.steps:
+        batch = step.transfers
+        if len(batch) == 0:
+            continue
+        order = np.argsort(batch.dst, kind="stable")
+        srcs, dsts = batch.src[order], batch.dst[order]
+        gathered = state[srcs]  # all reads precede all writes within a step
+        bounds = np.flatnonzero(np.r_[True, dsts[1:] != dsts[:-1]])
+        if bounds.size == dsts.size:
+            # every receiver gets exactly one transfer (e.g. broadcast):
+            # reduceat over singleton groups is pathologically slow, skip it
+            merged, receivers = gathered, dsts
+        else:
+            merged = np.bitwise_or.reduceat(gathered, bounds, axis=0)
+            receivers = dsts[bounds]
+        if step.kind == "broadcast":
+            # broadcast overwrites with the rep's full value
+            state[receivers] = merged
+        else:
+            state[receivers] |= merged
+    return state
+
+
+def _incomplete_nodes(words: np.ndarray, n: int) -> list[int]:
+    full = np.full(words.shape[1], np.uint64(0xFFFFFFFFFFFFFFFF))
+    tail = n % 64
+    if tail:
+        full[-1] = np.uint64((1 << tail) - 1)
+    return np.flatnonzero((words != full).any(axis=1)).tolist()
+
+
 def simulate_contribution_masks(sched: WRHTSchedule) -> list[int]:
-    """Data-flow simulation: node i starts with bit i; transfers OR bitmasks.
+    """Per-node contribution bitmask: node i starts with bit i; transfers OR.
 
     A correct all-reduce leaves every node with all n bits set (summation is
     a commutative-associative reduction, so bit-union tracks it faithfully).
-    Bitmask ints keep this O(n·steps) with tiny constants even at n=4096.
     """
-    state: list[int] = [1 << i for i in range(sched.n)]
-    for step in sched.steps:
-        snapshot = list(state)  # ints are immutable: O(n) snapshot
-        incoming: dict[int, int] = {}
-        for t in step.transfers:
-            incoming[t.dst] = incoming.get(t.dst, 0) | snapshot[t.src]
-        for dst, data in incoming.items():
-            if step.kind == "broadcast":
-                # broadcast overwrites with the rep's full value
-                state[dst] = data
-            else:
-                state[dst] |= data
-    return state
+    words = _contribution_words(sched)
+    return [
+        int.from_bytes(words[i].astype("<u8").tobytes(), "little")
+        for i in range(sched.n)
+    ]
 
 
 def simulate_contributions(sched: WRHTSchedule) -> list[frozenset[int]]:

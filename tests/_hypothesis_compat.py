@@ -1,0 +1,35 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+``from _hypothesis_compat import given, settings, st`` behaves exactly like
+importing from ``hypothesis`` when it is available (declared in
+``requirements-dev.txt`` / ``pyproject.toml [dev]``).  When it is missing,
+the decorators mark the property tests as skipped instead of erroring the
+whole module at collection time, so the deterministic tests in the same file
+still run.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def _skip_decorator(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    given = settings = _skip_decorator
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies``: builders are only ever
+        evaluated inside decorator argument lists, so they can return None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

@@ -1,0 +1,111 @@
+"""Golden equivalence: vectorized bitmask RWA == original per-object greedy.
+
+The array engine (DESIGN.md §2) must be *bit-identical* to
+``first_fit_assign_reference`` — same wavelengths, same failures — on any
+input, including the randomized sets here and whole WRHT schedules.  Also
+covers the scales the old engine made infeasible (N=4096 full validation).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import wrht
+from repro.core.topology import CCW, CW, Transfer, TransferBatch
+from repro.core.wavelength import (
+    WavelengthConflictError,
+    first_fit_assign,
+    first_fit_assign_reference,
+    validate_no_conflicts,
+    validate_no_conflicts_reference,
+)
+
+
+def _random_batch(rng, n, t_count):
+    src = rng.integers(0, n, t_count)
+    dst = (src + rng.integers(1, n, t_count)) % n
+    direction = rng.choice([CW, CCW], t_count)
+    return TransferBatch.from_arrays(src, dst, direction, 1.0)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_golden_equivalence_random_sets(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(40):
+        n = int(rng.integers(4, 200))
+        t_count = int(rng.integers(1, 120))
+        w = int(rng.integers(1, 66))  # crosses the single-uint64-word boundary
+        batch = _random_batch(rng, n, t_count)
+        ref_lams = ref_err = None
+        try:
+            ref_lams = [t.wavelength
+                        for t in first_fit_assign_reference(batch.to_transfers(), n, w)]
+        except WavelengthConflictError as e:
+            ref_err = e
+        if ref_err is not None:
+            with pytest.raises(WavelengthConflictError):
+                first_fit_assign(batch, n, w)
+        else:
+            fast = first_fit_assign(batch, n, w)
+            assert fast.wavelength.tolist() == ref_lams
+
+
+def test_golden_equivalence_whole_wrht_schedules():
+    for n, w in [(15, 2), (31, 3), (100, 8), (257, 8), (1000, 64)]:
+        fast = wrht.build_schedule(n, w, 1.0, rwa="fast")
+        ref = wrht.build_schedule(n, w, 1.0, rwa="reference")
+        assert [s.kind for s in fast.steps] == [s.kind for s in ref.steps]
+        for a, b in zip(fast.steps, ref.steps):
+            assert a.transfers.wavelength.tolist() == b.transfers.wavelength.tolist()
+
+
+def test_overbudget_raises_like_reference():
+    # 10 identical full-overlap paths but only 4 wavelengths
+    batch = TransferBatch.from_arrays([0] * 10, [5] * 10, CW, 1.0)
+    with pytest.raises(WavelengthConflictError):
+        first_fit_assign_reference(batch.to_transfers(), 16, 4)
+    with pytest.raises(WavelengthConflictError):
+        first_fit_assign(batch, 16, 4)
+
+
+def test_validator_matches_reference_on_random_assignments():
+    rng = np.random.default_rng(7)
+    for _ in range(60):
+        n = int(rng.integers(4, 64))
+        w = int(rng.integers(1, 9))
+        batch = _random_batch(rng, n, int(rng.integers(1, 40)))
+        batch = batch.with_wavelengths(rng.integers(0, w, len(batch)))
+        ref_ok = fast_ok = True
+        try:
+            validate_no_conflicts_reference(batch.to_transfers(), n, w)
+        except WavelengthConflictError:
+            ref_ok = False
+        try:
+            validate_no_conflicts(batch, n, w)
+        except WavelengthConflictError:
+            fast_ok = False
+        assert ref_ok == fast_ok
+
+
+def test_validator_rejects_out_of_range_and_unassigned():
+    t = TransferBatch.from_transfers([Transfer(0, 3, CW, 1.0, wavelength=5)])
+    with pytest.raises(WavelengthConflictError):
+        validate_no_conflicts(t, n=8, w=4)
+    u = TransferBatch.from_transfers([Transfer(0, 3, CW, 1.0)])
+    with pytest.raises(WavelengthConflictError):
+        validate_no_conflicts(u, n=8, w=4)
+
+
+def test_batch_roundtrip_preserves_transfers():
+    ts = [Transfer(0, 3, CW, 2.0, 1), Transfer(7, 2, CCW, 4.0, 0)]
+    batch = TransferBatch.from_transfers(ts)
+    assert batch.to_transfers() == ts
+    assert len(batch) == 2 and batch.max_wavelength == 1
+
+
+def test_full_build_and_validate_at_4096():
+    """End-to-end validated build at a scale the old engine capped out on."""
+    sched = wrht.build_schedule(4096, 64, 1.0, validate=True)
+    lo, hi = wrht.theoretical_steps(4096, sched.m)
+    assert lo <= sched.num_steps <= hi
+    for step in sched.steps:
+        assert step.wavelengths <= 64

@@ -54,3 +54,28 @@ def test_hring_schedule_steps_match_decomposition():
 def test_simulator_counts_reconfig_per_step():
     r = simulator.run_optical("bt", 64, 1e3)
     assert r.reconfig_s == pytest.approx(r.steps * 25e-6)
+
+
+def test_hring_prime_n_falls_back_to_flat_ring():
+    """Regression: the g|N search used to reach g=1, where the intra wrap
+    link becomes a self-transfer and schedule construction crashed."""
+    for n in (7, 13, 127):
+        r = simulator.run_optical("hring", n, 1e6)
+        assert r.algorithm == "hring"
+        assert r.steps == sm.ring_steps(n)  # flat-ring fallback
+        assert r.total_s > 0
+
+
+def test_hring_schedule_rejects_trivial_group_size():
+    with pytest.raises(ValueError):
+        simulator.hring_allreduce_schedule(8, 1, 1.0)
+
+
+def test_wrht_cached_schedule_validates_at_large_n():
+    """The n<=1024 validation cap is gone: cached schedules are validated
+    (structurally and semantically) at every N."""
+    r = simulator.run_optical("wrht", 2048, 1e6)
+    assert r.steps > 0
+    sched = simulator._cached_wrht_schedule(2048, sm.OpticalParams().wavelengths, None)
+    # would have raised inside build_schedule(validate=True) otherwise
+    assert sched.num_steps == r.steps
