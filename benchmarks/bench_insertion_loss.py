@@ -1,0 +1,113 @@
+"""Insertion-loss feasibility frontier: which (m, w) WRHT trees survive the
+optical power budget, and what they cost under the three timing engines.
+
+The paper's abstract and Sec. III note that insertion loss bounds how many
+nodes a wavelength can traverse; ``topology.PhysicalParams`` turns that into
+a hop budget ``H`` and ``wrht.build_schedule`` caps the tree fan-out at
+``2H + 1`` (relaying deeper levels through O/E/O regeneration when even the
+surviving representatives drift out of reach).  This sweep varies the
+per-hop loss at a fixed 32 dB power budget and reports, per cell:
+
+  max_hops        the resulting hop budget H
+  m_effective     level-0 group size actually used (min of Lemma 1 and 2H+1)
+  steps           schedule length (relays inflate it at tight budgets)
+  lockstep_ms     golden per-step-max timing
+  overlap_ms      SWOT-style reconfiguration-overlap timing (always <=)
+  bt_feasible     whether the binary-tree baseline's fixed lightpaths fit H
+
+``python -m benchmarks.bench_insertion_loss`` runs the full sweep and writes
+``BENCH_insertion_loss.json`` at the repo root (the feasibility-frontier
+artifact, tracked like ``BENCH_schedule.json``); ``rows()`` exposes a cheap
+subset to the ``benchmarks.run`` harness.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import simulator, step_models as sm
+from repro.core.topology import PhysicalParams
+from repro.core.wavelength import InsertionLossError
+
+# per-hop insertion loss sweep (dB); the 32 dB default budget gives
+# H = 128, 64, 32, 16, 8 hops respectively
+LOSS_SWEEP = (0.25, 0.5, 1.0, 2.0, 4.0)
+N_SWEEP = (256, 1024)
+WAVELENGTHS = (16, 64)
+D_BITS = 25e6 * 32  # ResNet50 gradients
+
+
+def bench_cell(n: int, w: int, loss_db: float) -> dict:
+    phys = PhysicalParams(insertion_loss_db_per_hop=loss_db)
+    p = sm.OpticalParams(wavelengths=w, physical=phys)
+    # same cache key as run_optical below: one build+validation per cell
+    sched = simulator._cached_wrht_schedule(n, w, None, phys.max_hops)
+    lock = simulator.run_optical("wrht", n, D_BITS, p)
+    ovl = simulator.run_optical("wrht", n, D_BITS, p, timing="overlap")
+    try:
+        simulator.run_optical("bt", n, D_BITS, p)
+        bt_feasible = True
+    except InsertionLossError:
+        bt_feasible = False
+    return {
+        "n": n,
+        "w": w,
+        "loss_db_per_hop": loss_db,
+        "max_hops": phys.max_hops,
+        "fan_out_cap": phys.fan_out_cap,
+        "m_effective": sched.m,
+        "level_group_sizes": sched.level_group_sizes,
+        "steps": sched.num_steps,
+        "lockstep_ms": round(lock.total_s * 1e3, 4),
+        "overlap_ms": round(ovl.total_s * 1e3, 4),
+        "bt_feasible": bt_feasible,
+    }
+
+
+def sweep() -> dict:
+    cells = [
+        bench_cell(n, w, loss)
+        for loss in LOSS_SWEEP for n in N_SWEEP for w in WAVELENGTHS
+    ]
+    return {
+        "benchmark": "insertion_loss_frontier",
+        "power_budget_db": PhysicalParams().power_budget_db,
+        "d_bits": D_BITS,
+        "cells": cells,
+    }
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` harness (CI smoke)."""
+    out = []
+    for loss in (0.5, 4.0):
+        for n in (256,):
+            t0 = time.perf_counter()
+            cell = bench_cell(n, 64, loss)
+            us = (time.perf_counter() - t0) * 1e6
+            out.append({
+                "name": f"insertion_loss/N={n}/loss={loss}dB",
+                "us_per_call": us,
+                "derived": {k: cell[k] for k in (
+                    "max_hops", "m_effective", "steps",
+                    "lockstep_ms", "overlap_ms", "bt_feasible")},
+            })
+    return out
+
+
+def main() -> None:
+    result = sweep()
+    path = Path(__file__).resolve().parents[1] / "BENCH_insertion_loss.json"
+    path.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {path}")
+    for cell in result["cells"]:
+        print(f"n={cell['n']} w={cell['w']} loss={cell['loss_db_per_hop']}dB "
+              f"H={cell['max_hops']} m={cell['m_effective']} "
+              f"steps={cell['steps']} lockstep={cell['lockstep_ms']}ms "
+              f"overlap={cell['overlap_ms']}ms bt={cell['bt_feasible']}")
+
+
+if __name__ == "__main__":
+    main()

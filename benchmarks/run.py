@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   roofline           aggregated dry-run roofline terms (reads experiments/)
   schedule_build     WRHT schedule-construction cost (full sweep writes
                      BENCH_schedule.json via `python -m benchmarks.bench_schedule_build`)
+  insertion_loss     insertion-loss feasibility frontier (full sweep writes
+                     BENCH_insertion_loss.json via `python -m benchmarks.bench_insertion_loss`)
 """
 
 from __future__ import annotations
@@ -18,6 +20,7 @@ import sys
 
 def main() -> None:
     from . import (
+        bench_insertion_loss,
         bench_schedule_build,
         fig4_optical,
         fig5_electrical,
@@ -33,6 +36,7 @@ def main() -> None:
         "planner_crossover": planner_crossover,
         "roofline": roofline,
         "schedule_build": bench_schedule_build,
+        "insertion_loss": bench_insertion_loss,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

@@ -1,19 +1,24 @@
-"""Quickstart: the paper's all-reduce end to end, in three acts.
+"""Quickstart: the paper's all-reduce end to end, in four acts.
 
   1. Build the WRHT schedule for a 64-node optical ring and show the paper's
      step-count win over Ring/BT (Sec. III).
   2. Time all four algorithms in the flit-level optical simulator (Fig. 4).
-  3. Train a tiny LM for 30 steps with WRHT-planned gradient sync (the TPU
+  3. Re-run WRHT under the insertion-loss power budget (Sec. III) and the
+     SWOT-style event-timed engine with reconfiguration overlap.
+  4. Train a tiny LM for 30 steps with WRHT-planned gradient sync (the TPU
      port) and watch the loss drop.
 
 Runs on CPU in ~1 minute:  PYTHONPATH=src python examples/quickstart.py
 """
+
+import tempfile
 
 import jax
 
 from repro.configs import registry
 from repro.configs.base import TrainConfig
 from repro.core import simulator, step_models as sm, wrht
+from repro.core.topology import PhysicalParams
 from repro.data.pipeline import CorpusLM
 from repro.train import Trainer, TrainerOptions
 
@@ -33,7 +38,18 @@ for alg in ("wrht", "hring", "ring", "bt"):
     r = simulator.run_optical(alg, 1024, 25e6 * 32)
     print(f"  {alg:6s} {r.total_s*1e3:9.2f} ms  ({r.steps} steps)")
 
-# ---- 3. the TPU port: WRHT-planned gradient sync in a real train loop ------
+# ---- 3. physical layer: insertion loss + event-timed simulation ------------
+phys = PhysicalParams(insertion_loss_db_per_hop=2.0)  # 32 dB budget -> 16 hops
+pp = sm.OpticalParams(physical=phys)
+print(f"\nInsertion loss at {phys.insertion_loss_db_per_hop} dB/hop: "
+      f"hop budget {phys.max_hops}, WRHT fan-out capped at "
+      f"{sm.max_feasible_m(pp)}")
+for timing in ("lockstep", "overlap"):
+    r = simulator.run_optical("wrht", 1024, 25e6 * 32, pp, timing=timing)
+    print(f"  wrht N=1024 under budget, {timing:8s} {r.total_s*1e3:9.2f} ms "
+          f"({r.steps} steps, relays included)")
+
+# ---- 4. the TPU port: WRHT-planned gradient sync in a real train loop ------
 print("\nTraining a tiny LM (planner-scheduled hierarchical sync on 1 CPU "
       "device degenerates to local sum — same code path as the 512-chip "
       "dry-run):")
@@ -41,6 +57,9 @@ cfg = registry.get("qwen2-1.5b", smoke=True)
 tc = TrainConfig(lr=1e-3, total_steps=30, warmup_steps=5, remat="none")
 src = CorpusLM(cfg.vocab_size, seq_len=32, global_batch=8)
 trainer = Trainer(cfg, tc, src, options=TrainerOptions(
-    ckpt_dir="/tmp/repro_quickstart", ckpt_every=1000, log_every=10))
+    # fresh dir each run: a stale checkpoint would restore at step 30 and
+    # train (and log) nothing
+    ckpt_dir=tempfile.mkdtemp(prefix="repro_quickstart_"),
+    ckpt_every=1000, log_every=10))
 trainer.run(30)
 print("loss:", " -> ".join(f"{h['loss']:.2f}" for h in trainer.history))

@@ -122,8 +122,16 @@ def plan_bucket(
     params: CostParams | None = None,
     m_candidates: tuple[int, ...] = (2, 3, 4, 8, 16),
     allow: tuple[str, ...] = ("flat", "rd", "wrht_tree", "hier_scatter"),
+    max_hops: int | None = None,
 ) -> Plan:
-    """Return the minimum-cost schedule for one bucket on one device axis."""
+    """Return the minimum-cost schedule for one bucket on one device axis.
+
+    ``max_hops`` is the optical insertion-loss hop budget (see
+    ``topology.PhysicalParams.max_hops``): a WRHT tree fan-out ``m`` whose
+    middle representative would have to reach members more than ``max_hops``
+    positions away (``m > 2·max_hops + 1``) is physically infeasible and is
+    never enumerated.
+    """
     p = params or CostParams.tpu_v5e()
     best: Plan | None = None
 
@@ -137,9 +145,12 @@ def plan_bucket(
     if "rd" in allow and axis_size & (axis_size - 1) == 0:
         consider(Plan("rd", t_rd(axis_size, bytes_, p)))
     if "wrht_tree" in allow:
+        fan_out_cap = None if max_hops is None else 2 * max_hops + 1
         for m in m_candidates:
             if m < 2 or m > axis_size:
                 continue
+            if fan_out_cap is not None and m > fan_out_cap:
+                continue  # lightpath to the farthest member is out of reach
             for a2a in (True, False):
                 consider(
                     Plan("wrht_tree", t_wrht_tree(axis_size, bytes_, p, m, a2a),

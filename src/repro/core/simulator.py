@@ -1,10 +1,23 @@
 """Optical ring interconnect simulator (the paper's in-house simulator, re-built).
 
 Executes explicit per-step transfer schedules on the TeraRack-style ring of
-``topology.Ring``: each step pays the MRR reconfiguration delay ``a`` plus the
-serialization time of its *slowest* concurrent transfer (transfers inside one
-step are wavelength-parallel by construction; the RWA validator guarantees
-conflict-freedom).  Flit alignment and O/E/O conversion follow Table II.
+``topology.Ring``.  Two timing engines (DESIGN.md §7):
+
+* **lock-step** (:func:`simulate_steps`): each step pays the MRR
+  reconfiguration delay ``a`` plus the duration of its *slowest* concurrent
+  transfer (transfers inside one step are wavelength-parallel by
+  construction; the RWA validator guarantees conflict-freedom).  This is the
+  paper's model and the golden upper bound.
+* **event-timed** (:func:`simulate_steps_event`): per-transfer start/finish
+  times over the ``TransferBatch`` arrays, tracked per node.  With
+  ``overlap=True`` it models SWOT-style reconfiguration–communication
+  overlap: a node retunes its MRRs for the next step as soon as *its own*
+  transfers finish, hiding the reconfiguration delay behind other nodes'
+  tail transfers.  Never slower than lock-step; equal when overlap is off.
+
+Flit alignment and O/E/O conversion follow Table II; when the ring carries a
+``PhysicalParams`` model, receivers additionally pay per-hop propagation
+delay, and every step is checked against the insertion-loss hop budget.
 
 Besides WRHT (schedule from ``wrht.build_schedule``) this module builds the
 explicit optical schedules of the three baselines the paper compares against
@@ -23,7 +36,7 @@ import numpy as np
 
 from . import step_models, wrht
 from .topology import CCW, CW, Ring, TransferBatch
-from .wavelength import validate_no_conflicts
+from .wavelength import InsertionLossError, validate_no_conflicts
 
 
 @dataclass
@@ -36,31 +49,52 @@ class SimResult:
     reconfig_s: float
     max_wavelengths: int = 0
     per_step_s: list[float] = field(default_factory=list)
+    timing: str = "lockstep"           # engine that produced the result
+    event_total_s: float | None = None  # overlap mode: makespan (not additive)
 
     @property
     def total_s(self) -> float:
+        if self.event_total_s is not None:
+            return self.event_total_s
         return self.serialization_s + self.reconfig_s
+
+
+def _step_durations(
+    ring: Ring, batch: TransferBatch, bits_override: float | None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-transfer (transmit, receive) durations for one step.
+
+    Transmit ends after flit-aligned serialization + O/E/O; the receiver is
+    additionally ``hops`` segments of flight time downstream when the ring
+    carries a physical model (zero otherwise, preserving the seed timing).
+    """
+    if bits_override is not None:
+        ser = np.full(len(batch), ring.serialization_time(bits_override))
+    else:
+        ser = ring.serialization_time_array(batch.bits)
+    if ring.physical is None:
+        return ser, ser
+    return ser, ser + ring.propagation_time(batch.arcs(ring.n)[2])
 
 
 def simulate_steps(
     name: str, steps: list[wrht.Step], ring: Ring, d_bits: float,
     validate: bool = True, bits_override: float | None = None,
 ) -> SimResult:
+    """Lock-step engine: Σ over steps of (reconfig + slowest transfer)."""
     ser = 0.0
     per_step = []
     maxw = 0
     for step in steps:
         batch = step.transfers
         if validate:
-            validate_no_conflicts(batch, ring.n, ring.w)
+            validate_no_conflicts(batch, ring.n, ring.w, max_hops=ring.max_hops)
         if len(batch) == 0:
             s = 0.0
-        elif bits_override is not None:
-            s = ring.serialization_time(bits_override)
         else:
-            # serialization_time is monotone in bits, so the slowest
-            # concurrent transfer is the one with the largest payload
-            s = ring.serialization_time(float(batch.bits.max()))
+            # durations are monotone in bits, so the slowest concurrent
+            # transfer bounds the step (with propagation: max over rx ends)
+            s = float(_step_durations(ring, batch, bits_override)[1].max())
         ser += s
         per_step.append(s + ring.reconfig_delay_s)
         maxw = max(maxw, step.wavelengths)
@@ -73,6 +107,75 @@ def simulate_steps(
         reconfig_s=len(steps) * ring.reconfig_delay_s,
         max_wavelengths=maxw,
         per_step_s=per_step,
+    )
+
+
+def simulate_steps_event(
+    name: str, steps: list[wrht.Step], ring: Ring, d_bits: float,
+    overlap: bool = False, validate: bool = True,
+    bits_override: float | None = None,
+) -> SimResult:
+    """Event-timed engine: per-transfer finish times over the batch arrays.
+
+    Per-node readiness ``ready[v]`` tracks when node ``v`` is data-current
+    and free.  A transfer starts once both endpoints are ready and retuned:
+
+    * ``overlap=False`` — global step barrier: every transfer of step ``s``
+      starts at ``max(ready) + a``.  Totals equal :func:`simulate_steps`
+      bit-for-bit (same accumulation order), which the tests pin down.
+    * ``overlap=True`` — SWOT-style: transfer ``i`` starts at
+      ``max(ready[src_i], ready[dst_i]) + a``, so nodes whose step-``s-1``
+      work finished early pay their MRR reconfiguration *during* the tail
+      transfers of step ``s-1``.  Segment-level circuit teardown is modelled
+      as endpoint availability (the binding constraint on a WDM ring where
+      successive steps reuse disjoint wavelength sets); data dependencies
+      are exact: a source transmits only after all its receptions finished.
+
+    The transmitter frees at ``start + serialization``; the receiver at
+    ``start + serialization + propagation`` (physical model permitting).
+    """
+    a = ring.reconfig_delay_s
+    ready = np.zeros(ring.n)
+    per_step: list[float] = []
+    maxw = 0
+    ser = 0.0     # lock-step-comparable per-step-max accumulation
+    t_prev = 0.0
+    for step in steps:
+        batch = step.transfers
+        if validate:
+            validate_no_conflicts(batch, ring.n, ring.w, max_hops=ring.max_hops)
+        if len(batch) == 0:
+            per_step.append(0.0)
+            continue
+        tx, rx = _step_durations(ring, batch, bits_override)
+        if overlap:
+            start = np.maximum(ready[batch.src], ready[batch.dst]) + a
+        else:
+            start = np.full(len(batch), ready.max() + a)
+        np.maximum.at(ready, batch.src, start + tx)
+        np.maximum.at(ready, batch.dst, start + rx)
+        t = float(ready.max())
+        per_step.append(t - t_prev)
+        t_prev = t
+        ser += float(rx.max())
+        maxw = max(maxw, step.wavelengths)
+    if overlap:
+        # the barrier execution is always admissible, so the makespan is
+        # capped by the lock-step total; min() also pins the `event <=
+        # lockstep` invariant exactly under FP accumulation-order noise
+        lockstep_total = ser + len(steps) * ring.reconfig_delay_s
+        return SimResult(
+            algorithm=name, n=ring.n, d_bits=d_bits, steps=len(steps),
+            serialization_s=ser, reconfig_s=len(steps) * ring.reconfig_delay_s,
+            max_wavelengths=maxw, per_step_s=per_step, timing="overlap",
+            event_total_s=min(float(ready.max()), lockstep_total),
+        )
+    # barrier mode: report the same additive decomposition as lock-step so
+    # the two are exactly comparable (event_total_s left unset on purpose)
+    return SimResult(
+        algorithm=name, n=ring.n, d_bits=d_bits, steps=len(steps),
+        serialization_s=ser, reconfig_s=len(steps) * ring.reconfig_delay_s,
+        max_wavelengths=maxw, per_step_s=per_step, timing="event",
     )
 
 
@@ -167,12 +270,30 @@ import functools
 
 
 @functools.lru_cache(maxsize=256)
-def _cached_wrht_schedule(n: int, w: int, m: int | None) -> wrht.WRHTSchedule:
+def _cached_wrht_schedule(
+    n: int, w: int, m: int | None, max_hops: int | None = None
+) -> wrht.WRHTSchedule:
     """WRHT schedule structure is independent of the payload size — build and
     fully validate (structural + semantic, both vectorized) once per
-    (n, w, m).  The historical ``n <= 1024`` validation cap is gone: the
-    array-based validator handles N=32768 in well under a second."""
-    return wrht.build_schedule(n, w, 1.0, m=m, validate=True)
+    (n, w, m, hop budget).  The historical ``n <= 1024`` validation cap is
+    gone: the array-based validator handles N=32768 in well under a second."""
+    return wrht.build_schedule(n, w, 1.0, m=m, validate=True, max_hops=max_hops)
+
+
+def _simulate(
+    name: str, steps: list[wrht.Step], ring: Ring, d_bits: float, timing: str,
+    validate: bool = True, bits_override: float | None = None,
+) -> SimResult:
+    if timing == "lockstep":
+        return simulate_steps(name, steps, ring, d_bits, validate=validate,
+                              bits_override=bits_override)
+    if timing in ("event", "overlap"):
+        return simulate_steps_event(name, steps, ring, d_bits,
+                                    overlap=timing == "overlap",
+                                    validate=validate,
+                                    bits_override=bits_override)
+    raise ValueError(f"unknown timing {timing!r} "
+                     "(expected 'lockstep', 'event' or 'overlap')")
 
 
 def run_optical(
@@ -182,19 +303,32 @@ def run_optical(
     p: step_models.OpticalParams | None = None,
     g: int = 8,
     m: int | None = None,
+    timing: str | None = None,
 ) -> SimResult:
+    """Simulate one all-reduce on the optical ring.
+
+    ``timing`` overrides ``p.timing`` ("lockstep" | "event" | "overlap").
+    With ``p.physical`` set, WRHT schedules are built under the insertion-
+    loss hop budget and every simulated step is checked against it — a
+    baseline whose fixed schedule needs longer lightpaths than the budget
+    allows (e.g. binary tree at small budgets) raises ``InsertionLossError``,
+    which ``benchmarks/bench_insertion_loss.py`` reports as infeasible.
+    """
     p = p or step_models.OpticalParams()
+    timing = timing or p.timing
     ring = Ring(n, p.wavelengths, bandwidth_bps=p.bandwidth_bps,
-                reconfig_delay_s=p.reconfig_delay_s)
+                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
     if algorithm == "wrht":
-        sched = _cached_wrht_schedule(n, p.wavelengths, m)
+        sched = _cached_wrht_schedule(n, p.wavelengths, m, ring.max_hops)
         # every WRHT transfer carries the constant full vector d
-        return simulate_steps("wrht", sched.steps, ring, d_bits,
-                              validate=False, bits_override=d_bits)
+        return _simulate("wrht", sched.steps, ring, d_bits, timing,
+                         validate=False, bits_override=d_bits)
     if algorithm == "ring":
-        # every one of the 2(N-1) steps is the identical neighbour pattern:
-        # validate/time one representative step and scale (exact, since the
-        # per-step payload d/N is constant).
+        # every one of the 2(N-1) steps is the identical neighbour pattern
+        # and every node is both a sender and a receiver, so all three
+        # timing engines coincide (uniform per-node finish times): validate/
+        # time one representative step and scale (exact, since the per-step
+        # payload d/N is constant).
         src = np.arange(n)
         one = [wrht.Step("ring", 0, TransferBatch.from_arrays(
             src, (src + 1) % n, CW, d_bits / n, wavelength=0, check=False
@@ -202,9 +336,11 @@ def run_optical(
         r = simulate_steps("ring", one, ring, d_bits)
         k = 2 * (n - 1)
         return SimResult("ring", n, d_bits, k, r.serialization_s * k,
-                         k * ring.reconfig_delay_s, r.max_wavelengths)
+                         k * ring.reconfig_delay_s, r.max_wavelengths,
+                         timing=timing)
     if algorithm == "bt":
-        return simulate_steps("bt", bt_allreduce_schedule(n, d_bits), ring, d_bits)
+        return _simulate("bt", bt_allreduce_schedule(n, d_bits), ring, d_bits,
+                         timing)
     if algorithm == "hring":
         g = min(g, n)
         while g > 1 and n % g:
@@ -212,15 +348,34 @@ def run_optical(
         if g < 2:
             # prime (or tiny) N admits no proper grouping: H-Ring degenerates
             # to the flat ring; report that schedule under the hring label
-            return replace(run_optical("ring", n, d_bits, p), algorithm="hring")
+            return replace(run_optical("ring", n, d_bits, p, timing=timing),
+                           algorithm="hring")
+        # longest H-Ring lightpath: the inter-group hop spans g segments
+        # (when >= 2 groups exist), the intra wrap link g-1; the analytic
+        # shortcut below skips per-transfer validation, so enforce here
+        span = g if n // g >= 2 else g - 1
+        if ring.max_hops is not None and span > ring.max_hops:
+            raise InsertionLossError(
+                f"H-Ring lightpath spans {span} segments, exceeding the "
+                f"insertion-loss hop budget of {ring.max_hops}"
+            )
+        if timing != "lockstep":
+            # heads and members have genuinely different idle patterns, so
+            # the event engines need the explicit full-N schedule
+            return _simulate("hring", hring_allreduce_schedule(n, g, d_bits),
+                             ring, d_bits, timing)
         sched = hring_allreduce_schedule(2 * g, g, d_bits)  # one intra + inter template
         intra = simulate_steps("hring-intra", [sched[0]], Ring(2 * g, ring.w,
                                bandwidth_bps=ring.bandwidth_bps,
-                               reconfig_delay_s=ring.reconfig_delay_s), d_bits)
+                               reconfig_delay_s=ring.reconfig_delay_s,
+                               physical=ring.physical), d_bits)
         n_groups = n // g
         intra_steps = 2 * (g - 1)
         inter_steps = 2 * (n_groups - 1)
         inter_ser = ring.serialization_time((d_bits / g) / n_groups)
+        if ring.physical is not None:
+            # inter-group heads are g segments apart: receivers pay flight time
+            inter_ser += float(ring.propagation_time(np.asarray([g]))[0])
         total_steps = intra_steps + inter_steps
         ser = intra_steps * intra.serialization_s + inter_steps * inter_ser
         return SimResult("hring", n, d_bits, total_steps, ser,

@@ -23,6 +23,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+from .topology import PhysicalParams
+
 
 def ring_steps(n: int) -> int:
     return 2 * (n - 1)
@@ -52,11 +54,32 @@ def wrht_steps(n: int, m: int, with_alltoall: bool = True) -> int:
 
 @dataclass(frozen=True)
 class OpticalParams:
-    """Table II, optical side."""
+    """Table II, optical side, plus the physical-layer / timing knobs.
+
+    ``physical`` enables the insertion-loss constraint (Sec. III): schedules
+    are built under the hop budget ``physical.max_hops`` and the simulator
+    adds per-hop propagation delay.  ``timing`` selects the simulator
+    engine: ``"lockstep"`` (per-step max, the golden upper bound),
+    ``"event"`` (per-transfer finish times, global step barrier — equals
+    lockstep by construction) or ``"overlap"`` (SWOT-style: a node retunes
+    its MRRs for the next step while other nodes' tail transfers of the
+    current step are still in flight).
+    """
 
     bandwidth_bps: float = 40e9     # per wavelength
     reconfig_delay_s: float = 25e-6  # MRR reconfiguration per step (the α term)
     wavelengths: int = 64
+    physical: PhysicalParams | None = None
+    timing: str = "lockstep"
+
+
+def max_feasible_m(p: OpticalParams) -> int:
+    """Largest WRHT group size under both Lemma 1 and the insertion-loss
+    fan-out cap (``2·max_hops + 1``, see ``PhysicalParams.fan_out_cap``)."""
+    m = 2 * p.wavelengths + 1
+    if p.physical is not None:
+        m = min(m, p.physical.fan_out_cap)
+    return m
 
 
 @dataclass(frozen=True)
@@ -75,8 +98,9 @@ class ElectricalParams:
 
 def t_wrht(n: int, d_bits: float, p: OpticalParams, m: int | None = None,
            with_alltoall: bool = False) -> float:
-    """Eq. (1): every step moves the full vector d."""
-    m = m if m is not None else 2 * p.wavelengths + 1
+    """Eq. (1): every step moves the full vector d.  The default group size
+    honours the insertion-loss fan-out cap when ``p.physical`` is set."""
+    m = m if m is not None else max_feasible_m(p)
     theta = wrht_steps(n, m, with_alltoall)
     return theta * d_bits / p.bandwidth_bps + theta * p.reconfig_delay_s
 

@@ -23,6 +23,73 @@ CCW = -1  # counter-clockwise
 
 
 @dataclass(frozen=True)
+class PhysicalParams:
+    """Optical power budget of one lightpath (paper Sec. III, insertion loss).
+
+    A signal leaves the laser at ``laser_power_dbm``, loses a fixed
+    ``coupling_loss_db`` entering/leaving the fiber, and loses
+    ``insertion_loss_db_per_hop`` at every node it passes through (each hop
+    traverses one node's MRR add/drop bank).  The path is feasible iff the
+    power arriving at the receiver stays at or above
+    ``receiver_sensitivity_dbm``:
+
+        laser - coupling - hops * per_hop  >=  sensitivity
+
+    which yields the *hop budget* :attr:`max_hops` — the insertion-loss
+    constraint the paper's analysis applies to WRHT group sizes (a
+    representative can only drain members whose lightpaths fit the budget).
+    Wavelength routing treats the budget per directed lightpath; paths longer
+    than the budget must be O/E/O-regenerated at a relay node
+    (:func:`repro.core.wavelength.split_overlong_arcs`).
+
+    ``propagation_s_per_hop`` is the time of flight across one unit segment
+    (~5 ns for a metre of fiber); the event-timed simulator adds it to each
+    transfer's receive-side finish time, so distant receivers genuinely
+    finish later than near ones.  Defaults give a 32 dB budget and a 64-hop
+    reach.
+    """
+
+    laser_power_dbm: float = 10.0
+    receiver_sensitivity_dbm: float = -26.0
+    coupling_loss_db: float = 4.0
+    insertion_loss_db_per_hop: float = 0.5
+    propagation_s_per_hop: float = 5e-9
+
+    def __post_init__(self) -> None:
+        if self.insertion_loss_db_per_hop < 0:
+            raise ValueError("insertion loss must be >= 0 dB/hop")
+        if self.power_budget_db < self.insertion_loss_db_per_hop:
+            raise ValueError(
+                f"power budget {self.power_budget_db:.1f} dB cannot cover a "
+                "single hop — no lightpath is feasible"
+            )
+
+    @property
+    def power_budget_db(self) -> float:
+        """dB available for per-hop insertion loss."""
+        return (self.laser_power_dbm - self.receiver_sensitivity_dbm
+                - self.coupling_loss_db)
+
+    @property
+    def max_hops(self) -> int:
+        """Largest number of unit segments one lightpath may traverse."""
+        if self.insertion_loss_db_per_hop == 0:
+            return int(1e18)  # lossless: effectively unbounded
+        return int(self.power_budget_db // self.insertion_loss_db_per_hop)
+
+    @property
+    def fan_out_cap(self) -> int:
+        """Largest WRHT group size on a unit-spaced ring: the representative
+        sits in the middle, so the farthest member is ``⌈(m-1)/2⌉`` hops away
+        and ``m = 2·max_hops + 1`` is the limit (insertion-loss Lemma-1 cap)."""
+        return 2 * self.max_hops + 1
+
+    def feasible(self, hops) -> np.ndarray:
+        """Vectorized feasibility of per-transfer hop counts."""
+        return np.asarray(hops) <= self.max_hops
+
+
+@dataclass(frozen=True)
 class Transfer:
     """One directed optical transmission within a communication step."""
 
@@ -209,6 +276,7 @@ class Ring:
     reconfig_delay_s: float = 25e-6    # MRR reconfiguration delay (Table II)
     flit_bits: int = 32 * 8            # flit size (Table II)
     oeo_cycle_s: float = field(default=0.0)  # O/E/O conversion, per flit
+    physical: PhysicalParams | None = None   # power budget; None = unconstrained
 
     def __post_init__(self) -> None:
         if self.n < 2:
@@ -221,9 +289,27 @@ class Ring:
             # conversion pipeline.
             self.oeo_cycle_s = self.flit_bits / self.bandwidth_bps
 
+    @property
+    def max_hops(self) -> int | None:
+        """Insertion-loss hop budget, or None when no physical model is set."""
+        return None if self.physical is None else self.physical.max_hops
+
     def serialization_time(self, bits: float) -> float:
         """Wire time for one transfer: flit-aligned serialization + O/E/O."""
         if bits <= 0:
             return 0.0
         flits = -(-int(bits) // self.flit_bits)  # ceil
         return flits * self.flit_bits / self.bandwidth_bps + self.oeo_cycle_s
+
+    def serialization_time_array(self, bits: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`serialization_time` (same flit arithmetic)."""
+        b = np.asarray(bits, dtype=np.float64)
+        flits = -(-b.astype(np.int64) // self.flit_bits)  # ceil, as the scalar
+        out = flits * self.flit_bits / self.bandwidth_bps + self.oeo_cycle_s
+        return np.where(b <= 0, 0.0, out)
+
+    def propagation_time(self, hops: np.ndarray) -> np.ndarray:
+        """Receive-side time of flight for per-transfer hop counts."""
+        if self.physical is None:
+            return np.zeros_like(np.asarray(hops, dtype=np.float64))
+        return np.asarray(hops, dtype=np.float64) * self.physical.propagation_s_per_hop

@@ -38,6 +38,70 @@ class WavelengthConflictError(ValueError):
     pass
 
 
+class InsertionLossError(ValueError):
+    """A lightpath exceeds the insertion-loss hop budget (Sec. III)."""
+
+
+# ---------------------------------------------------------------------------
+# Insertion-loss hop budget (physical-layer constraint).
+# ---------------------------------------------------------------------------
+
+def validate_hop_budget(transfers, n: int, max_hops: int) -> None:
+    """Reject any lightpath longer than the insertion-loss hop budget.
+
+    Vectorized like the conflict check: hop counts come straight from the
+    arc representation.  Raises :exc:`InsertionLossError` on the first
+    offender (a signal traversing more than ``max_hops`` MRR banks arrives
+    below receiver sensitivity — see ``topology.PhysicalParams``).
+    """
+    batch = TransferBatch.coerce(transfers)
+    if len(batch) == 0:
+        return
+    hops = batch.arcs(n)[2]
+    bad = hops > max_hops
+    if bad.any():
+        i = int(np.flatnonzero(bad)[0])
+        raise InsertionLossError(
+            f"transfer {int(batch.src[i])}->{int(batch.dst[i])} traverses "
+            f"{int(hops[i])} segments, exceeding the insertion-loss hop "
+            f"budget of {max_hops}"
+        )
+
+
+def split_overlong_arcs(transfers, n: int, max_hops: int) -> list[TransferBatch]:
+    """Relay decomposition of a step whose arcs may exceed the hop budget.
+
+    Every lightpath longer than ``max_hops`` is cut into a chain of
+    O/E/O-regenerated sub-paths of at most ``max_hops`` segments; the relay
+    nodes are the ring nodes ``max_hops`` apart along the original path.
+    Sub-path ``k`` of every chain lands in sub-step ``k`` (store-and-forward:
+    a relay must finish receiving before it retransmits), so the return value
+    is a list of sub-step batches to be scheduled *in order*.  Paths already
+    within budget appear only in sub-step 0.
+
+    Wavelengths are reset to unassigned (-1) on every returned batch — the
+    caller re-runs RWA per sub-step, since relay chains change the conflict
+    structure.
+    """
+    if max_hops < 1:
+        raise ValueError("max_hops must be >= 1")
+    batch = TransferBatch.coerce(transfers)
+    if len(batch) == 0:
+        return [batch]
+    hops = batch.arcs(n)[2]
+    chain_len = np.maximum(1, -(-hops // max_hops))  # ceil
+    out: list[TransferBatch] = []
+    for k in range(int(chain_len.max())):
+        sel = np.flatnonzero(chain_len > k)
+        src_k = (batch.src[sel] + k * max_hops * batch.direction[sel]) % n
+        seg_h = np.minimum(hops[sel] - k * max_hops, max_hops)
+        dst_k = (src_k + seg_h * batch.direction[sel]) % n
+        out.append(TransferBatch.from_arrays(
+            src_k, dst_k, batch.direction[sel], batch.bits[sel], check=False
+        ))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Reference implementation (original greedy, kept as the golden oracle).
 # ---------------------------------------------------------------------------
@@ -160,17 +224,24 @@ def _lane_components(
     return ids[start], bases, False
 
 
-def first_fit_assign(transfers, n: int, w: int) -> TransferBatch:
+def first_fit_assign(
+    transfers, n: int, w: int, max_hops: int | None = None
+) -> TransferBatch:
     """Vectorized First Fit: bit-identical to the reference greedy.
 
     Accepts a :class:`TransferBatch` (or any ``Transfer`` sequence, coerced)
     and returns a new batch with wavelengths assigned.  Raises
-    :exc:`WavelengthConflictError` iff the reference would.
+    :exc:`WavelengthConflictError` iff the reference would.  When
+    ``max_hops`` is given, arcs exceeding the insertion-loss hop budget are
+    rejected with :exc:`InsertionLossError` before any assignment (such
+    paths must be relayed via :func:`split_overlong_arcs` first).
     """
     batch = TransferBatch.coerce(transfers)
     t_count = len(batch)
     if t_count == 0:
         return batch
+    if max_hops is not None:
+        validate_hop_budget(batch, n, max_hops)
     lane, start, hops = batch.arcs(n)
     order = np.argsort(-hops, kind="stable")  # longest-first, stable ties
 
@@ -233,15 +304,21 @@ def first_fit_assign(transfers, n: int, w: int) -> TransferBatch:
     return batch.with_wavelengths(lam)
 
 
-def validate_no_conflicts(transfers, n: int, w: int) -> None:
+def validate_no_conflicts(
+    transfers, n: int, w: int, max_hops: int | None = None
+) -> None:
     """Check wavelength-conflict-freedom of an already-assigned step.
 
     Vectorized: expand every transfer into its directed segments, build
     ``(lane, segment, λ)`` keys, sort, and look for adjacent duplicates.
+    With ``max_hops`` set, the insertion-loss hop budget is checked first
+    (:exc:`InsertionLossError`).
     """
     batch = TransferBatch.coerce(transfers)
     if len(batch) == 0:
         return
+    if max_hops is not None:
+        validate_hop_budget(batch, n, max_hops)
     lam = batch.wavelength
     if (lam < 0).any():
         i = int(np.flatnonzero(lam < 0)[0])

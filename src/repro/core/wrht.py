@@ -38,11 +38,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .topology import CCW, CW, Ring, TransferBatch
+from .topology import CCW, CW, PhysicalParams, Ring, TransferBatch
 from .wavelength import (
     WavelengthConflictError,
     first_fit_assign,
     first_fit_assign_reference,
+    split_overlong_arcs,
     validate_no_conflicts,
 )
 
@@ -68,6 +69,8 @@ class WRHTSchedule:
     m: int
     steps: list[Step] = field(default_factory=list)
     levels: list[list[int]] = field(default_factory=list)  # active nodes per level
+    max_hops: int | None = None            # insertion-loss hop budget, if any
+    level_group_sizes: list[int] = field(default_factory=list)  # m used per level
 
     @property
     def num_steps(self) -> int:
@@ -86,6 +89,26 @@ def optimal_group_size(w: int) -> int:
     """Lemma 1: with two fibers and two Tx/Rx sets per node, the largest
     group a representative can drain in one step is ``m = 2w + 1``."""
     return 2 * w + 1
+
+
+def _cap_group_size(m: int, max_hops: int | None, spacing: int) -> int:
+    """Insertion-loss fan-out cap: with a hop budget ``H`` and active nodes
+    ``spacing`` segments apart, the farthest member a middle representative
+    can reach is ``H // spacing`` active positions away, so at most
+    ``2·(H // spacing) + 1`` nodes fit in one group (floored at 2 so the
+    tree always makes progress)."""
+    if max_hops is not None:
+        m = min(m, max(2, 2 * (max_hops // max(1, spacing)) + 1))
+    return m
+
+
+def feasible_group_size(w: int, max_hops: int | None = None, spacing: int = 1) -> int:
+    """Lemma-1 optimum capped by the insertion-loss fan-out limit.
+
+    A group of 2 whose pair distance still exceeds ``H`` must be relayed —
+    ``build_schedule`` does this automatically.
+    """
+    return _cap_group_size(optimal_group_size(w), max_hops, spacing)
 
 
 def _assigner(rwa: str):
@@ -134,9 +157,11 @@ def _level_transfers(
 
 
 def _alltoall_fits(
-    reps: np.ndarray, ring: Ring, d_bits: float, rwa: str = "fast"
+    reps: np.ndarray, ring: Ring, d_bits: float, rwa: str = "fast",
+    max_hops: int | None = None,
 ) -> TransferBatch | None:
-    """Try to schedule a one-step all-to-all among ``reps``; None if > w."""
+    """Try to schedule a one-step all-to-all among ``reps``; None if > w
+    or if any pairwise lightpath would exceed the insertion-loss budget."""
     r = reps.size
     if r < 2:
         return None
@@ -152,10 +177,44 @@ def _alltoall_fits(
     batch = TransferBatch.from_arrays(
         src, dst, np.where(cw, CW, CCW), d_bits, check=False
     )
+    if max_hops is not None and (batch.arcs(ring.n)[2] > max_hops).any():
+        return None  # some pair is out of optical reach — keep climbing the tree
     try:
         return _assigner(rwa)(batch, ring.n, ring.w)
     except WavelengthConflictError:
         return None
+
+
+def _level_cap(active: np.ndarray, m: int, max_hops: int | None) -> tuple[int, bool]:
+    """Group size usable at this level under the hop budget, and whether the
+    level's transfers need O/E/O relays.
+
+    Active nodes are grouped by index order, so a member→representative path
+    covers the ring gaps between consecutive actives; with worst gap
+    ``g_max`` the farthest of ``m`` members is ``⌈(m-1)/2⌉ · g_max`` segments
+    out.  Capping ``m`` at ``2·(H // g_max) + 1`` keeps every lightpath
+    within the budget.  When even adjacent actives are out of reach
+    (``H < g_max``), fall back to pairing (m=2) with relayed transfers.
+    """
+    if max_hops is None or active.size < 2:
+        return m, False
+    g_max = int(np.diff(active).max())
+    if max_hops < g_max:
+        return 2, True
+    return _cap_group_size(m, max_hops, g_max), False
+
+
+def _append_level(
+    sched: WRHTSchedule, kind: str, level: int, batch: TransferBatch,
+    relay: bool, ring: Ring, assign, max_hops: int | None,
+) -> None:
+    """Emit one tree level as a Step, splitting into relay sub-steps when the
+    hop budget demands it (each sub-step re-runs RWA)."""
+    if relay:
+        for sub in split_overlong_arcs(batch, ring.n, max_hops):
+            sched.steps.append(Step(kind, level, assign(sub, ring.n, ring.w)))
+    else:
+        sched.steps.append(Step(kind, level, assign(batch, ring.n, ring.w)))
 
 
 def build_schedule(
@@ -168,6 +227,8 @@ def build_schedule(
     reconfig_delay_s: float = 25e-6,
     validate: bool = True,
     rwa: str = "fast",
+    physical: PhysicalParams | None = None,
+    max_hops: int | None = None,
 ) -> WRHTSchedule:
     """Construct and validate the full WRHT schedule for an N-node ring.
 
@@ -175,10 +236,23 @@ def build_schedule(
     First Fit) or ``"reference"`` (original per-object greedy) — the two are
     bit-identical; the knob exists for the equivalence test and the
     schedule-build benchmark.
+
+    ``physical`` (or an explicit ``max_hops``) enables the insertion-loss
+    constraint (paper Sec. III): the per-level group size is capped so no
+    lightpath exceeds the hop budget, the final all-to-all is only taken
+    when every pair is within reach, and levels whose active nodes have
+    drifted beyond the budget are relayed through intermediate O/E/O
+    regeneration sub-steps.  The resulting schedule never contains a
+    transfer longer than the budget (enforced by :func:`validate_schedule`).
     """
     if n < 1:
         raise ValueError("need >= 1 node")
-    ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps, reconfig_delay_s=reconfig_delay_s)
+    if max_hops is None and physical is not None:
+        max_hops = physical.max_hops
+    if max_hops is not None and max_hops < 1:
+        raise ValueError("insertion-loss hop budget must allow >= 1 hop")
+    ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps,
+                reconfig_delay_s=reconfig_delay_s, physical=physical)
     if m is None:
         m = optimal_group_size(w)
     if m < 2:
@@ -187,9 +261,12 @@ def build_schedule(
     # ⌈(m-1)/2⌉ wavelengths per side; beyond m = 2w+1 the step cannot be
     # conflict-free, so clamp (callers probing larger m get the feasible max).
     m = min(m, optimal_group_size(w))
+    # level-0 fan-out cap (unit spacing); deeper levels re-cap per spacing
+    # in _level_cap as the active nodes spread out
+    m = _cap_group_size(m, max_hops, 1)
     assign = _assigner(rwa)
 
-    sched = WRHTSchedule(n=n, w=w, m=m)
+    sched = WRHTSchedule(n=n, w=w, m=m, max_hops=max_hops)
     active = np.arange(n, dtype=np.int64)
     sched.levels.append(active.tolist())
     if n == 1:
@@ -197,16 +274,20 @@ def build_schedule(
 
     # ---------------- reduce stage ----------------
     reduce_actives: list[np.ndarray] = []  # the grouping input per level
+    level_meta: list[tuple[int, bool]] = []  # (group size, relayed) per level
     level = 0
     while active.size > 1:
         if allow_alltoall:
-            a2a = _alltoall_fits(active, ring, d_bits, rwa)
+            a2a = _alltoall_fits(active, ring, d_bits, rwa, max_hops=max_hops)
             if a2a is not None:
                 sched.steps.append(Step("alltoall", level, a2a))
                 break
-        batch, reps = _level_transfers(active, m, d_bits, broadcast=False)
-        sched.steps.append(Step("reduce", level, assign(batch, ring.n, ring.w)))
+        m_lvl, relay = _level_cap(active, m, max_hops)
+        batch, reps = _level_transfers(active, m_lvl, d_bits, broadcast=False)
+        _append_level(sched, "reduce", level, batch, relay, ring, assign, max_hops)
         reduce_actives.append(active)
+        level_meta.append((m_lvl, relay))
+        sched.level_group_sizes.append(m_lvl)
         active = reps
         sched.levels.append(active.tolist())
         level += 1
@@ -215,8 +296,11 @@ def build_schedule(
     # Reverse of the reduce tree (the all-to-all step, if any, already left
     # every surviving representative with the full reduction).
     for level in range(len(reduce_actives) - 1, -1, -1):
-        batch, _ = _level_transfers(reduce_actives[level], m, d_bits, broadcast=True)
-        sched.steps.append(Step("broadcast", level, assign(batch, ring.n, ring.w)))
+        m_lvl, relay = level_meta[level]
+        batch, _ = _level_transfers(reduce_actives[level], m_lvl, d_bits,
+                                    broadcast=True)
+        _append_level(sched, "broadcast", level, batch, relay, ring, assign,
+                      max_hops)
 
     if validate:
         validate_schedule(sched, ring)
@@ -228,9 +312,16 @@ def build_schedule(
 # ------------------------------------------------------------------
 
 def validate_schedule(sched: WRHTSchedule, ring: Ring | None = None) -> None:
+    """Structural validation (wavelengths + insertion loss) then semantic.
+
+    The hop budget comes from the schedule itself or, failing that, from the
+    ring's physical model — a schedule built without the constraint validates
+    as before.
+    """
     ring = ring or Ring(max(sched.n, 2), sched.w)
+    max_hops = sched.max_hops if sched.max_hops is not None else ring.max_hops
     for step in sched.steps:
-        validate_no_conflicts(step.transfers, ring.n, ring.w)
+        validate_no_conflicts(step.transfers, ring.n, ring.w, max_hops=max_hops)
     words = _contribution_words(sched)
     bad = _incomplete_nodes(words, sched.n)
     if bad:

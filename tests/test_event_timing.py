@@ -1,0 +1,155 @@
+"""Event-timed simulator vs the lock-step golden path (DESIGN.md §7).
+
+Invariants pinned here:
+  * engine-level: ``simulate_steps_event(overlap=False)`` equals
+    ``simulate_steps`` bit-for-bit on the same schedule (same accumulation);
+  * ``overlap=True`` never exceeds lock-step (clamped exactly, not approx);
+  * overlap strictly wins when per-step payloads are heterogeneous (the
+    SWOT scenario: a node retunes during another node's tail transfer).
+"""
+
+import math
+
+import pytest
+
+from repro.core import simulator, step_models as sm, wrht
+from repro.core.topology import CW, PhysicalParams, Ring, TransferBatch
+
+ALGOS = ("wrht", "ring", "bt", "hring")
+
+
+def _ring(n, w=8, physical=None):
+    return Ring(n, w, physical=physical)
+
+
+# ---------------------------------------------------------------------------
+# engine-level equalities on identical schedules
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,w", [(15, 2), (64, 8), (100, 8)])
+def test_event_barrier_equals_lockstep_exactly(n, w):
+    sched = wrht.build_schedule(n, w, 1e6)
+    ring = _ring(n, w)
+    lock = simulator.simulate_steps("x", sched.steps, ring, 1e6)
+    evt = simulator.simulate_steps_event("x", sched.steps, ring, 1e6)
+    assert evt.total_s == lock.total_s  # bit-for-bit, not approx
+    assert evt.timing == "event"
+    assert evt.steps == lock.steps
+
+
+def test_event_barrier_equals_lockstep_with_physical():
+    phys = PhysicalParams(insertion_loss_db_per_hop=2.0)  # H=16, with prop
+    sched = wrht.build_schedule(100, 8, 1e6, physical=phys)
+    ring = _ring(100, 8, physical=phys)
+    lock = simulator.simulate_steps("x", sched.steps, ring, 1e6)
+    evt = simulator.simulate_steps_event("x", sched.steps, ring, 1e6)
+    assert evt.total_s == lock.total_s
+
+
+def test_overlap_never_exceeds_lockstep_engine_level():
+    for n, w in [(15, 2), (64, 8), (100, 8)]:
+        sched = wrht.build_schedule(n, w, 1e6)
+        ring = _ring(n, w)
+        lock = simulator.simulate_steps("x", sched.steps, ring, 1e6)
+        ovl = simulator.simulate_steps_event("x", sched.steps, ring, 1e6,
+                                             overlap=True)
+        assert ovl.total_s <= lock.total_s  # exact: clamped in the engine
+        assert ovl.timing == "overlap"
+
+
+# ---------------------------------------------------------------------------
+# run_optical-level ordering (lockstep path may use analytic shortcuts, so
+# equality there is up to FP association, not bit-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alg", ALGOS)
+@pytest.mark.parametrize("n", [64, 256])
+def test_run_optical_event_matches_lockstep(alg, n):
+    p = sm.OpticalParams()
+    lock = simulator.run_optical(alg, n, 1e8, p, timing="lockstep")
+    evt = simulator.run_optical(alg, n, 1e8, p, timing="event")
+    assert math.isclose(evt.total_s, lock.total_s, rel_tol=1e-12)
+    assert evt.steps == lock.steps
+
+
+@pytest.mark.parametrize("alg", ALGOS)
+@pytest.mark.parametrize("n", [64, 256])
+def test_run_optical_overlap_upper_bounded(alg, n):
+    p = sm.OpticalParams()
+    lock = simulator.run_optical(alg, n, 1e8, p, timing="lockstep")
+    ovl = simulator.run_optical(alg, n, 1e8, p, timing="overlap")
+    assert ovl.total_s <= lock.total_s * (1 + 1e-12)
+
+
+def test_run_optical_overlap_with_physical_model():
+    p = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=1.0))
+    for alg in ("wrht", "ring", "hring"):
+        lock = simulator.run_optical(alg, 256, 1e8, p, timing="lockstep")
+        ovl = simulator.run_optical(alg, 256, 1e8, p, timing="overlap")
+        assert ovl.total_s <= lock.total_s * (1 + 1e-12)
+
+
+def test_unknown_timing_rejected():
+    with pytest.raises(ValueError, match="unknown timing"):
+        simulator.run_optical("bt", 64, 1e6, timing="warp")
+
+
+# ---------------------------------------------------------------------------
+# strict overlap win: heterogeneous payloads (the SWOT scenario)
+# ---------------------------------------------------------------------------
+
+def test_overlap_strictly_faster_on_skewed_payloads():
+    # step 0: node 0->1 carries a huge payload while 2->3 finishes early;
+    # step 1: 2->3 again — its endpoints retune during 0->1's tail, so the
+    # second reconfiguration delay and the first big serialization overlap
+    ring = _ring(8, 4)
+    s0 = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [0, 2], [1, 3], CW, [1e9, 1e3], wavelength=[0, 0]))
+    s1 = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [2], [3], CW, [1e9], wavelength=[0]))
+    lock = simulator.simulate_steps("syn", [s0, s1], ring, 1.0)
+    ovl = simulator.simulate_steps_event("syn", [s0, s1], ring, 1.0,
+                                         overlap=True)
+    # both 1e9-bit serializations run concurrently: ~half the lock-step time
+    assert ovl.total_s < lock.total_s * 0.55
+    # and the barrier event engine still reproduces lock-step exactly
+    evt = simulator.simulate_steps_event("syn", [s0, s1], ring, 1.0)
+    assert evt.total_s == lock.total_s
+
+
+def test_overlap_respects_data_dependencies():
+    # chain 0->1 then 1->2: the second hop cannot start before the first
+    # delivers, overlap or not — total is two full (reconfig + ser) terms
+    ring = _ring(8, 4)
+    s0 = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [0], [1], CW, [1e6], wavelength=[0]))
+    s1 = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [1], [2], CW, [1e6], wavelength=[0]))
+    lock = simulator.simulate_steps("chain", [s0, s1], ring, 1.0)
+    ovl = simulator.simulate_steps_event("chain", [s0, s1], ring, 1.0,
+                                         overlap=True)
+    assert ovl.total_s == lock.total_s
+
+
+def test_per_step_makespans_sum_to_total():
+    sched = wrht.build_schedule(64, 8, 1e6)
+    ring = _ring(64, 8)
+    for overlap in (False, True):
+        r = simulator.simulate_steps_event("x", sched.steps, ring, 1e6,
+                                           overlap=overlap)
+        if r.event_total_s is not None:
+            assert sum(r.per_step_s) == pytest.approx(r.event_total_s)
+
+
+def test_relayed_schedule_times_under_both_engines():
+    # tight hop budget forces relay sub-steps; both engines must agree on
+    # the ordering invariant over the longer schedule
+    phys = PhysicalParams(insertion_loss_db_per_hop=4.0)  # H=8
+    sched = wrht.build_schedule(256, 16, 1e6, physical=phys)
+    ring = _ring(256, 16, physical=phys)
+    lock = simulator.simulate_steps("x", sched.steps, ring, 1e6)
+    evt = simulator.simulate_steps_event("x", sched.steps, ring, 1e6)
+    ovl = simulator.simulate_steps_event("x", sched.steps, ring, 1e6,
+                                         overlap=True)
+    assert evt.total_s == lock.total_s
+    assert ovl.total_s <= lock.total_s

@@ -1,0 +1,255 @@
+"""Insertion-loss physical layer: hop budget, arc splitting, schedule caps.
+
+The paper's Sec. III constraint — a wavelength can only traverse as many
+nodes as the optical power budget allows — enters the code as
+``topology.PhysicalParams`` (power budget → hop budget), is enforced in
+``wavelength`` (validation + relay splitting), caps the tree fan-out in
+``wrht.build_schedule``, and filters candidate fan-outs in
+``planner.plan_bucket``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import planner, simulator, step_models as sm, wrht
+from repro.core.topology import CCW, CW, PhysicalParams, Ring, TransferBatch
+from repro.core.wavelength import (
+    InsertionLossError,
+    first_fit_assign,
+    split_overlong_arcs,
+    validate_hop_budget,
+    validate_no_conflicts,
+)
+
+
+# ---------------------------------------------------------------------------
+# PhysicalParams: power budget -> hop budget
+# ---------------------------------------------------------------------------
+
+def test_max_hops_from_power_budget():
+    p = PhysicalParams(laser_power_dbm=10, receiver_sensitivity_dbm=-26,
+                       coupling_loss_db=4, insertion_loss_db_per_hop=0.5)
+    assert p.power_budget_db == pytest.approx(32.0)
+    assert p.max_hops == 64
+    assert p.fan_out_cap == 129
+    assert PhysicalParams(insertion_loss_db_per_hop=2.0).max_hops == 16
+
+
+def test_exact_division_boundary():
+    # 32 dB budget, 8 dB/hop: exactly 4 hops, not 3 or 5
+    p = PhysicalParams(insertion_loss_db_per_hop=8.0)
+    assert p.max_hops == 4
+
+
+def test_lossless_is_unbounded():
+    assert PhysicalParams(insertion_loss_db_per_hop=0.0).max_hops > 10**9
+
+
+def test_budget_below_one_hop_rejected():
+    with pytest.raises(ValueError, match="single hop"):
+        PhysicalParams(laser_power_dbm=-30, insertion_loss_db_per_hop=8.0)
+
+
+def test_feasible_vectorized():
+    p = PhysicalParams(insertion_loss_db_per_hop=8.0)  # H=4
+    np.testing.assert_array_equal(
+        p.feasible(np.array([1, 4, 5, 100])), [True, True, False, False]
+    )
+
+
+# ---------------------------------------------------------------------------
+# wavelength: hop-budget validation and relay splitting
+# ---------------------------------------------------------------------------
+
+def _one(src, dst, direction, n=16):
+    return TransferBatch.from_arrays([src], [dst], direction, 1.0, wavelength=0)
+
+
+def test_hop_budget_exactly_met_passes():
+    validate_hop_budget(_one(0, 4, CW), n=16, max_hops=4)
+    validate_hop_budget(_one(4, 0, CCW), n=16, max_hops=4)
+
+
+def test_hop_budget_exceeded_rejected():
+    with pytest.raises(InsertionLossError, match="5 segments"):
+        validate_hop_budget(_one(0, 5, CW), n=16, max_hops=4)
+
+
+def test_validate_no_conflicts_checks_budget():
+    with pytest.raises(InsertionLossError):
+        validate_no_conflicts(_one(0, 5, CW), n=16, w=4, max_hops=4)
+    validate_no_conflicts(_one(0, 4, CW), n=16, w=4, max_hops=4)
+
+
+def test_first_fit_rejects_overlong_arc():
+    batch = TransferBatch.from_arrays([0], [5], CW, 1.0)
+    with pytest.raises(InsertionLossError):
+        first_fit_assign(batch, n=16, w=4, max_hops=4)
+    assigned = first_fit_assign(batch, n=16, w=4, max_hops=5)
+    assert assigned.wavelength[0] == 0
+
+
+def test_split_overlong_arcs_chains_connect():
+    # 10-hop CW path with H=3 -> 4 relay segments of 3+3+3+1
+    batch = TransferBatch.from_arrays([2], [12], CW, 7.0)
+    subs = split_overlong_arcs(batch, n=16, max_hops=3)
+    assert len(subs) == 4
+    hops = [int(s.arcs(16)[2][0]) for s in subs]
+    assert hops == [3, 3, 3, 1]
+    # the chain is contiguous: each sub-path starts where the previous ended
+    assert int(subs[0].src[0]) == 2
+    for prev, nxt in zip(subs, subs[1:]):
+        assert int(prev.dst[0]) == int(nxt.src[0])
+    assert int(subs[-1].dst[0]) == 12
+    assert all(int(s.direction[0]) == CW for s in subs)
+    assert all(float(s.bits[0]) == 7.0 for s in subs)
+    # wavelengths are reset for per-sub-step RWA
+    assert all(int(s.wavelength[0]) == -1 for s in subs)
+
+
+def test_split_overlong_arcs_ccw_and_short_mix():
+    batch = TransferBatch.from_arrays([12, 5], [2, 4], [CCW, CCW], 1.0)
+    subs = split_overlong_arcs(batch, n=16, max_hops=4)
+    assert len(subs) == 3  # 10 CCW hops -> 4+4+2; the 1-hop stays in sub 0
+    assert len(subs[0]) == 2 and len(subs[1]) == 1 and len(subs[2]) == 1
+    # reassemble the long chain: 12 -> 8 -> 4 -> 2 going CCW
+    assert int(subs[0].dst[0]) == 8
+    assert int(subs[1].src[0]) == 8 and int(subs[1].dst[0]) == 4
+    assert int(subs[2].src[0]) == 4 and int(subs[2].dst[0]) == 2
+
+
+def test_split_within_budget_is_identity_shape():
+    batch = TransferBatch.from_arrays([0, 3], [2, 5], CW, 1.0)
+    subs = split_overlong_arcs(batch, n=16, max_hops=4)
+    assert len(subs) == 1 and len(subs[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# wrht: the builder never emits an overlong lightpath
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,w,H", [
+    (64, 8, 3), (64, 8, 32), (100, 8, 1), (127, 4, 2),  # 127 is prime
+    (256, 64, 64), (31, 3, 5), (17, 2, 1),
+])
+def test_schedule_respects_hop_budget_and_semantics(n, w, H):
+    s = wrht.build_schedule(n, w, 1.0, max_hops=H)
+    assert s.max_hops == H
+    for step in s.steps:
+        validate_hop_budget(step.transfers, n, H)
+        assert step.wavelengths <= w
+    masks = wrht.simulate_contribution_masks(s)
+    assert all(m == (1 << n) - 1 for m in masks)
+
+
+def test_fan_out_capped_at_level_zero():
+    # w=64 would allow m=129, but H=4 caps the group at 2*4+1=9
+    s = wrht.build_schedule(64, 64, 1.0, max_hops=4)
+    assert s.m == 9
+    assert s.level_group_sizes[0] == 9
+
+
+def test_hop_budget_exactly_met_in_schedule():
+    # m=2H+1 puts the farthest member exactly H hops from the representative
+    H = 4
+    s = wrht.build_schedule(27, 64, 1.0, max_hops=H)
+    hops0 = s.steps[0].transfers.arcs(27)[2]
+    assert int(hops0.max()) == H
+
+
+def test_physical_params_equivalent_to_max_hops():
+    phys = PhysicalParams(insertion_loss_db_per_hop=2.0)  # H=16
+    a = wrht.build_schedule(100, 8, 1.0, physical=phys)
+    b = wrht.build_schedule(100, 8, 1.0, max_hops=16)
+    assert a.max_hops == b.max_hops == 16
+    assert a.num_steps == b.num_steps
+    assert a.level_group_sizes == b.level_group_sizes
+
+
+def test_validate_schedule_rejects_overlong_transfer():
+    s = wrht.build_schedule(64, 8, 1.0)  # unconstrained build: 8-hop paths
+    s.max_hops = 2
+    with pytest.raises(InsertionLossError):
+        wrht.validate_schedule(s)
+
+
+def test_feasible_group_size():
+    assert wrht.feasible_group_size(64) == 129
+    assert wrht.feasible_group_size(64, max_hops=4) == 9
+    assert wrht.feasible_group_size(64, max_hops=4, spacing=9) == 2
+    assert wrht.feasible_group_size(2, max_hops=100) == 5
+
+
+def test_alltoall_skipped_when_out_of_reach():
+    # 15 nodes, w=2: Fig. 2(b) uses an all-to-all among reps 5 apart (up to
+    # 10 ring hops between them); H=4 forbids it and the tree must climb
+    free = wrht.build_schedule(15, 2, 1.0)
+    assert any(st.kind == "alltoall" for st in free.steps)
+    capped = wrht.build_schedule(15, 2, 1.0, max_hops=4)
+    assert not any(st.kind == "alltoall" for st in capped.steps)
+    for step in capped.steps:
+        validate_hop_budget(step.transfers, 15, 4)
+
+
+# ---------------------------------------------------------------------------
+# simulator + planner integration
+# ---------------------------------------------------------------------------
+
+def test_run_optical_wrht_under_budget():
+    p = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=4.0))
+    r = simulator.run_optical("wrht", 256, 1e6, p)
+    assert r.total_s > 0
+    sched = simulator._cached_wrht_schedule(256, p.wavelengths, None, 8)
+    for step in sched.steps:
+        validate_hop_budget(step.transfers, 256, 8)
+
+
+def test_hring_prime_n_fallback_feasible_under_budget():
+    # prime N degrades H-Ring to the flat ring, whose neighbour hops always
+    # fit any budget >= 1 — the physical layer must not break the fallback
+    p = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=8.0))
+    assert p.physical.max_hops == 4
+    for n in (13, 127):
+        r = simulator.run_optical("hring", n, 1e6, p)
+        assert r.algorithm == "hring"
+        assert r.steps == sm.ring_steps(n)
+        assert r.total_s > 0
+
+
+def test_hring_single_group_wrap_link_checked():
+    # n=7 admits g=7 (one group): the intra wrap link spans 6 segments,
+    # genuinely infeasible at H=4 — reported, not silently mistimed
+    p = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=8.0))
+    with pytest.raises(InsertionLossError, match="6 segments"):
+        simulator.run_optical("hring", 7, 1e6, p)
+
+
+def test_bt_infeasible_at_tight_budget():
+    p = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=8.0))
+    with pytest.raises(InsertionLossError):
+        simulator.run_optical("bt", 256, 1e6, p)
+
+
+def test_max_feasible_m():
+    assert sm.max_feasible_m(sm.OpticalParams()) == 129
+    p = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=4.0))
+    assert sm.max_feasible_m(p) == 17  # H=8 -> 2*8+1
+
+
+def test_planner_never_plans_infeasible_m():
+    cp = planner.CostParams.optical(64)
+    # force the tree strategy so the m filter is what decides
+    plan = planner.plan_bucket(256, 1e3, cp, allow=("wrht_tree",),
+                               m_candidates=(2, 3, 4, 8, 16), max_hops=3)
+    assert plan.strategy == "wrht_tree"
+    assert plan.m <= 2 * 3 + 1
+    # unconstrained, the same call picks a larger fan-out (fewer steps win)
+    free = planner.plan_bucket(256, 1e3, cp, allow=("wrht_tree",),
+                               m_candidates=(2, 3, 4, 8, 16))
+    assert free.m == 16
+
+
+def test_planner_all_m_infeasible_falls_back():
+    cp = planner.CostParams.optical(64)
+    plan = planner.plan_bucket(256, 1e3, cp, m_candidates=(8, 16), max_hops=2)
+    assert plan.strategy != "wrht_tree"

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Link-check the repo docs: README/DESIGN/EXPERIMENTS cross-references.
+
+Three classes of reference are verified (exit code 1 on any failure):
+
+  1. Markdown links ``[text](target)`` in the doc files — relative targets
+     must exist (external http(s)/mailto links are skipped: CI has no
+     network guarantee).
+  2. Backticked repo paths in the doc files — tokens that look like file
+     paths (``src/...``, ``benchmarks/foo.py``, ``BENCH_*.json``) and dotted
+     module paths (``repro.core.topology``) must resolve.
+  3. Section anchors — every ``DESIGN.md §X`` / ``EXPERIMENTS.md §X``
+     reference found in docs, source and tests must match a ``## §X``
+     heading in the referenced file.
+
+Run from anywhere:  python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+DOC_FILES = ["README.md", "DESIGN.md", "EXPERIMENTS.md"]
+CODE_GLOBS = ["src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
+              "examples/**/*.py"]
+
+MD_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+BACKTICK = re.compile(r"`([^`\n]+)`")
+SECTION_REF = re.compile(r"(DESIGN|EXPERIMENTS)\.md\s+§([\w-]+)")
+PATHLIKE = re.compile(r"^[\w./-]+\.(py|md|json|yml|yaml|txt)$")
+MODULE = re.compile(r"^repro(\.\w+)+$")
+
+
+def fail(errors: list[str], msg: str) -> None:
+    errors.append(msg)
+
+
+def module_exists(dotted: str) -> bool:
+    """True if some prefix of ``a.b.c.Symbol`` resolves to a module/package
+    (references may carry trailing class/function names)."""
+    parts = dotted.split(".")
+    for depth in range(len(parts), 1, -1):
+        rel = Path("src", *parts[:depth])
+        if (REPO / rel).with_suffix(".py").exists() or (REPO / rel).is_dir():
+            return True
+    return False
+
+
+def section_anchors(md: str) -> set[str]:
+    text = (REPO / md).read_text()
+    return set(re.findall(r"^##\s+§([\w-]+)", text, flags=re.M))
+
+
+def main() -> int:
+    errors: list[str] = []
+    anchors = {f: section_anchors(f) for f in ("DESIGN.md", "EXPERIMENTS.md")}
+
+    for doc in DOC_FILES:
+        path = REPO / doc
+        if not path.exists():
+            fail(errors, f"{doc}: file missing")
+            continue
+        text = path.read_text()
+        for target in MD_LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            if not (REPO / target.split("#")[0]).exists():
+                fail(errors, f"{doc}: broken link -> {target}")
+        for tok in BACKTICK.findall(text):
+            tok = tok.split("::")[0].strip()
+            if PATHLIKE.match(tok) and "/" in tok:
+                if not (REPO / tok).exists():
+                    fail(errors, f"{doc}: backticked path missing -> {tok}")
+            elif MODULE.match(tok) and not module_exists(tok):
+                fail(errors, f"{doc}: backticked module missing -> {tok}")
+
+    # section references from docs AND code/docstrings
+    sources = [REPO / d for d in DOC_FILES]
+    for glob in CODE_GLOBS:
+        sources.extend(REPO.glob(glob))
+    for src in sources:
+        rel = src.relative_to(REPO)
+        for fname, sec in SECTION_REF.findall(src.read_text()):
+            known = anchors[f"{fname}.md"]
+            # EXPERIMENTS uses word anchors (§Repro); DESIGN numeric (§6);
+            # list items inside a section are cited as §Methodology-5
+            if sec not in known and sec.split("-")[0] not in known:
+                fail(errors, f"{rel}: dangling reference {fname}.md §{sec}")
+
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_docs: OK ({len(DOC_FILES)} docs, "
+          f"{len(sources)} files scanned for section refs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
