@@ -27,9 +27,8 @@ import json
 import time
 from pathlib import Path
 
-from repro.core import simulator, step_models as sm
+from repro.core import simulator, step_models as sm, timing
 from repro.core.topology import PhysicalParams
-from repro.core.wavelength import InsertionLossError
 
 # per-hop insertion loss sweep (dB); the 32 dB default budget gives
 # H = 128, 64, 32, 16, 8 hops respectively
@@ -42,15 +41,14 @@ D_BITS = 25e6 * 32  # ResNet50 gradients
 def bench_cell(n: int, w: int, loss_db: float) -> dict:
     phys = PhysicalParams(insertion_loss_db_per_hop=loss_db)
     p = sm.OpticalParams(wavelengths=w, physical=phys)
-    # same cache key as run_optical below: one build+validation per cell
+    # one evaluate_grid call per cell (DESIGN.md §9): the WRHT schedule is
+    # built+validated once (same cache key as run_optical), both timing
+    # modes come out of the compiled profile, and the binary tree's
+    # infeasibility under the hop budget lands in ``grid.feasible`` instead
+    # of an exception
     sched = simulator._cached_wrht_schedule(n, w, None, phys.max_hops)
-    lock = simulator.run_optical("wrht", n, D_BITS, p)
-    ovl = simulator.run_optical("wrht", n, D_BITS, p, timing="overlap")
-    try:
-        simulator.run_optical("bt", n, D_BITS, p)
-        bt_feasible = True
-    except InsertionLossError:
-        bt_feasible = False
+    grid = timing.evaluate_grid(("wrht", "bt"), (n,), (D_BITS,),
+                                ("lockstep", "overlap"), p)
     return {
         "n": n,
         "w": w,
@@ -60,9 +58,9 @@ def bench_cell(n: int, w: int, loss_db: float) -> dict:
         "m_effective": sched.m,
         "level_group_sizes": sched.level_group_sizes,
         "steps": sched.num_steps,
-        "lockstep_ms": round(lock.total_s * 1e3, 4),
-        "overlap_ms": round(ovl.total_s * 1e3, 4),
-        "bt_feasible": bt_feasible,
+        "lockstep_ms": round(float(grid.total("wrht", n, "lockstep")[0]) * 1e3, 4),
+        "overlap_ms": round(float(grid.total("wrht", n, "overlap")[0]) * 1e3, 4),
+        "bt_feasible": grid.is_feasible("bt", n),
     }
 
 

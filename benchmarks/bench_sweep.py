@@ -1,0 +1,223 @@
+"""Sweep wall-clock: per-point ``run_optical`` vs the batched grid engine.
+
+The paper's evaluation is a parameter sweep (four DNN payloads × four ring
+sizes × four algorithms — now × three timing modes and an insertion-loss
+frontier).  Before this engine existed every sweep point paid a full Python
+walk over the step list; ``timing.evaluate_grid`` compiles each schedule to
+a ``ScheduleProfile`` once and evaluates the whole payload axis per timing
+mode in broadcasted NumPy (DESIGN.md §9).
+
+``python -m benchmarks.bench_sweep`` runs the full measurement and writes
+``BENCH_sweep.json`` at the repo root:
+
+  * ``sweep``      — wall-clock of the two paths over an extended Fig.-4
+    grid (payload axis densified to ``N_PAYLOADS`` sizes) plus the
+    insertion-loss frontier, the speedup, and a cell-by-cell bit-identity
+    check (``evaluate_grid`` must reproduce the per-point numbers exactly,
+    not approximately).
+  * ``tuner``      — ``timing.tune_wrht`` vs the analytic fan-out rule
+    (Lemma 1 capped by the hop budget): chosen m, simulated times, and the
+    win of the simulated argmin per cell.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the grid for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import simulator, step_models as sm, timing
+from repro.core.topology import PhysicalParams
+from repro.core.wavelength import InsertionLossError
+
+ALGOS = ("wrht", "ring", "bt", "hring")
+TIMINGS = ("lockstep", "event", "overlap")
+N_PAYLOADS = 40
+
+
+def payload_grid(n_payloads: int = N_PAYLOADS) -> list[float]:
+    """Log-spaced payload axis bracketing the paper's four DNN gradients."""
+    d = set(np.geomspace(1e6, 1e10, n_payloads - 4).tolist())
+    d.update(sm.PAPER_MODELS_BITS.values())
+    return sorted(d)
+
+
+def _legacy_sweep(ns, payloads, timings, p) -> dict:
+    """The pre-batching path: one ``run_optical`` call per grid point."""
+    cells = {}
+    for alg in ALGOS:
+        for n in ns:
+            try:
+                for t in timings:
+                    for d in payloads:
+                        cells[(alg, n, t, d)] = simulator.run_optical(
+                            alg, n, d, p, timing=t)
+            except InsertionLossError:
+                cells[(alg, n)] = None  # infeasible under the hop budget
+    return cells
+
+
+def _compare(legacy: dict, grid: timing.GridResult, ns, payloads, timings) -> int:
+    """Count cells whose batched numbers are NOT bit-identical to legacy."""
+    mismatches = 0
+    for ai, alg in enumerate(ALGOS):
+        for ni, n in enumerate(ns):
+            if legacy.get((alg, n), "feasible") is None:
+                if grid.feasible[ai, ni]:
+                    mismatches += 1
+                continue
+            for t in timings:
+                times = grid.cell(alg, n, t)
+                if times is None:  # grid infeasible where legacy was not
+                    mismatches += len(payloads)
+                    continue
+                for di, d in enumerate(payloads):
+                    ref = legacy[(alg, n, t, d)]
+                    got = times.sim_result(di)
+                    if (got.total_s != ref.total_s
+                            or got.serialization_s != ref.serialization_s
+                            or got.reconfig_s != ref.reconfig_s
+                            or got.steps != ref.steps
+                            or got.max_wavelengths != ref.max_wavelengths):
+                        mismatches += 1
+    return mismatches
+
+
+def measure_sweep(ns=(1024, 2048, 3072, 4096), n_payloads=N_PAYLOADS) -> dict:
+    p = sm.OpticalParams()
+    phys = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=2.0))
+    payloads = payload_grid(n_payloads)
+
+    # warm the schedule caches for BOTH paths (the per-point path had the
+    # same lru-cached builders pre-PR), then drop the compiled profiles so
+    # the batched measurement pays its own compile cost
+    _legacy_sweep(ns, payloads[:1], ("lockstep",), p)
+    _legacy_sweep(ns[:2], payloads[:1], ("lockstep",), phys)
+    timing.clear_caches()
+
+    t0 = time.perf_counter()
+    legacy = _legacy_sweep(ns, payloads, TIMINGS, p)
+    legacy_phys = _legacy_sweep(ns[:2], payloads, ("lockstep", "overlap"), phys)
+    legacy_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    grid = timing.evaluate_grid(ALGOS, ns, payloads, TIMINGS, p,
+                                keep_per_step=False)
+    grid_phys = timing.evaluate_grid(ALGOS, ns[:2], payloads,
+                                     ("lockstep", "overlap"), phys,
+                                     keep_per_step=False)
+    batched_s = time.perf_counter() - t0
+
+    mismatches = _compare(legacy, grid, ns, payloads, TIMINGS)
+    mismatches += _compare(legacy_phys, grid_phys, ns[:2], payloads,
+                           ("lockstep", "overlap"))
+    cells = (len(ALGOS) * len(ns) * len(TIMINGS) * len(payloads)
+             + len(ALGOS) * len(ns[:2]) * 2 * len(payloads))
+    return {
+        "ns": list(ns),
+        "payloads": len(payloads),
+        "timings": list(TIMINGS),
+        "grid_cells": cells,
+        "legacy_s": round(legacy_s, 4),
+        "batched_s": round(batched_s, 4),
+        "speedup": round(legacy_s / batched_s, 1),
+        "bit_identical": mismatches == 0,
+        "mismatched_cells": mismatches,
+    }
+
+
+def measure_tuner(cells=((1024, 64, None), (1024, 16, 16), (4096, 64, None))) -> list[dict]:
+    """``tune_wrht`` argmin vs the analytic fan-out rule per (n, w, H)."""
+    d = sm.PAPER_MODELS_BITS["ResNet50"]
+    out = []
+    for n, w, max_hops in cells:
+        t0 = time.perf_counter()
+        tr = timing.tune_wrht(n, w, d, max_hops)
+        tune_s = time.perf_counter() - t0
+        m_best, a2a = tr.best(0)
+        # the sweep caps candidates at n; m >= n all share one schedule, so
+        # min(analytic_m, n) is the analytic pick's representative row
+        analytic_pick = min(tr.analytic_m, n)
+        analytic_idx = [i for i, (m, _) in enumerate(tr.candidates)
+                        if m == analytic_pick]
+        analytic_total = float(tr.total_s[analytic_idx[0], 0])
+        best_total = float(tr.best_total_s[0])
+        out.append({
+            "n": n,
+            "w": w,
+            "max_hops": max_hops,
+            "candidates": len(tr.candidates),
+            "tuned_m": m_best,
+            "tuned_alltoall": a2a,
+            "analytic_m": tr.analytic_m,
+            "tuned_ms": round(best_total * 1e3, 4),
+            "analytic_ms": round(analytic_total * 1e3, 4),
+            "tuner_win_pct": round(100 * (1 - best_total / analytic_total), 3),
+            "tune_wall_s": round(tune_s, 3),
+        })
+    return out
+
+
+def sweep(quick: bool = False) -> dict:
+    if quick:
+        result = measure_sweep(ns=(256, 512), n_payloads=12)
+        tuner = measure_tuner(cells=((256, 16, None), (256, 16, 8)))
+    else:
+        result = measure_sweep()
+        tuner = measure_tuner()
+    return {
+        "benchmark": "sweep_wallclock",
+        "quick": quick,
+        "sweep": result,
+        "tuner": tuner,
+    }
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` harness (CI smoke)."""
+    r = measure_sweep(ns=(256,), n_payloads=8)
+    t = measure_tuner(cells=((256, 16, None),))[0]
+    return [
+        {
+            "name": "sweep/legacy_vs_batched/N=256",
+            "us_per_call": r["batched_s"] * 1e6 / r["grid_cells"],
+            "derived": {k: r[k] for k in
+                        ("grid_cells", "legacy_s", "batched_s", "speedup",
+                         "bit_identical")},
+        },
+        {
+            "name": "sweep/tune_wrht/N=256/w=16",
+            "us_per_call": t["tune_wall_s"] * 1e6,
+            "derived": {k: t[k] for k in
+                        ("candidates", "tuned_m", "tuned_alltoall",
+                         "analytic_m", "tuned_ms", "analytic_ms",
+                         "tuner_win_pct")},
+        },
+    ]
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    result = sweep(quick=quick)
+    path = Path(__file__).resolve().parents[1] / "BENCH_sweep.json"
+    path.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {path}")
+    s = result["sweep"]
+    print(f"sweep: {s['grid_cells']} cells  legacy={s['legacy_s']}s  "
+          f"batched={s['batched_s']}s  speedup={s['speedup']}x  "
+          f"bit_identical={s['bit_identical']}")
+    for t in result["tuner"]:
+        print(f"tune n={t['n']} w={t['w']} H={t['max_hops']}: "
+              f"m={t['tuned_m']} (analytic {t['analytic_m']}) "
+              f"win={t['tuner_win_pct']}%  [{t['candidates']} candidates, "
+              f"{t['tune_wall_s']}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,14 @@ reduction of WRHT vs each baseline next to the paper's claimed numbers
 (75.59 % / 49.25 % / 70.1 %); our baselines are bandwidth-optimal
 implementations (stronger than the paper's — see EXPERIMENTS.md §Repro).
 
+The whole sweep is one ``timing.evaluate_grid`` call (DESIGN.md §9):
+schedules are compiled to ``ScheduleProfile`` arrays once per ``(alg, N)``
+and the payload axis is evaluated in a single broadcasted pass — per-cell
+numbers are bit-identical to calling ``simulator.run_optical`` point-wise
+(``benchmarks/bench_sweep.py`` measures the wall-clock gap between the two
+paths).  ``us_per_call`` therefore reports the *amortized* grid time per
+cell.
+
 The trailing rows exercise the two physical-layer knobs added on top of the
 paper's model: an insertion-loss-constrained WRHT (``PhysicalParams``, hop
 budget capping the tree fan-out) and the SWOT-style event-timed engine with
@@ -17,28 +25,32 @@ from __future__ import annotations
 
 import time
 
-from repro.core import simulator, step_models as sm
+from repro.core import step_models as sm, timing
 from repro.core.topology import PhysicalParams
 
 PAPER_CLAIMS = {"ring": 75.59, "hring": 49.25, "bt": 70.1}
+NS = (1024, 2048, 3072, 4096)
+ALGOS = ("wrht", "ring", "bt", "hring")
 
 
 def rows() -> list[dict]:
     p = sm.OpticalParams()
+    payloads = list(sm.PAPER_MODELS_BITS.values())
+    t0 = time.perf_counter()
+    grid = timing.evaluate_grid(ALGOS, NS, payloads, ("lockstep",), p)
+    cells = len(NS) * len(payloads)
+    us_per_cell = (time.perf_counter() - t0) * 1e6 / cells
     out = []
     reductions = {a: [] for a in ("ring", "hring", "bt")}
-    for n in (1024, 2048, 3072, 4096):
-        for model, bits in sm.PAPER_MODELS_BITS.items():
-            t0 = time.perf_counter()
-            res = {a: simulator.run_optical(a, n, bits, p)
-                   for a in ("wrht", "ring", "bt", "hring")}
-            us = (time.perf_counter() - t0) * 1e6
+    for n in NS:
+        for di, model in enumerate(sm.PAPER_MODELS_BITS):
+            res = {a: grid.total(a, n, "lockstep")[di] for a in ALGOS}
             for a in reductions:
-                reductions[a].append(1 - res["wrht"].total_s / res[a].total_s)
+                reductions[a].append(1 - res["wrht"] / res[a])
             out.append({
                 "name": f"fig4/{model}/N={n}",
-                "us_per_call": us,
-                "derived": {a: round(r.total_s * 1e3, 2) for a, r in res.items()},
+                "us_per_call": us_per_cell,
+                "derived": {a: round(t * 1e3, 2) for a, t in res.items()},
             })
     for a, vals in reductions.items():
         out.append({
@@ -50,19 +62,20 @@ def rows() -> list[dict]:
     # ---- beyond-paper knobs: insertion loss + reconfig overlap ----------
     bits = sm.PAPER_MODELS_BITS["ResNet50"]
     phys = sm.OpticalParams(physical=PhysicalParams())
+    t0 = time.perf_counter()
+    ideal_g = timing.evaluate_grid(("wrht",), (1024, 4096), [bits],
+                                   ("lockstep",), p)
+    lossy_g = timing.evaluate_grid(("wrht",), (1024, 4096), [bits],
+                                   ("lockstep", "overlap"), phys)
+    us = (time.perf_counter() - t0) * 1e6 / 2
     for n in (1024, 4096):
-        t0 = time.perf_counter()
-        ideal = simulator.run_optical("wrht", n, bits, p).total_s
-        lossy = simulator.run_optical("wrht", n, bits, phys).total_s
-        ovl = simulator.run_optical("wrht", n, bits, phys, timing="overlap").total_s
-        us = (time.perf_counter() - t0) * 1e6
         out.append({
             "name": f"fig4/wrht_physical/N={n}",
             "us_per_call": us,
             "derived": {
-                "ideal_ms": round(ideal * 1e3, 2),
-                "hop_budget_ms": round(lossy * 1e3, 2),
-                "overlap_ms": round(ovl * 1e3, 2),
+                "ideal_ms": round(ideal_g.total("wrht", n, "lockstep")[0] * 1e3, 2),
+                "hop_budget_ms": round(lossy_g.total("wrht", n, "lockstep")[0] * 1e3, 2),
+                "overlap_ms": round(lossy_g.total("wrht", n, "overlap")[0] * 1e3, 2),
                 "max_hops": phys.physical.max_hops,
             },
         })

@@ -31,4 +31,23 @@ def rows() -> list[dict]:
                     "factors": list(plan.factors),
                     "cost_ms": round(plan.cost_s * 1e3, 2)},
     })
+    # analytic vs simulated backend: same candidates, costs from the
+    # batched flit-level simulator (repro.core.timing) instead of the
+    # closed forms — the two are interchangeable planner backends
+    for bytes_ in (1 << 14, 62.3e6 * 4):
+        t0 = time.perf_counter()
+        sim = plan_bucket(1024, bytes_, p, m_candidates=(2, 8, 129),
+                          backend="simulated")
+        ana = plan_bucket(1024, bytes_, p, m_candidates=(2, 8, 129))
+        us = (time.perf_counter() - t0) * 1e6
+        out.append({
+            "name": f"planner/simulated_vs_analytic/bytes={int(bytes_)}",
+            "us_per_call": us,
+            "derived": {
+                "sim_strategy": sim.strategy, "sim_m": sim.m,
+                "sim_cost_ms": round(sim.cost_s * 1e3, 3),
+                "analytic_strategy": ana.strategy, "analytic_m": ana.m,
+                "analytic_cost_ms": round(ana.cost_s * 1e3, 3),
+            },
+        })
     return out

@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
                      BENCH_schedule.json via `python -m benchmarks.bench_schedule_build`)
   insertion_loss     insertion-loss feasibility frontier (full sweep writes
                      BENCH_insertion_loss.json via `python -m benchmarks.bench_insertion_loss`)
+  sweep              per-point vs batched grid-evaluation wall-clock + WRHT
+                     auto-tuner (full sweep writes BENCH_sweep.json via
+                     `python -m benchmarks.bench_sweep`)
 """
 
 from __future__ import annotations
@@ -22,6 +25,7 @@ def main() -> None:
     from . import (
         bench_insertion_loss,
         bench_schedule_build,
+        bench_sweep,
         fig4_optical,
         fig5_electrical,
         planner_crossover,
@@ -37,6 +41,7 @@ def main() -> None:
         "roofline": roofline,
         "schedule_build": bench_schedule_build,
         "insertion_loss": bench_insertion_loss,
+        "sweep": bench_sweep,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

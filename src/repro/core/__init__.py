@@ -3,6 +3,7 @@
 #   wavelength    routing & wavelength assignment (first-fit RWA)
 #   step_models   closed-form step counts / times (Table I, Eq. 1)
 #   simulator     optical-ring event simulator (Fig. 4/5 reproduction)
+#   timing        payload-vectorized grid timing + WRHT auto-tuner
 #   collectives   shard_map all-reduce zoo (ring/BT/RD/WRHT) — the TPU port
 #   planner       α–β schedule planner (Lemma 1/Theorem 1 on TPU)
 #   bucketing     gradient bucketing for overlap + per-size planning
@@ -12,4 +13,12 @@
 # Python/NumPy modules (wrht, simulator, ...) stay importable without
 # touching jax device state, so `from repro.core import wrht` is always safe
 # before XLA_FLAGS are pinned.
-from . import step_models, topology, wavelength, wrht, simulator, planner  # noqa: F401
+from . import (  # noqa: F401
+    planner,
+    simulator,
+    step_models,
+    timing,
+    topology,
+    wavelength,
+    wrht,
+)

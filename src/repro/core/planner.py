@@ -25,16 +25,19 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
-# TPU v5e-ish defaults (assignment constants; α calibratable, see DESIGN.md)
+# TPU v5e-ish defaults (assignment constants; α calibratable, see DESIGN.md §4)
 DEFAULT_ALPHA_S = 1e-6          # per collective step: launch + hop latency
-DEFAULT_LINK_GBPS = 50.0        # ICI per link
+DEFAULT_LINK_GBPS = 50.0        # ICI per link (decimal GB/s, vendor convention)
 DEFAULT_LINKS = 4               # links per chip usable concurrently (ring: 2x2 dirs)
+
+BYTES_PER_GB = 1e9              # GB/s -> bytes/s, defined once
+BITS_PER_BYTE = 8               # bit/s link specs -> bytes/s
 
 
 @dataclass(frozen=True)
 class CostParams:
     alpha_s: float = DEFAULT_ALPHA_S
-    link_bw_Bps: float = DEFAULT_LINK_GBPS * 1e9 / 8 * 8  # bytes/s (GB/s * 1e9)
+    link_bw_Bps: float = DEFAULT_LINK_GBPS * BYTES_PER_GB
     links: int = DEFAULT_LINKS
 
     @staticmethod
@@ -43,8 +46,10 @@ class CostParams:
 
     @staticmethod
     def optical(w: int = 64) -> "CostParams":
-        """The paper's regime: huge per-step cost, w parallel channels."""
-        return CostParams(alpha_s=25e-6, link_bw_Bps=40e9 / 8, links=2 * w)
+        """The paper's regime: huge per-step cost, w parallel channels
+        (40 Gb/s per wavelength, so bytes/s = bits/s over 8)."""
+        return CostParams(alpha_s=25e-6, link_bw_Bps=40e9 / BITS_PER_BYTE,
+                          links=2 * w)
 
 
 @dataclass(frozen=True)
@@ -123,6 +128,8 @@ def plan_bucket(
     m_candidates: tuple[int, ...] = (2, 3, 4, 8, 16),
     allow: tuple[str, ...] = ("flat", "rd", "wrht_tree", "hier_scatter"),
     max_hops: int | None = None,
+    backend: str = "analytic",
+    optical: "object | None" = None,
 ) -> Plan:
     """Return the minimum-cost schedule for one bucket on one device axis.
 
@@ -131,8 +138,24 @@ def plan_bucket(
     middle representative would have to reach members more than ``max_hops``
     positions away (``m > 2·max_hops + 1``) is physically infeasible and is
     never enumerated.
+
+    ``backend`` selects the cost model: ``"analytic"`` (the closed-form α–β
+    expressions above) or ``"simulated"`` — the same candidate schedules
+    costed by the flit-level optical simulator through the batched timing
+    engine (``repro.core.timing``), making the two models interchangeable.
+    Under ``backend="simulated"``, ``optical`` optionally supplies explicit
+    ``step_models.OpticalParams`` (otherwise derived from ``params`` via
+    ``OpticalParams.from_cost``); the ``"rd"`` strategy is skipped (it has
+    no explicit optical-ring schedule) and ``"hier_scatter"`` is costed via
+    the H-Ring schedule, i.e. only its two-level factorizations.
     """
     p = params or CostParams.tpu_v5e()
+    if backend == "simulated":
+        return _plan_bucket_simulated(axis_size, bytes_, p, m_candidates,
+                                      allow, max_hops, optical)
+    if backend != "analytic":
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(expected 'analytic' or 'simulated')")
     best: Plan | None = None
 
     def consider(plan: Plan):
@@ -161,6 +184,82 @@ def plan_bucket(
             consider(Plan("hier_scatter", t_hier_scatter(factors, bytes_, p),
                           factors=factors))
     assert best is not None
+    return best
+
+
+def _plan_bucket_simulated(
+    axis_size: int,
+    bytes_: float,
+    p: CostParams,
+    m_candidates: tuple[int, ...],
+    allow: tuple[str, ...],
+    max_hops: int | None,
+    optical,
+) -> Plan:
+    """Cost the candidate schedules with the flit-level simulator.
+
+    Imports the simulator stack lazily so the analytic planner keeps zero
+    package dependencies.  Candidate mapping: ``flat`` → the 2(N-1)-step
+    optical ring, ``wrht_tree`` → the WRHT schedule swept by
+    :func:`repro.core.timing.tune_wrht` over ``m_candidates``,
+    ``hier_scatter`` → the H-Ring schedule for each two-level factorization.
+    All candidates are costed under the optical model's timing engine
+    (``opt.timing``: lockstep/event/overlap), like ``run_optical``.
+    """
+    from . import step_models, timing, wrht
+    from .wavelength import InsertionLossError
+
+    opt = optical or step_models.OpticalParams.from_cost(
+        p.alpha_s, p.link_bw_Bps, p.links
+    )
+    # effective hop budget: an explicit max_hops wins, else the optical
+    # physical model's — must match what tune_wrht derives, or the candidate
+    # pre-filter below would let through fan-outs the tuner then rejects
+    if max_hops is None and opt.physical is not None:
+        max_hops = opt.physical.max_hops
+    detail = {"backend": "simulated"}
+    if axis_size == 1:
+        return Plan("flat", 0.0, detail=dict(detail))
+    d_bits = bytes_ * 8
+    best: Plan | None = None
+
+    def consider(plan: Plan):
+        nonlocal best
+        if best is None or plan.cost_s < best.cost_s:
+            best = plan
+
+    if "flat" in allow:
+        cost = float(timing.ring_times(axis_size, d_bits, opt,
+                                       opt.timing).total_s[0])
+        consider(Plan("flat", cost, detail=dict(detail)))
+    if "wrht_tree" in allow:
+        cap = wrht.feasible_group_size(opt.wavelengths, max_hops)
+        ms = tuple(m for m in m_candidates if 2 <= m <= min(axis_size, cap))
+        if ms:
+            tuned = timing.tune_wrht(axis_size, opt.wavelengths, d_bits,
+                                     max_hops, p=opt, timing=opt.timing,
+                                     m_candidates=ms)
+            m_best, a2a = tuned.best(0)
+            consider(Plan("wrht_tree", float(tuned.best_total_s[0]),
+                          m=m_best, alltoall=a2a, detail=dict(detail)))
+    if "hier_scatter" in allow:
+        for factors in _factorizations(axis_size, max_levels=2):
+            if len(factors) != 2 or factors[0] < 2 or axis_size % factors[0]:
+                continue
+            try:
+                cost = float(timing.hring_times(axis_size, d_bits, opt,
+                                                opt.timing,
+                                                g=factors[0]).total_s[0])
+            except InsertionLossError:
+                continue
+            consider(Plan("hier_scatter", cost, factors=factors,
+                          detail=dict(detail)))
+    # "rd" has no explicit optical-ring schedule: skipped under this backend
+    if best is None:
+        raise ValueError(
+            "no strategy in `allow` has an optical-ring schedule for the "
+            f"simulated backend (allow={allow!r})"
+        )
     return best
 
 

@@ -29,6 +29,7 @@ step is built in O(1) NumPy calls.
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field, replace
 
@@ -145,7 +146,13 @@ def simulate_steps_event(
         if validate:
             validate_no_conflicts(batch, ring.n, ring.w, max_hops=ring.max_hops)
         if len(batch) == 0:
-            per_step.append(0.0)
+            # an empty step still retunes every node's MRRs — charge the
+            # reconfiguration delay here exactly as ``reconfig_s`` (and the
+            # lock-step engine's per_step) account for it, so sum(per_step)
+            # equals the reported total in every engine
+            ready += a
+            t_prev += a
+            per_step.append(a)
             continue
         tx, rx = _step_durations(ring, batch, bits_override)
         if overlap:
@@ -220,6 +227,33 @@ def bt_allreduce_schedule(n: int, d_bits: float) -> list[wrht.Step]:
     return reduce_steps + bcast_steps
 
 
+def hring_group_size(n: int, g: int) -> int:
+    """Largest usable H-Ring group size ``<= g`` dividing ``n`` (1 when none
+    exists, e.g. prime N — callers fall back to the flat ring).  Shared by
+    ``run_optical`` and the batched ``timing`` front-end so both always time
+    the same schedule."""
+    g = min(g, n)
+    while g > 1 and n % g:
+        g -= 1
+    return g
+
+
+def check_hring_span(ring: Ring, n: int, g: int) -> None:
+    """Longest H-Ring lightpath vs the insertion-loss hop budget.
+
+    The inter-group hop spans ``g`` segments (when >= 2 groups exist), the
+    intra wrap link ``g - 1``; the analytic lock-step shortcut skips
+    per-transfer validation, so this single check gates both the per-point
+    and the batched H-Ring paths (shared for the same reason as
+    :func:`hring_group_size`)."""
+    span = g if n // g >= 2 else g - 1
+    if ring.max_hops is not None and span > ring.max_hops:
+        raise InsertionLossError(
+            f"H-Ring lightpath spans {span} segments, exceeding the "
+            f"insertion-loss hop budget of {ring.max_hops}"
+        )
+
+
 def hring_allreduce_schedule(n: int, g: int, d_bits: float) -> list[wrht.Step]:
     """Hierarchical ring [13]: intra-group ring reduce-scatter (chunks d/g),
     inter-group ring all-reduce among the g-group heads on each d/g shard,
@@ -266,18 +300,18 @@ def hring_allreduce_schedule(n: int, g: int, d_bits: float) -> list[wrht.Step]:
 # Front-ends used by the benchmarks.
 # ---------------------------------------------------------------------------
 
-import functools
-
-
-@functools.lru_cache(maxsize=256)
+@functools.lru_cache(maxsize=512)
 def _cached_wrht_schedule(
-    n: int, w: int, m: int | None, max_hops: int | None = None
+    n: int, w: int, m: int | None, max_hops: int | None = None,
+    allow_alltoall: bool = True,
 ) -> wrht.WRHTSchedule:
     """WRHT schedule structure is independent of the payload size — build and
     fully validate (structural + semantic, both vectorized) once per
-    (n, w, m, hop budget).  The historical ``n <= 1024`` validation cap is
-    gone: the array-based validator handles N=32768 in well under a second."""
-    return wrht.build_schedule(n, w, 1.0, m=m, validate=True, max_hops=max_hops)
+    (n, w, m, hop budget, all-to-all policy).  The historical ``n <= 1024``
+    validation cap is gone: the array-based validator handles N=32768 in
+    well under a second."""
+    return wrht.build_schedule(n, w, 1.0, m=m, allow_alltoall=allow_alltoall,
+                               validate=True, max_hops=max_hops)
 
 
 def _simulate(
@@ -302,7 +336,7 @@ def run_optical(
     d_bits: float,
     p: step_models.OpticalParams | None = None,
     g: int = 8,
-    m: int | None = None,
+    m: int | str | None = None,
     timing: str | None = None,
 ) -> SimResult:
     """Simulate one all-reduce on the optical ring.
@@ -313,13 +347,25 @@ def run_optical(
     baseline whose fixed schedule needs longer lightpaths than the budget
     allows (e.g. binary tree at small budgets) raises ``InsertionLossError``,
     which ``benchmarks/bench_insertion_loss.py`` reports as infeasible.
+
+    ``m="auto"`` hands the WRHT fan-out choice to the simulator-backed
+    auto-tuner (:func:`repro.core.timing.tune_wrht`): every feasible group
+    size — and the final all-to-all on/off — is swept through the batched
+    timing engine and the simulated argmin is used here.
     """
     p = p or step_models.OpticalParams()
     timing = timing or p.timing
     ring = Ring(n, p.wavelengths, bandwidth_bps=p.bandwidth_bps,
                 reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
     if algorithm == "wrht":
-        sched = _cached_wrht_schedule(n, p.wavelengths, m, ring.max_hops)
+        allow_alltoall = True
+        if m == "auto":
+            from . import timing as _timing  # import here: timing builds on us
+            tuned = _timing.tune_wrht(n, p.wavelengths, d_bits, ring.max_hops,
+                                      p=p, timing=timing)
+            m, allow_alltoall = tuned.best(0)
+        sched = _cached_wrht_schedule(n, p.wavelengths, m, ring.max_hops,
+                                      allow_alltoall)
         # every WRHT transfer carries the constant full vector d
         return _simulate("wrht", sched.steps, ring, d_bits, timing,
                          validate=False, bits_override=d_bits)
@@ -342,23 +388,13 @@ def run_optical(
         return _simulate("bt", bt_allreduce_schedule(n, d_bits), ring, d_bits,
                          timing)
     if algorithm == "hring":
-        g = min(g, n)
-        while g > 1 and n % g:
-            g -= 1
+        g = hring_group_size(n, g)
         if g < 2:
             # prime (or tiny) N admits no proper grouping: H-Ring degenerates
             # to the flat ring; report that schedule under the hring label
             return replace(run_optical("ring", n, d_bits, p, timing=timing),
                            algorithm="hring")
-        # longest H-Ring lightpath: the inter-group hop spans g segments
-        # (when >= 2 groups exist), the intra wrap link g-1; the analytic
-        # shortcut below skips per-transfer validation, so enforce here
-        span = g if n // g >= 2 else g - 1
-        if ring.max_hops is not None and span > ring.max_hops:
-            raise InsertionLossError(
-                f"H-Ring lightpath spans {span} segments, exceeding the "
-                f"insertion-loss hop budget of {ring.max_hops}"
-            )
+        check_hring_span(ring, n, g)
         if timing != "lockstep":
             # heads and members have genuinely different idle patterns, so
             # the event engines need the explicit full-N schedule

@@ -72,6 +72,28 @@ class OpticalParams:
     physical: PhysicalParams | None = None
     timing: str = "lockstep"
 
+    @staticmethod
+    def from_cost(alpha_s: float, link_bw_Bps: float, links: int,
+                  physical: PhysicalParams | None = None,
+                  timing: str = "lockstep") -> "OpticalParams":
+        """Map the planner's α–β ``CostParams`` onto the optical simulator.
+
+        The α term is the per-step MRR reconfiguration delay, the per-link
+        byte rate becomes the per-wavelength bit rate, and the ``links``
+        concurrent channels split across the two fiber directions
+        (``CostParams.optical(w)`` uses ``links = 2w``, so this mapping is
+        its exact inverse).  Lets ``planner.plan_bucket(backend="simulated")``
+        cost the same candidate schedules with the flit-level simulator
+        instead of the closed forms.
+        """
+        return OpticalParams(
+            bandwidth_bps=link_bw_Bps * 8,
+            reconfig_delay_s=alpha_s,
+            wavelengths=max(1, links // 2),
+            physical=physical,
+            timing=timing,
+        )
+
 
 def max_feasible_m(p: OpticalParams) -> int:
     """Largest WRHT group size under both Lemma 1 and the insertion-loss

@@ -24,7 +24,8 @@ CCW = -1  # counter-clockwise
 
 @dataclass(frozen=True)
 class PhysicalParams:
-    """Optical power budget of one lightpath (paper Sec. III, insertion loss).
+    """Optical power budget of one lightpath (paper Sec. III, insertion loss;
+    DESIGN.md §6 describes the layered enforcement).
 
     A signal leaves the laser at ``laser_power_dbm``, loses a fixed
     ``coupling_loss_db`` entering/leaving the fiber, and loses

@@ -141,6 +141,35 @@ def test_per_step_makespans_sum_to_total():
             assert sum(r.per_step_s) == pytest.approx(r.event_total_s)
 
 
+def test_empty_step_accounting_consistent_across_engines():
+    """Regression: the event engine used to append 0.0 for an empty step and
+    skip its reconfiguration while ``reconfig_s`` still charged it — the
+    per-step list and the reported totals disagreed.  An empty step retunes
+    every node's MRRs: all three engines now charge exactly ``a`` for it,
+    and ``sum(per_step_s)`` equals the reported total everywhere."""
+    ring = _ring(8, 4)
+    real = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [0, 2], [1, 3], CW, [1e6, 1e3], wavelength=[0, 0]))
+    empty = wrht.Step("reduce", 0, TransferBatch.empty())
+    steps = [empty, real, empty, real, empty]
+    a = ring.reconfig_delay_s
+    results = {
+        "lockstep": simulator.simulate_steps("x", steps, ring, 1.0),
+        "event": simulator.simulate_steps_event("x", steps, ring, 1.0),
+        "overlap": simulator.simulate_steps_event("x", steps, ring, 1.0,
+                                                  overlap=True),
+    }
+    for name, r in results.items():
+        assert r.reconfig_s == len(steps) * a, name
+        assert len(r.per_step_s) == len(steps), name
+        for i in (0, 2, 4):
+            assert r.per_step_s[i] == a, (name, i)
+        assert sum(r.per_step_s) == pytest.approx(r.total_s), name
+    # empty steps contribute no serialization, so all engines agree exactly
+    assert results["event"].total_s == results["lockstep"].total_s
+    assert results["overlap"].total_s <= results["lockstep"].total_s
+
+
 def test_relayed_schedule_times_under_both_engines():
     # tight hop budget forces relay sub-steps; both engines must agree on
     # the ordering invariant over the longer schedule

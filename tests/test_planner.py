@@ -1,5 +1,7 @@
 """α–β planner (Lemma 1 on TPU): crossover and regime behavior."""
 
+import pytest
+
 from repro.core.planner import CostParams, crossover_table, plan_bucket
 
 
@@ -38,3 +40,86 @@ def test_hier_scatter_beats_flat_alpha():
     p = CostParams.tpu_v5e()
     b = 64 * 2**20
     assert t_hier_scatter((4, 8, 8), b, p) < t_flat_ring(256, b, p)
+
+
+# ---------------------------------------------------------------------------
+# GB/s -> bytes/s conversion regression (the `/ 8 * 8` no-op is gone)
+# ---------------------------------------------------------------------------
+
+def test_default_link_bandwidth_conversion():
+    """50 GB/s per ICI link is exactly 50e9 bytes/s, and the resulting costs
+    are pinned so any future unit slip shows up as a numeric change."""
+    from repro.core.planner import t_flat_ring, t_rd
+
+    p = CostParams()
+    assert p.link_bw_Bps == 50e9
+    assert CostParams.tpu_v5e().link_bw_Bps == p.link_bw_Bps
+    assert CostParams.optical(64).link_bw_Bps == 5e9   # 40 Gb/s over 8
+    # cost pins: 2*255*1e-6 + 2*(2**20)*(255/256)/50e9 and log2(256)*(α+β·b)
+    assert t_flat_ring(256, float(2**20), p) == pytest.approx(
+        5.517791999999999e-4, rel=1e-12)
+    assert t_rd(256, float(2**20), p) == pytest.approx(
+        1.7577216e-4, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# simulated backend: the flit-level simulator as an interchangeable costing
+# ---------------------------------------------------------------------------
+
+def test_simulated_backend_flat_cost_equals_simulator():
+    from repro.core import simulator, step_models as sm
+
+    p = CostParams.optical(8)
+    plan = plan_bucket(64, 1e6, p, backend="simulated", allow=("flat",))
+    assert plan.strategy == "flat"
+    assert plan.detail["backend"] == "simulated"
+    opt = sm.OpticalParams.from_cost(p.alpha_s, p.link_bw_Bps, p.links)
+    assert opt.bandwidth_bps == 40e9 and opt.wavelengths == 8
+    assert plan.cost_s == simulator.run_optical("ring", 64, 8e6, opt).total_s
+
+
+def test_simulated_backend_picks_regimes_like_analytic():
+    p = CostParams.optical(8)
+    small = plan_bucket(64, 4096.0, p, backend="simulated")
+    big = plan_bucket(64, 1 << 28, p, backend="simulated")
+    assert small.strategy == "wrht_tree"
+    assert big.strategy in ("flat", "hier_scatter")
+    assert small.cost_s < big.cost_s
+
+
+def test_simulated_backend_wrht_uses_tuner():
+    from repro.core import timing
+
+    p = CostParams.optical(8)
+    plan = plan_bucket(64, 1e6, p, backend="simulated",
+                       allow=("wrht_tree",), m_candidates=(2, 4, 8, 17))
+    tuned = timing.tune_wrht(64, 8, 8e6, m_candidates=(2, 4, 8, 17))
+    assert (plan.m, plan.alltoall) == tuned.best(0)
+    assert plan.cost_s == tuned.best_total_s[0]
+
+
+def test_simulated_backend_physical_model_filters_m_consistently():
+    """Regression: the m-candidate pre-filter must use the optical model's
+    hop budget — a tight PhysicalParams used to crash tune_wrht with
+    'no feasible candidates' instead of falling back to flat."""
+    from repro.core import step_models as sm
+    from repro.core.topology import PhysicalParams
+
+    opt = sm.OpticalParams(
+        wavelengths=8,
+        physical=PhysicalParams(insertion_loss_db_per_hop=16.0))  # H=2, cap 5
+    plan = plan_bucket(64, 1e6, CostParams.optical(8), backend="simulated",
+                       optical=opt, m_candidates=(8, 16),
+                       allow=("flat", "wrht_tree"))
+    assert plan.strategy == "flat"            # wrht candidates out of reach
+    plan2 = plan_bucket(64, 1e6, CostParams.optical(8), backend="simulated",
+                        optical=opt, m_candidates=(2, 4, 8, 16))
+    assert plan2.m <= opt.physical.fan_out_cap
+
+
+def test_simulated_backend_rejects_unknown_and_empty():
+    p = CostParams.optical(8)
+    with pytest.raises(ValueError, match="backend"):
+        plan_bucket(64, 1e6, p, backend="magic")
+    with pytest.raises(ValueError, match="simulated"):
+        plan_bucket(64, 1e6, p, backend="simulated", allow=("rd",))

@@ -1,0 +1,303 @@
+"""Batched timing engine vs per-point run_optical (DESIGN.md §9).
+
+The contract pinned here is *bit-identity*, not approximation: for every
+``algorithm × N × payload × timing`` cell, ``timing.evaluate_grid`` (and the
+underlying ``ScheduleProfile`` engines) must reproduce the exact floats of
+``simulator.run_optical`` — same division chains, same flit arithmetic, same
+accumulation order, per-step lists included.  Also covered: the
+simulator-backed auto-tuner's argmin vs brute-force per-candidate
+simulation, and profile/cache behaviour.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import simulator, step_models as sm, timing, wrht
+from repro.core.topology import CW, PhysicalParams, Ring, TransferBatch
+from repro.core.wavelength import InsertionLossError
+
+ALGOS = ("wrht", "ring", "bt", "hring")
+TIMINGS = ("lockstep", "event", "overlap")
+PAYLOADS = (1e3, 1e6, 62.3e6 * 32, 987654321.0)
+
+RESULT_FIELDS = ("algorithm", "n", "d_bits", "steps", "serialization_s",
+                 "reconfig_s", "total_s", "max_wavelengths", "timing",
+                 "event_total_s", "per_step_s")
+
+
+def assert_bit_identical(legacy: simulator.SimResult,
+                         got: simulator.SimResult) -> None:
+    for f in RESULT_FIELDS:
+        assert getattr(legacy, f) == getattr(got, f), f
+
+
+# ---------------------------------------------------------------------------
+# golden equivalence: every grid cell == the per-point path, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alg", ALGOS)
+@pytest.mark.parametrize("tmode", TIMINGS)
+def test_grid_matches_run_optical(alg, tmode):
+    p = sm.OpticalParams(wavelengths=8)
+    # 13: prime N (hring flat-ring fallback); 100: non-power-of-two groups
+    for n in (13, 16, 64, 100):
+        times = timing.algorithm_times(alg, n, PAYLOADS, p, tmode)
+        for i, d in enumerate(PAYLOADS):
+            legacy = simulator.run_optical(alg, n, d, p, timing=tmode)
+            assert_bit_identical(legacy, times.sim_result(i))
+
+
+@pytest.mark.parametrize("tmode", TIMINGS)
+def test_grid_matches_run_optical_with_physical(tmode):
+    phys = sm.OpticalParams(wavelengths=16,
+                            physical=PhysicalParams(insertion_loss_db_per_hop=1.0))
+    for alg in ("wrht", "ring", "hring"):
+        for n in (64, 256):
+            times = timing.algorithm_times(alg, n, PAYLOADS, phys, tmode)
+            for i, d in enumerate(PAYLOADS):
+                legacy = simulator.run_optical(alg, n, d, phys, timing=tmode)
+                assert_bit_identical(legacy, times.sim_result(i))
+
+
+def test_evaluate_grid_front_end_and_sim_result():
+    p = sm.OpticalParams(wavelengths=8)
+    grid = timing.evaluate_grid(ALGOS, (16, 64), PAYLOADS, TIMINGS, p)
+    assert grid.total_s.shape == (4, 2, 3, len(PAYLOADS))
+    assert grid.feasible.all()
+    for alg in ALGOS:
+        for n in (16, 64):
+            for tmode in TIMINGS:
+                for d in PAYLOADS:
+                    legacy = simulator.run_optical(alg, n, d, p, timing=tmode)
+                    assert_bit_identical(
+                        legacy, grid.sim_result(alg, n, d, tmode))
+
+
+def test_grid_marks_infeasible_cells_instead_of_raising():
+    tight = sm.OpticalParams(physical=PhysicalParams(insertion_loss_db_per_hop=4.0))
+    with pytest.raises(InsertionLossError):
+        simulator.run_optical("bt", 256, 1e6, tight)
+    grid = timing.evaluate_grid(("bt", "wrht"), (256,), (1e6,),
+                                ("lockstep",), tight)
+    assert not grid.feasible[0, 0]          # binary tree out of optical reach
+    assert grid.feasible[1, 0]              # WRHT caps its fan-out and fits
+    assert ("bt", 256) in grid.errors
+    assert np.isnan(grid.total("bt", 256, "lockstep")).all()
+    with pytest.raises(InsertionLossError):
+        grid.sim_result("bt", 256, 1e6, "lockstep")
+
+
+def test_hring_span_infeasibility_agrees_across_paths():
+    """The shared span check gates both paths: a hop budget below the
+    inter-group span makes H-Ring infeasible in run_optical (raises) and in
+    the grid (feasible=False, same message), for every timing mode."""
+    tight = sm.OpticalParams(
+        physical=PhysicalParams(insertion_loss_db_per_hop=8.0))  # H=4 < g=8
+    for tmode in TIMINGS:
+        with pytest.raises(InsertionLossError, match="H-Ring lightpath"):
+            simulator.run_optical("hring", 64, 1e6, tight, timing=tmode)
+    grid = timing.evaluate_grid(("hring",), (64,), (1e6,), TIMINGS, tight)
+    assert not grid.feasible[0, 0]
+    assert "H-Ring lightpath" in grid.errors[("hring", 64)]
+
+
+def test_grid_sim_result_rejects_unknown_payload():
+    grid = timing.evaluate_grid(("ring",), (16,), (1e6,), ("lockstep",))
+    with pytest.raises(KeyError, match="not on this grid"):
+        grid.sim_result("ring", 16, 2e6, "lockstep")
+
+
+def test_profile_dedupes_shared_batches():
+    """H-Ring repeats its intra/inter template batches across steps: the
+    profile stores (and validates) each unique segment once."""
+    p = sm.OpticalParams(wavelengths=8)
+    prof = timing._hring_profile(64, 8, p)
+    assert prof.num_steps == 2 * (8 - 1) + 2 * (64 // 8 - 1)
+    assert prof.num_segments == 2
+    assert prof.num_transfers == 64 + 64 // 8
+
+
+def test_profile_caches_hit_across_payloads_and_timings():
+    timing.clear_caches()
+    p = sm.OpticalParams(wavelengths=8)
+    timing.evaluate_grid(("wrht",), (64,), (1e6,), TIMINGS, p)
+    timing.evaluate_grid(("wrht",), (64,), (1e7, 1e8), TIMINGS, p)
+    info = timing._wrht_profile.cache_info()
+    assert info.misses == 1          # compiled once
+    assert info.hits >= 5            # reused for every other (timing, call)
+
+
+def test_payload_class_division_chain_exact():
+    """(d / g) / n_groups can differ from d / (g·n_groups) in the last ulp —
+    the chain representation must replay the builder's exact divisions."""
+    d, g, ng = 738350593.8536226, 6, 14
+    assert timing.PayloadClass((g, ng)).bits(np.asarray([d]))[0] == (d / g) / ng
+    # and the collapsed fraction genuinely differs for this payload
+    assert (d / g) / ng != d / (g * ng)
+
+
+def test_keep_per_step_false_totals_unchanged():
+    p = sm.OpticalParams(wavelengths=8)
+    full = timing.algorithm_times("hring", 64, PAYLOADS, p, "overlap")
+    slim = timing.algorithm_times("hring", 64, PAYLOADS, p, "overlap",
+                                  keep_per_step=False)
+    assert slim.per_step_s is None
+    np.testing.assert_array_equal(full.total_s, slim.total_s)
+    np.testing.assert_array_equal(full.serialization_s, slim.serialization_s)
+
+
+# ---------------------------------------------------------------------------
+# generic profiles: payload classes + empty steps
+# ---------------------------------------------------------------------------
+
+def test_profile_classifies_heterogeneous_payload_classes():
+    ring = Ring(8, 4)
+    d = 1e6
+    step = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [0, 2], [1, 3], CW, [d, d / 1000], wavelength=[0, 0]))
+    prof = timing.ScheduleProfile.from_steps(
+        [step], ring,
+        classes=(timing.PayloadClass(()), timing.PayloadClass((1000,))),
+        d_ref=d)
+    legacy = simulator.simulate_steps("x", [step], ring, d)
+    got = prof.evaluate(ring, [d], "lockstep").sim_result(0)
+    assert got.total_s == legacy.total_s
+    assert got.per_step_s == legacy.per_step_s
+
+
+def test_profile_rejects_unmatched_bits():
+    ring = Ring(8, 4)
+    step = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [0], [1], CW, [3.0], wavelength=[0]))
+    with pytest.raises(ValueError, match="payload class"):
+        timing.ScheduleProfile.from_steps(
+            [step], ring,
+            classes=(timing.PayloadClass(()), timing.PayloadClass((2,))),
+            d_ref=1.0)
+
+
+def test_profile_empty_steps_match_legacy_engines():
+    ring = Ring(8, 4)
+    real = wrht.Step("reduce", 0, TransferBatch.from_arrays(
+        [0, 2], [1, 3], CW, 1.0, wavelength=[0, 0]))
+    empty = wrht.Step("reduce", 0, TransferBatch.empty())
+    steps = [empty, real, empty, real, empty]
+    prof = timing.ScheduleProfile.from_steps(steps, ring)
+    for tmode in TIMINGS:
+        if tmode == "lockstep":
+            legacy = simulator.simulate_steps("x", steps, ring, 1.0,
+                                              bits_override=1.0)
+        else:
+            legacy = simulator.simulate_steps_event(
+                "x", steps, ring, 1.0, overlap=tmode == "overlap",
+                bits_override=1.0)
+        got = prof.evaluate(ring, [1.0], tmode).sim_result(0)
+        assert got.total_s == legacy.total_s
+        assert got.per_step_s == legacy.per_step_s
+
+
+# ---------------------------------------------------------------------------
+# auto-tuner: simulated argmin == brute force
+# ---------------------------------------------------------------------------
+
+def _brute_force_best(n, w, d, tmode, max_hops=None):
+    ring = Ring(n, w)
+    best = None
+    for m in range(2, wrht.feasible_group_size(w, max_hops) + 1):
+        sched_a2a = wrht.build_schedule(n, w, 1.0, m=m, allow_alltoall=True,
+                                        max_hops=max_hops)
+        took = any(s.kind == "alltoall" for s in sched_a2a.steps)
+        for a2a in (True, False):
+            if not a2a and not took:
+                continue  # identical schedule either way
+            sched = wrht.build_schedule(n, w, 1.0, m=m, allow_alltoall=a2a,
+                                        max_hops=max_hops)
+            if tmode == "lockstep":
+                r = simulator.simulate_steps("x", sched.steps, ring, d,
+                                             validate=False, bits_override=d)
+            else:
+                r = simulator.simulate_steps_event(
+                    "x", sched.steps, ring, d, overlap=tmode == "overlap",
+                    validate=False, bits_override=d)
+            if best is None or r.total_s < best[0]:
+                best = (r.total_s, m, a2a)
+    return best
+
+
+@pytest.mark.parametrize("tmode", ("lockstep", "overlap"))
+def test_tune_wrht_matches_brute_force(tmode):
+    n, w = 64, 4
+    ds = (1e3, 1e7, 1e9)
+    tr = timing.tune_wrht(n, w, ds, timing=tmode)
+    for i, d in enumerate(ds):
+        total, m, a2a = _brute_force_best(n, w, d, tmode)
+        assert tr.best(i) == (m, a2a)
+        assert tr.best_total_s[i] == total
+
+
+def test_tune_wrht_respects_hop_budget():
+    tr = timing.tune_wrht(64, 8, 1e7, max_hops=4)
+    assert tr.analytic_m == wrht.feasible_group_size(8, 4) == 9
+    assert all(m <= 9 for m, _ in tr.candidates)
+    total, m, a2a = _brute_force_best(64, 8, 1e7, "lockstep", max_hops=4)
+    assert tr.best(0) == (m, a2a)
+    assert tr.best_total_s[0] == total
+
+
+def test_tune_wrht_never_worse_than_analytic_choice():
+    for n, w in ((64, 4), (256, 8)):
+        tr = timing.tune_wrht(n, w, 1e8)
+        analytic_rows = [i for i, (m, _) in enumerate(tr.candidates)
+                         if m == tr.analytic_m]
+        assert tr.best_total_s[0] <= tr.total_s[analytic_rows[0], 0]
+
+
+def test_tune_wrht_caps_candidates_at_n():
+    """Regression: every m >= n yields the identical single-group schedule —
+    the sweep must not build hundreds of duplicates on small rings."""
+    tr = timing.tune_wrht(8, 64, 1e6)
+    assert all(m <= 8 for m, _ in tr.candidates)
+    assert len(tr.candidates) <= 2 * 7        # m in 2..8, ≤2 a2a rows each
+    # and the capped argmin still matches the uncapped brute force (ties
+    # break toward smaller m, so m > n candidates can never win)
+    total, m, a2a = _brute_force_best(8, 64, 1e6, "lockstep")
+    if m > 8:   # brute force may name a duplicate row; totals still agree
+        assert tr.best_total_s[0] == total
+    else:
+        assert tr.best(0) == (m, a2a)
+        assert tr.best_total_s[0] == total
+
+
+def test_run_optical_m_auto_uses_tuned_schedule():
+    p = sm.OpticalParams(wavelengths=4)
+    auto = simulator.run_optical("wrht", 64, 1e7, p, m="auto")
+    default = simulator.run_optical("wrht", 64, 1e7, p)
+    assert auto.total_s <= default.total_s
+    # the reported result is the tuned schedule, re-simulated point-wise
+    tr = timing.tune_wrht(64, 4, 1e7)
+    assert auto.total_s == tr.best_total_s[0]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep (skipped gracefully when hypothesis is missing)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=96),
+        w=st.sampled_from([2, 4, 8]),
+        d=st.floats(min_value=1.0, max_value=1e11, allow_nan=False),
+        alg=st.sampled_from(ALGOS),
+        tmode=st.sampled_from(TIMINGS),
+    )
+    def test_grid_matches_run_optical_hypothesis(n, w, d, alg, tmode):
+        p = sm.OpticalParams(wavelengths=w)
+        times = timing.algorithm_times(alg, n, [d], p, tmode)
+        assert_bit_identical(simulator.run_optical(alg, n, d, p, timing=tmode),
+                             times.sim_result(0))
+else:  # pragma: no cover - exercised only without hypothesis installed
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_grid_matches_run_optical_hypothesis():
+        pass

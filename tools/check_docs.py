@@ -12,6 +12,10 @@ Three classes of reference are verified (exit code 1 on any failure):
   3. Section anchors — every ``DESIGN.md §X`` / ``EXPERIMENTS.md §X``
      reference found in docs, source and tests must match a ``## §X``
      heading in the referenced file.
+  4. Anchor coverage (the reverse direction) — every ``## §X`` heading
+     defined in DESIGN.md / EXPERIMENTS.md must be cited at least once
+     (full ``<file>.md §X`` form) from the docs, source or tests, so new
+     sections cannot silently become dead weight.
 
 Run from anywhere:  python tools/check_docs.py
 """
@@ -81,6 +85,7 @@ def main() -> int:
     sources = [REPO / d for d in DOC_FILES]
     for glob in CODE_GLOBS:
         sources.extend(REPO.glob(glob))
+    referenced: set[tuple[str, str]] = set()
     for src in sources:
         rel = src.relative_to(REPO)
         for fname, sec in SECTION_REF.findall(src.read_text()):
@@ -89,6 +94,13 @@ def main() -> int:
             # list items inside a section are cited as §Methodology-5
             if sec not in known and sec.split("-")[0] not in known:
                 fail(errors, f"{rel}: dangling reference {fname}.md §{sec}")
+            referenced.add((f"{fname}.md", sec.split("-")[0]))
+
+    # reverse direction: every defined anchor must be cited somewhere
+    for fname, known in anchors.items():
+        for sec in sorted(known):
+            if (fname, sec) not in referenced:
+                fail(errors, f"{fname}: anchor §{sec} is never referenced")
 
     if errors:
         print(f"check_docs: {len(errors)} problem(s)")
