@@ -1,0 +1,201 @@
+"""Amortized planning wall-clock: batched tuner + two-tier plan cache.
+
+Two measurements, written to ``BENCH_planner.json`` by
+``python -m benchmarks.bench_planner`` (DESIGN.md §10, EXPERIMENTS.md §Perf):
+
+* ``tuner`` — ``timing.tune_wrht`` through the batched multi-candidate
+  builder vs ``timing.tune_wrht_reference`` (the per-candidate loop kept as
+  the golden oracle), cold caches, on the PR-3 sweep's tuner cells.  The
+  acceptance bar is a ≥5× speedup with **bit-identical** candidates, totals
+  and argmin — both are asserted here at measurement time and recorded in
+  the artifact.
+* ``plan_buckets`` — cold vs warm throughput (plans/second) of
+  ``planner.plan_buckets`` over a realistic gradient-bucket size list,
+  simulated backend: the cold call pays one batched candidate build; the
+  warm call hits the plan cache and skips both build and compile.  The
+  per-bucket ``plan_bucket`` loop is timed alongside to show what the batch
+  API amortizes.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the cells for CI smoke runs (the workflow uploads the
+JSON as an artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import plan_cache, planner, step_models as sm, timing
+
+# the PR-3 sweep's tuner portion (benchmarks/bench_sweep.measure_tuner)
+TUNER_CELLS = ((1024, 64, None), (1024, 16, 16), (4096, 64, None))
+QUICK_TUNER_CELLS = ((256, 16, None), (256, 16, 8))
+
+
+def measure_tuner(cells=TUNER_CELLS) -> dict:
+    """Cold batched vs cold per-candidate tuner, with bit-identity checks."""
+    d = sm.PAPER_MODELS_BITS["ResNet50"]
+    rows = []
+    total_ref = total_batched = 0.0
+    all_identical = True
+    for n, w, max_hops in cells:
+        timing.clear_caches()
+        t0 = time.perf_counter()
+        ref = timing.tune_wrht_reference(n, w, d, max_hops)
+        ref_s = time.perf_counter() - t0
+
+        timing.clear_caches()
+        t0 = time.perf_counter()
+        bat = timing.tune_wrht(n, w, d, max_hops)
+        batched_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        timing.tune_wrht(n, w, d, max_hops)
+        warm_s = time.perf_counter() - t0
+
+        identical = (
+            ref.candidates == bat.candidates
+            and np.array_equal(ref.total_s, bat.total_s)
+            and np.array_equal(ref.steps, bat.steps)
+            and np.array_equal(ref.best_m, bat.best_m)
+            and np.array_equal(ref.best_alltoall, bat.best_alltoall)
+        )
+        all_identical &= identical
+        total_ref += ref_s
+        total_batched += batched_s
+        rows.append({
+            "n": n, "w": w, "max_hops": max_hops,
+            "candidates": len(bat.candidates),
+            "tuned_m": int(bat.best_m[0]),
+            "reference_s": round(ref_s, 4),
+            "batched_s": round(batched_s, 4),
+            "warm_s": round(warm_s, 4),
+            "speedup": round(ref_s / batched_s, 1),
+            "bit_identical": identical,
+        })
+    return {
+        "cells": rows,
+        "reference_s": round(total_ref, 4),
+        "batched_s": round(total_batched, 4),
+        "speedup": round(total_ref / total_batched, 1),
+        "bit_identical": all_identical,
+    }
+
+
+def bucket_sizes(n_buckets: int = 24) -> list[float]:
+    """Log-spaced gradient-bucket byte sizes, 4 KB .. 256 MB (what a
+    size-capped partition of a transformer's parameters produces)."""
+    return np.geomspace(4 * 2**10, 256 * 2**20, n_buckets).tolist()
+
+
+def measure_plan_buckets(axis_size: int = 1024, w: int = 64,
+                         n_buckets: int = 24) -> dict:
+    """Cold vs warm ``plan_buckets`` throughput, simulated backend."""
+    sizes = bucket_sizes(n_buckets)
+    p = planner.CostParams.optical(w)
+
+    timing.clear_caches()
+    t0 = time.perf_counter()
+    cold_plans = planner.plan_buckets(axis_size, sizes, p, backend="simulated")
+    cold_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    warm_plans = planner.plan_buckets(axis_size, sizes, p, backend="simulated")
+    warm_s = time.perf_counter() - t0
+    assert warm_plans == cold_plans
+
+    # what the batch API amortizes: one plan_bucket call per bucket (warm
+    # caches — the historical per-step-call pattern of the training loop)
+    t0 = time.perf_counter()
+    loop_plans = [planner.plan_bucket(axis_size, b, p, backend="simulated")
+                  for b in sizes]
+    loop_warm_s = time.perf_counter() - t0
+    assert loop_plans == cold_plans
+
+    t0 = time.perf_counter()
+    analytic = planner.plan_buckets(axis_size, sizes, p)
+    analytic_s = time.perf_counter() - t0
+    stats = plan_cache.get_default().stats
+    return {
+        "axis_size": axis_size,
+        "wavelengths": w,
+        "buckets": n_buckets,
+        "cold_s": round(cold_s, 4),
+        "warm_s": round(warm_s, 5),
+        "cold_plans_per_s": round(n_buckets / cold_s, 1),
+        "warm_plans_per_s": round(n_buckets / warm_s, 1),
+        "warm_speedup": round(cold_s / warm_s, 1),
+        "loop_warm_s": round(loop_warm_s, 4),
+        "batch_vs_loop_warm": round(loop_warm_s / warm_s, 1),
+        "analytic_s": round(analytic_s, 5),
+        "strategies": sorted({pl.strategy for pl in cold_plans}),
+        "cache": {"memory_hits": stats.memory_hits,
+                  "disk_hits": stats.disk_hits,
+                  "misses": stats.misses},
+    }
+
+
+def bench(quick: bool = False) -> dict:
+    if quick:
+        tuner = measure_tuner(QUICK_TUNER_CELLS)
+        buckets = measure_plan_buckets(axis_size=256, w=16, n_buckets=12)
+    else:
+        tuner = measure_tuner()
+        buckets = measure_plan_buckets()
+    return {
+        "benchmark": "planner_amortized",
+        "quick": quick,
+        "tuner": tuner,
+        "plan_buckets": buckets,
+    }
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` harness (CI smoke)."""
+    t = measure_tuner(QUICK_TUNER_CELLS)
+    b = measure_plan_buckets(axis_size=256, w=16, n_buckets=8)
+    return [
+        {
+            "name": "planner/tuner_batched_vs_percandidate",
+            "us_per_call": t["batched_s"] * 1e6 / max(1, len(t["cells"])),
+            "derived": {k: t[k] for k in
+                        ("reference_s", "batched_s", "speedup",
+                         "bit_identical")},
+        },
+        {
+            "name": "planner/plan_buckets/N=256/w=16",
+            "us_per_call": b["cold_s"] * 1e6 / b["buckets"],
+            "derived": {k: b[k] for k in
+                        ("cold_plans_per_s", "warm_plans_per_s",
+                         "warm_speedup", "batch_vs_loop_warm")},
+        },
+    ]
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    result = bench(quick=quick)
+    path = Path(__file__).resolve().parents[1] / "BENCH_planner.json"
+    path.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {path}")
+    t = result["tuner"]
+    print(f"tuner: reference={t['reference_s']}s batched={t['batched_s']}s "
+          f"speedup={t['speedup']}x bit_identical={t['bit_identical']}")
+    for c in t["cells"]:
+        print(f"  n={c['n']} w={c['w']} H={c['max_hops']}: "
+              f"{c['reference_s']}s -> {c['batched_s']}s "
+              f"({c['speedup']}x, warm {c['warm_s']}s)")
+    b = result["plan_buckets"]
+    print(f"plan_buckets N={b['axis_size']}: cold {b['cold_plans_per_s']} "
+          f"plans/s, warm {b['warm_plans_per_s']} plans/s "
+          f"({b['warm_speedup']}x), batch vs per-bucket loop (warm) "
+          f"{b['batch_vs_loop_warm']}x")
+
+
+if __name__ == "__main__":
+    main()

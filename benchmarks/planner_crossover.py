@@ -50,4 +50,23 @@ def rows() -> list[dict]:
                 "analytic_cost_ms": round(ana.cost_s * 1e3, 3),
             },
         })
+    # full crossover under the simulated backend (one batched plan_buckets
+    # call via the crossover_table pass-through), with and without a hop
+    # budget — where the simulated crossover moves vs the closed forms
+    p_sim = CostParams.optical(8)
+    for max_hops in (None, 8):
+        t0 = time.perf_counter()
+        rows_sim = crossover_table(64, params=p_sim, backend="simulated",
+                                   max_hops=max_hops)
+        us = (time.perf_counter() - t0) * 1e6
+        flips = [r["bytes"] for prev, r in zip(rows_sim, rows_sim[1:])
+                 if r["strategy"] != prev["strategy"]]
+        out.append({
+            "name": f"planner/crossover_simulated/H={max_hops}",
+            "us_per_call": us / len(rows_sim),
+            "derived": {
+                "strategies": [r["strategy"] for r in rows_sim],
+                "crossover_bytes": flips,
+            },
+        })
     return out

@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   sweep              per-point vs batched grid-evaluation wall-clock + WRHT
                      auto-tuner (full sweep writes BENCH_sweep.json via
                      `python -m benchmarks.bench_sweep`)
+  planner_batch      amortized planning: batched tuner vs per-candidate loop
+                     + plan-cache cold/warm throughput (full sweep writes
+                     BENCH_planner.json via `python -m benchmarks.bench_planner`)
 """
 
 from __future__ import annotations
@@ -24,6 +27,7 @@ import sys
 def main() -> None:
     from . import (
         bench_insertion_loss,
+        bench_planner,
         bench_schedule_build,
         bench_sweep,
         fig4_optical,
@@ -42,6 +46,7 @@ def main() -> None:
         "schedule_build": bench_schedule_build,
         "insertion_loss": bench_insertion_loss,
         "sweep": bench_sweep,
+        "planner_batch": bench_planner,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

@@ -88,9 +88,26 @@ def bucketed_allreduce(
     """Apply ``apply_fn(flat_bucket, bucket_bytes) -> flat_bucket`` to every
     bucket of ``tree`` and reassemble.  ``apply_fn`` is where the planner's
     per-size schedule choice plugs in."""
+    return bucketed_apply_indexed(
+        tree, lambda b, nbytes, i: apply_fn(b, nbytes),
+        plan_buckets(tree, max_bucket_bytes), sync_dtype=sync_dtype)
+
+
+def bucketed_apply_indexed(tree, apply_fn, spec: BucketSpec, sync_dtype=None):
+    """Like :func:`bucketed_allreduce`, but against a *precomputed*
+    ``spec`` and with the bucket index passed through:
+    ``apply_fn(flat_bucket, bucket_bytes, bucket_index)``.
+
+    This is the amortized-planning entry point (DESIGN.md §10): the trainer
+    computes the bucket partition and every bucket's schedule once at setup
+    (``train_step.plan_gradient_sync``), and each traced step just
+    dispatches bucket ``i`` to its precomputed plan.
+    """
     leaves = jax.tree.leaves(tree)
+    if tuple(tuple(l.shape) for l in leaves) != spec.leaf_shapes:
+        raise ValueError("tree leaves do not match the precomputed BucketSpec")
     dtypes = [l.dtype for l in leaves]
-    spec = plan_buckets(tree, max_bucket_bytes)
     buckets = flatten_to_buckets(tree, spec, dtype=sync_dtype)
-    out = [apply_fn(b, b.size * b.dtype.itemsize) for b in buckets]
+    out = [apply_fn(b, b.size * b.dtype.itemsize, i)
+           for i, b in enumerate(buckets)]
     return unflatten_buckets(out, spec, dtypes=dtypes)

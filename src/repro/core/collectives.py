@@ -278,10 +278,9 @@ def allreduce(
     algorithm: str = "psum",
     **kw,
 ) -> jax.Array:
-    fn = ALGORITHMS[algorithm]
-    if algorithm in ("psum",):
-        return fn(x, axis_name, axis_size)
-    return fn(x, axis_name, axis_size, **kw) if kw else fn(x, axis_name, axis_size)
+    if algorithm == "psum":
+        kw = {}  # the XLA reference takes no tuning knobs
+    return ALGORITHMS[algorithm](x, axis_name, axis_size, **kw)
 
 
 def make_sharded_allreduce(mesh, axis_name: str, algorithm: str = "psum", **kw):

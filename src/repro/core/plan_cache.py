@@ -1,0 +1,273 @@
+"""Two-tier plan cache: WRHT schedules + compiled timing profiles.
+
+The amortized planning layer of DESIGN.md §10.  A network plan is a
+first-class, reused artifact (TopoOpt's thesis): the expensive part of
+planning — building a WRHT schedule and compiling it to a
+:class:`~repro.core.timing.ScheduleProfile` — depends only on the
+*d-independent structure* ``(n, w, m, alltoall, max_hops, rwa)``, never on
+the payload size, so one cache entry serves every bucket size, every
+``OpticalParams`` flavour and every timing mode.
+
+Two tiers:
+
+* **memory** — an in-process LRU of ``(schedule, profile)`` pairs, the
+  successor of the ad-hoc ``functools.lru_cache`` wrappers that used to
+  live in ``simulator._cached_wrht_schedule`` and ``timing._wrht_profile``
+  (both now delegate here).
+* **disk** — an optional ``.npz`` artifact per key (JSON metadata + the
+  profile's stacked arrays), so a planning server restart — or a training
+  job re-launch — skips both build and compile.  Every artifact carries a
+  :data:`SCHEMA_VERSION` stamp in its filename *and* metadata; entries
+  written under any other version are invisible (invalidation by version
+  bump, never by mutation).
+
+Build/validation contract: ``schedule(key)`` always returns a **fully
+validated** schedule (``wrht.build_schedule(validate=True)``).  Profiles
+may additionally be *published* by the batched auto-tuner
+(:func:`~repro.core.timing.tune_wrht` → :meth:`PlanCache.put_profile`);
+those are compiled from the batched builder's construction, which is
+golden-tested bit-identical to the validated per-candidate path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zipfile
+from collections import OrderedDict
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from . import wrht
+from .topology import Ring
+
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    """The d-independent identity of one WRHT plan.
+
+    ``m=None`` means the builder's default fan-out (Lemma 1 capped by the
+    hop budget); ``max_hops=None`` means no insertion-loss constraint.
+    """
+
+    n: int
+    w: int
+    m: int | None = None
+    alltoall: bool = True
+    max_hops: int | None = None
+    rwa: str = "fast"
+
+    def filename(self) -> str:
+        m = "auto" if self.m is None else str(self.m)
+        h = "inf" if self.max_hops is None else str(self.max_hops)
+        return (f"wrht-n{self.n}-w{self.w}-m{m}-a2a{int(self.alltoall)}"
+                f"-H{h}-{self.rwa}.v{SCHEMA_VERSION}.npz")
+
+    def meta(self) -> dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "n": self.n, "w": self.w, "m": self.m,
+            "alltoall": self.alltoall, "max_hops": self.max_hops,
+            "rwa": self.rwa,
+        }
+
+
+@dataclass
+class CacheStats:
+    """Hit/miss accounting: every ``schedule()``/``profile()`` lookup
+    increments exactly one of the first three counters."""
+
+    memory_hits: int = 0
+    disk_hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    disk_writes: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.memory_hits + self.disk_hits
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+
+class PlanCache:
+    """Two-tier (memory LRU + optional disk) cache of WRHT plans."""
+
+    def __init__(self, capacity: int = 1024,
+                 disk_dir: str | os.PathLike | None = None) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.disk_dir = Path(disk_dir) if disk_dir is not None else None
+        if self.disk_dir is not None:
+            self.disk_dir.mkdir(parents=True, exist_ok=True)
+        self.stats = CacheStats()
+        # key -> {"schedule": WRHTSchedule | None, "profile": Profile | None}
+        self._entries: "OrderedDict[PlanKey, dict]" = OrderedDict()
+
+    # ------------------------------------------------------------------
+    # memory tier
+    # ------------------------------------------------------------------
+
+    def _touch(self, key: PlanKey) -> dict:
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = {"schedule": None, "profile": None}
+            self._entries[key] = entry
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        else:
+            self._entries.move_to_end(key)
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._entries
+
+    # ------------------------------------------------------------------
+    # lookups
+    # ------------------------------------------------------------------
+
+    def _build_schedule(self, key: PlanKey) -> wrht.WRHTSchedule:
+        # payload-independent structure (the bits_override convention):
+        # build with d=1 and fully validate, exactly like the historical
+        # simulator._cached_wrht_schedule
+        return wrht.build_schedule(
+            key.n, key.w, 1.0, m=key.m, allow_alltoall=key.alltoall,
+            validate=True, rwa=key.rwa, max_hops=key.max_hops,
+        )
+
+    def _schedule_nostat(self, key: PlanKey) -> wrht.WRHTSchedule:
+        entry = self._touch(key)
+        if entry["schedule"] is None:
+            entry["schedule"] = self._build_schedule(key)
+        return entry["schedule"]
+
+    def schedule(self, key: PlanKey) -> wrht.WRHTSchedule:
+        """The validated schedule for ``key`` (build + store on miss)."""
+        entry = self._touch(key)
+        if entry["schedule"] is not None:
+            self.stats.memory_hits += 1
+        else:
+            self.stats.misses += 1
+            entry["schedule"] = self._build_schedule(key)
+        return entry["schedule"]
+
+    def peek_profile(self, key: PlanKey):
+        """The cached profile for ``key`` — memory tier then disk tier —
+        or ``None`` without building anything.  The batched tuner peeks
+        before compiling so a restarted process with a disk tier skips both
+        build and compile for every candidate it has seen."""
+        entry = self._touch(key)
+        if entry["profile"] is not None:
+            self.stats.memory_hits += 1
+            return entry["profile"]
+        prof = self._disk_load(key)
+        if prof is not None:
+            self.stats.disk_hits += 1
+            entry["profile"] = prof
+            return prof
+        self.stats.misses += 1
+        return None
+
+    def profile(self, key: PlanKey):
+        """The compiled :class:`~repro.core.timing.ScheduleProfile` for
+        ``key``: memory tier, then disk tier, then build + compile."""
+        from . import timing
+
+        prof = self.peek_profile(key)
+        if prof is not None:
+            return prof
+        sched = self._schedule_nostat(key)
+        # the builder fully validated the schedule; every transfer carries
+        # the constant full vector d (the bits_override convention)
+        prof = timing.ScheduleProfile.from_steps(
+            sched.steps, Ring(max(key.n, 2), key.w), validate=False)
+        self.put_profile(key, prof)
+        return prof
+
+    def put_profile(self, key: PlanKey, profile, schedule=None) -> None:
+        """Publish a compiled profile (the batched tuner's insertion path);
+        written through to the disk tier when one is configured."""
+        entry = self._touch(key)
+        entry["profile"] = profile
+        if schedule is not None:
+            entry["schedule"] = schedule
+        self._disk_store(key, profile)
+
+    def clear(self) -> None:
+        """Drop the memory tier and reset the counters (disk artifacts are
+        kept — delete the directory to clear the disk tier)."""
+        self._entries.clear()
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------------
+    # disk tier
+    # ------------------------------------------------------------------
+
+    def _disk_store(self, key: PlanKey, profile) -> None:
+        if self.disk_dir is None:
+            return
+        from . import timing
+
+        meta, arrays = timing.profile_to_arrays(profile)
+        meta["key"] = key.meta()
+        path = self.disk_dir / key.filename()
+        # unique temp name: concurrent writers of the same key (two training
+        # jobs sharing one cache dir) must never interleave into one file —
+        # whoever replaces last wins, atomically
+        tmp = path.with_suffix(f".{os.getpid()}-{os.urandom(4).hex()}.tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, meta=np.frombuffer(
+                json.dumps(meta).encode(), dtype=np.uint8), **arrays)
+        os.replace(tmp, path)
+        self.stats.disk_writes += 1
+
+    def _disk_load(self, key: PlanKey):
+        if self.disk_dir is None:
+            return None
+        path = self.disk_dir / key.filename()
+        if not path.exists():
+            return None
+        from . import timing
+
+        try:
+            with np.load(path) as data:
+                meta = json.loads(bytes(data["meta"]).decode())
+                if meta.get("key", {}).get("schema_version") != SCHEMA_VERSION:
+                    return None  # stale schema: invisible, never migrated
+                arrays = {k: data[k] for k in data.files if k != "meta"}
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile,
+                json.JSONDecodeError):
+            return None  # unreadable/corrupt artifact: treat as a miss
+        return timing.profile_from_arrays(meta, arrays)
+
+
+# ---------------------------------------------------------------------------
+# process-default instance (what simulator/timing delegate to)
+# ---------------------------------------------------------------------------
+
+_default: PlanCache | None = None
+
+
+def get_default() -> PlanCache:
+    """The process-wide cache.  The disk tier is off unless the
+    ``REPRO_PLAN_CACHE_DIR`` environment variable names a directory."""
+    global _default
+    if _default is None:
+        _default = PlanCache(disk_dir=os.environ.get("REPRO_PLAN_CACHE_DIR"))
+    return _default
+
+
+def set_default(cache: PlanCache | None) -> None:
+    global _default
+    _default = cache

@@ -17,13 +17,17 @@ schedules, cost them under the α–β model, return the argmin.
 The crossover the paper exploits appears exactly here: small buckets are
 latency-bound (few-step WRHT tree wins), huge buckets are bandwidth-bound
 (flat or hierarchical scatter wins).  ``benchmarks/planner_crossover.py``
-plots it; the trainer uses :func:`plan_bucket` per gradient bucket.
+plots it; the trainer plans all of its gradient buckets in one amortized
+:func:`plan_buckets` call at setup (DESIGN.md §10) and dispatches each
+bucket from the cached plan.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+
+import numpy as np
 
 # TPU v5e-ish defaults (assignment constants; α calibratable, see DESIGN.md §4)
 DEFAULT_ALPHA_S = 1e-6          # per collective step: launch + hop latency
@@ -64,39 +68,67 @@ class Plan:
     detail: dict = field(default_factory=dict, compare=False, hash=False)
 
 
-def t_flat_ring(s: int, bytes_: float, p: CostParams) -> float:
+# Cost closed forms.  The ``_arr`` versions over a bytes *axis* are the
+# single implementation (every form is affine in bytes, so the batched
+# planner evaluates candidate × bucket matrices in one pass); the scalar
+# entry points below are one-element wrappers — float and float64 IEEE
+# arithmetic coincide, so the two views are bit-identical.
+
+def _t_flat_ring_arr(s: int, b: np.ndarray, p: CostParams) -> np.ndarray:
     if s == 1:
-        return 0.0
-    return 2 * (s - 1) * p.alpha_s + 2 * bytes_ * (s - 1) / s / p.link_bw_Bps
+        return np.zeros(b.size)
+    return 2 * (s - 1) * p.alpha_s + 2 * b * (s - 1) / s / p.link_bw_Bps
 
 
-def t_rd(s: int, bytes_: float, p: CostParams) -> float:
+def _t_rd_arr(s: int, b: np.ndarray, p: CostParams) -> np.ndarray:
     if s == 1:
-        return 0.0
-    return math.ceil(math.log2(s)) * (p.alpha_s + bytes_ / p.link_bw_Bps)
+        return np.zeros(b.size)
+    return math.ceil(math.log2(s)) * (p.alpha_s + b / p.link_bw_Bps)
 
 
-def t_wrht_tree(s: int, bytes_: float, p: CostParams, m: int,
-                alltoall: bool = True) -> float:
-    """Full-vector m-ary tree, per the paper's Eq. (1) with the TPU twist
-    that a head drains its m-1 members over ``links`` parallel channels."""
+def _t_wrht_tree_arr(s: int, b: np.ndarray, p: CostParams, m: int,
+                     alltoall: bool) -> np.ndarray:
     if s == 1:
-        return 0.0
+        return np.zeros(b.size)
     serial = math.ceil((m - 1) / p.links)  # sequential link occupations/level
     levels = max(1, math.ceil(math.log(s, m)))
     steps = 2 * levels - (1 if alltoall else 0)
-    return steps * (p.alpha_s + serial * bytes_ / p.link_bw_Bps)
+    return steps * (p.alpha_s + serial * b / p.link_bw_Bps)
 
 
-def t_hier_scatter(factors: tuple[int, ...], bytes_: float, p: CostParams) -> float:
-    total = 0.0
-    b = bytes_
+def _t_hier_scatter_arr(factors: tuple[int, ...], b: np.ndarray,
+                        p: CostParams) -> np.ndarray:
+    total = np.zeros(b.size)
+    b = b.astype(np.float64)  # private copy: divided level by level
     for f in factors:
         if f == 1:
             continue
         total += 2 * (f - 1) * p.alpha_s + 2 * b * (f - 1) / f / p.link_bw_Bps
         b /= f
     return total
+
+
+def _b1(bytes_: float) -> np.ndarray:
+    return np.asarray([bytes_], dtype=np.float64)
+
+
+def t_flat_ring(s: int, bytes_: float, p: CostParams) -> float:
+    return float(_t_flat_ring_arr(s, _b1(bytes_), p)[0])
+
+
+def t_rd(s: int, bytes_: float, p: CostParams) -> float:
+    return float(_t_rd_arr(s, _b1(bytes_), p)[0])
+
+
+def t_wrht_tree(s: int, bytes_: float, p: CostParams, m: int,
+                alltoall: bool = True) -> float:
+    """Full-vector m-ary tree, per the paper's Eq. (1) with the TPU twist
+    that a head drains its m-1 members over ``links`` parallel channels."""
+    return float(_t_wrht_tree_arr(s, _b1(bytes_), p, m, alltoall)[0])
+
+
+def t_hier_scatter(factors: tuple[int, ...], bytes_: float, p: CostParams) -> float:
+    return float(_t_hier_scatter_arr(factors, _b1(bytes_), p)[0])
 
 
 def _factorizations(n: int, max_levels: int = 3) -> list[tuple[int, ...]]:
@@ -148,64 +180,119 @@ def plan_bucket(
     ``OpticalParams.from_cost``); the ``"rd"`` strategy is skipped (it has
     no explicit optical-ring schedule) and ``"hier_scatter"`` is costed via
     the H-Ring schedule, i.e. only its two-level factorizations.
+
+    This is the one-bucket view of :func:`plan_buckets` — a single
+    candidate-scan implementation serves both (DESIGN.md §10).
+    """
+    return plan_buckets(axis_size, [bytes_], params, m_candidates, allow,
+                        max_hops, backend, optical)[0]
+
+
+def plan_buckets(
+    axis_size: int,
+    byte_sizes,
+    params: CostParams | None = None,
+    m_candidates: tuple[int, ...] = (2, 3, 4, 8, 16),
+    allow: tuple[str, ...] = ("flat", "rd", "wrht_tree", "hier_scatter"),
+    max_hops: int | None = None,
+    backend: str = "analytic",
+    optical: "object | None" = None,
+) -> list[Plan]:
+    """Plan a whole list of gradient-bucket sizes in one batched call.
+
+    The amortized counterpart of :func:`plan_bucket` (DESIGN.md §10):
+    returns ``[plan_bucket(axis_size, b, ...) for b in byte_sizes]``,
+    *identically* (same strategies, same costs, same tie-breaking — the
+    per-bucket argmin scans candidates in the same order with a strict
+    ``<``), but with the work amortized across buckets:
+
+    * analytic backend — every closed form is affine in ``bytes``, so the
+      whole candidate × bucket cost matrix evaluates in one vectorized pass;
+    * simulated backend — schedules are built and compiled once per
+      candidate through the plan cache and the batched timing engine
+      evaluates the entire payload axis per candidate (one
+      :func:`repro.core.timing.tune_wrht` sweep serves every bucket), so
+      the marginal cost of a bucket is one column of array arithmetic, not
+      a schedule walk.
+
+    The training stack calls this once at setup with every bucket size of
+    the gradient partition (``repro.train.train_step.plan_gradient_sync``);
+    warm calls hit the plan cache and skip both build and compile.
     """
     p = params or CostParams.tpu_v5e()
+    b = np.asarray(list(byte_sizes), dtype=np.float64)
     if backend == "simulated":
-        return _plan_bucket_simulated(axis_size, bytes_, p, m_candidates,
-                                      allow, max_hops, optical)
+        return _plan_buckets_simulated(axis_size, b, p, m_candidates, allow,
+                                       max_hops, optical)
     if backend != "analytic":
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'analytic' or 'simulated')")
-    best: Plan | None = None
+    best, consider = _bucket_argmin(b.size)
 
-    def consider(plan: Plan):
-        nonlocal best
-        if best is None or plan.cost_s < best.cost_s:
-            best = plan
-
+    # candidate enumeration order matches plan_bucket exactly, so the
+    # strict-< update reproduces its first-argmin tie-breaking
     if "flat" in allow:
-        consider(Plan("flat", t_flat_ring(axis_size, bytes_, p)))
+        consider(_t_flat_ring_arr(axis_size, b, p),
+                 lambda i, c: Plan("flat", c))
     if "rd" in allow and axis_size & (axis_size - 1) == 0:
-        consider(Plan("rd", t_rd(axis_size, bytes_, p)))
+        consider(_t_rd_arr(axis_size, b, p), lambda i, c: Plan("rd", c))
     if "wrht_tree" in allow:
         fan_out_cap = None if max_hops is None else 2 * max_hops + 1
         for m in m_candidates:
             if m < 2 or m > axis_size:
                 continue
             if fan_out_cap is not None and m > fan_out_cap:
-                continue  # lightpath to the farthest member is out of reach
+                continue
             for a2a in (True, False):
                 consider(
-                    Plan("wrht_tree", t_wrht_tree(axis_size, bytes_, p, m, a2a),
-                         m=m, alltoall=a2a)
-                )
+                    _t_wrht_tree_arr(axis_size, b, p, m, a2a),
+                    lambda i, c, m=m, a2a=a2a: Plan("wrht_tree", c, m=m,
+                                                    alltoall=a2a))
     if "hier_scatter" in allow:
         for factors in _factorizations(axis_size):
-            consider(Plan("hier_scatter", t_hier_scatter(factors, bytes_, p),
-                          factors=factors))
-    assert best is not None
+            consider(_t_hier_scatter_arr(factors, b, p),
+                     lambda i, c, f=factors: Plan("hier_scatter", c,
+                                                  factors=f))
+    assert all(pl is not None for pl in best)
     return best
 
 
-def _plan_bucket_simulated(
+def _bucket_argmin(n_buckets: int):
+    """Strict-< per-bucket argmin scaffolding shared by the two
+    ``plan_buckets`` backends: candidates scanned in ``plan_bucket``'s
+    enumeration order keep its exact first-argmin tie-breaking.  Returns
+    the result list and ``consider(cost[B], make_plan(i, cost_i))``."""
+    best: list[Plan | None] = [None] * n_buckets
+    best_cost = np.full(n_buckets, np.inf)
+
+    def consider(cost: np.ndarray, make_plan) -> None:
+        mask = cost < best_cost
+        if mask.any():
+            best_cost[mask] = cost[mask]
+            for i in np.flatnonzero(mask):
+                best[i] = make_plan(int(i), float(cost[i]))
+
+    return best, consider
+
+
+def _plan_buckets_simulated(
     axis_size: int,
-    bytes_: float,
+    b: np.ndarray,
     p: CostParams,
     m_candidates: tuple[int, ...],
     allow: tuple[str, ...],
     max_hops: int | None,
     optical,
-) -> Plan:
-    """Cost the candidate schedules with the flit-level simulator.
-
+) -> list[Plan]:
+    """The simulated backend: candidate schedules costed by the flit-level
+    simulator over the whole ``d_bits`` axis at once, so every bucket shares
+    the same compiled profiles (and the plan cache keeps them warm across
+    calls).  Candidate mapping: ``flat`` → the 2(N-1)-step optical ring,
+    ``wrht_tree`` → the WRHT sweep of :func:`repro.core.timing.tune_wrht`,
+    ``hier_scatter`` → the H-Ring schedule per two-level factorization; all
+    costed under the optical model's timing engine, like ``run_optical``.
     Imports the simulator stack lazily so the analytic planner keeps zero
-    package dependencies.  Candidate mapping: ``flat`` → the 2(N-1)-step
-    optical ring, ``wrht_tree`` → the WRHT schedule swept by
-    :func:`repro.core.timing.tune_wrht` over ``m_candidates``,
-    ``hier_scatter`` → the H-Ring schedule for each two-level factorization.
-    All candidates are costed under the optical model's timing engine
-    (``opt.timing``: lockstep/event/overlap), like ``run_optical``.
-    """
+    package dependencies."""
     from . import step_models, timing, wrht
     from .wavelength import InsertionLossError
 
@@ -219,19 +306,13 @@ def _plan_bucket_simulated(
         max_hops = opt.physical.max_hops
     detail = {"backend": "simulated"}
     if axis_size == 1:
-        return Plan("flat", 0.0, detail=dict(detail))
-    d_bits = bytes_ * 8
-    best: Plan | None = None
-
-    def consider(plan: Plan):
-        nonlocal best
-        if best is None or plan.cost_s < best.cost_s:
-            best = plan
+        return [Plan("flat", 0.0, detail=dict(detail)) for _ in range(b.size)]
+    d_bits = b * 8
+    best, consider = _bucket_argmin(b.size)
 
     if "flat" in allow:
-        cost = float(timing.ring_times(axis_size, d_bits, opt,
-                                       opt.timing).total_s[0])
-        consider(Plan("flat", cost, detail=dict(detail)))
+        cost = timing.ring_times(axis_size, d_bits, opt, opt.timing).total_s
+        consider(cost, lambda i, c: Plan("flat", c, detail=dict(detail)))
     if "wrht_tree" in allow:
         cap = wrht.feasible_group_size(opt.wavelengths, max_hops)
         ms = tuple(m for m in m_candidates if 2 <= m <= min(axis_size, cap))
@@ -239,23 +320,23 @@ def _plan_bucket_simulated(
             tuned = timing.tune_wrht(axis_size, opt.wavelengths, d_bits,
                                      max_hops, p=opt, timing=opt.timing,
                                      m_candidates=ms)
-            m_best, a2a = tuned.best(0)
-            consider(Plan("wrht_tree", float(tuned.best_total_s[0]),
-                          m=m_best, alltoall=a2a, detail=dict(detail)))
+            consider(tuned.best_total_s,
+                     lambda i, c: Plan("wrht_tree", c, m=int(tuned.best_m[i]),
+                                       alltoall=bool(tuned.best_alltoall[i]),
+                                       detail=dict(detail)))
     if "hier_scatter" in allow:
         for factors in _factorizations(axis_size, max_levels=2):
             if len(factors) != 2 or factors[0] < 2 or axis_size % factors[0]:
                 continue
             try:
-                cost = float(timing.hring_times(axis_size, d_bits, opt,
-                                                opt.timing,
-                                                g=factors[0]).total_s[0])
+                cost = timing.hring_times(axis_size, d_bits, opt, opt.timing,
+                                          g=factors[0]).total_s
             except InsertionLossError:
                 continue
-            consider(Plan("hier_scatter", cost, factors=factors,
-                          detail=dict(detail)))
+            consider(cost, lambda i, c, f=factors:
+                     Plan("hier_scatter", c, factors=f, detail=dict(detail)))
     # "rd" has no explicit optical-ring schedule: skipped under this backend
-    if best is None:
+    if any(pl is None for pl in best):
         raise ValueError(
             "no strategy in `allow` has an optical-ring schedule for the "
             f"simulated backend (allow={allow!r})"
@@ -267,16 +348,26 @@ def crossover_table(
     axis_size: int,
     byte_sizes: tuple[float, ...] = tuple(2.0 ** e for e in range(10, 31, 2)),
     params: CostParams | None = None,
+    backend: str = "analytic",
+    max_hops: int | None = None,
+    optical: "object | None" = None,
 ) -> list[dict]:
-    """Bucket-size sweep: which schedule wins where (benchmark + tests)."""
-    rows = []
-    for b in byte_sizes:
-        plan = plan_bucket(axis_size, b, params)
-        rows.append({
+    """Bucket-size sweep: which schedule wins where (benchmark + tests).
+
+    ``backend``/``max_hops``/``optical`` pass straight through to the
+    planner, so the crossover benchmark can sweep the flit-level simulated
+    backend (and a hop budget) next to the analytic closed forms; the whole
+    sweep is one :func:`plan_buckets` call.
+    """
+    plans = plan_buckets(axis_size, byte_sizes, params, backend=backend,
+                         max_hops=max_hops, optical=optical)
+    return [
+        {
             "bytes": int(b),
             "strategy": plan.strategy,
             "m": plan.m,
             "factors": plan.factors,
             "cost_us": plan.cost_s * 1e6,
-        })
-    return rows
+        }
+        for b, plan in zip(byte_sizes, plans)
+    ]

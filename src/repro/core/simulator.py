@@ -29,7 +29,6 @@ step is built in O(1) NumPy calls.
 
 from __future__ import annotations
 
-import functools
 import math
 from dataclasses import dataclass, field, replace
 
@@ -300,18 +299,20 @@ def hring_allreduce_schedule(n: int, g: int, d_bits: float) -> list[wrht.Step]:
 # Front-ends used by the benchmarks.
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=512)
 def _cached_wrht_schedule(
     n: int, w: int, m: int | None, max_hops: int | None = None,
     allow_alltoall: bool = True,
 ) -> wrht.WRHTSchedule:
     """WRHT schedule structure is independent of the payload size — build and
     fully validate (structural + semantic, both vectorized) once per
-    (n, w, m, hop budget, all-to-all policy).  The historical ``n <= 1024``
-    validation cap is gone: the array-based validator handles N=32768 in
-    well under a second."""
-    return wrht.build_schedule(n, w, 1.0, m=m, allow_alltoall=allow_alltoall,
-                               validate=True, max_hops=max_hops)
+    (n, w, m, hop budget, all-to-all policy).  Historically an ad-hoc
+    ``lru_cache``; now a thin front-end over the two-tier plan cache
+    (``repro.core.plan_cache``, DESIGN.md §10), which also holds the
+    compiled timing profiles keyed on the same d-independent structure."""
+    from . import plan_cache
+
+    return plan_cache.get_default().schedule(plan_cache.PlanKey(
+        n=n, w=w, m=m, alltoall=allow_alltoall, max_hops=max_hops))
 
 
 def _simulate(

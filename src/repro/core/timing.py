@@ -113,7 +113,10 @@ class _Scatter:
 def _scatter(idx: np.ndarray) -> _Scatter:
     perm = np.argsort(idx, kind="stable")
     sorted_idx = idx[perm]
-    ptr = np.flatnonzero(np.r_[True, sorted_idx[1:] != sorted_idx[:-1]])
+    marks = np.empty(sorted_idx.size, dtype=bool)
+    marks[0] = True
+    np.not_equal(sorted_idx[1:], sorted_idx[:-1], out=marks[1:])
+    ptr = np.flatnonzero(marks)
     if ptr.size == idx.size:  # no duplicates: update in input order
         return _Scatter(idx, perm, ptr, True)
     return _Scatter(sorted_idx[ptr], perm, ptr, False)
@@ -145,6 +148,7 @@ class ScheduleProfile:
         classes: tuple[PayloadClass, ...] = (FULL_VECTOR,),
         d_ref: float = 1.0,
         validate: bool = True,
+        seg_cache: dict | None = None,
     ) -> "ScheduleProfile":
         """Compile ``steps`` against ``ring``.
 
@@ -158,12 +162,19 @@ class ScheduleProfile:
         ``validate`` runs the conflict/hop-budget check once per unique
         segment — the per-point engines re-validated every step of every
         call.
+
+        ``seg_cache`` shares per-batch compile work *across* ``from_steps``
+        calls, keyed on batch object identity: the batched auto-tuner's
+        candidate schedules share their level batches between the
+        all-to-all/no-all-to-all variants (DESIGN.md §10), so each shared
+        segment is compiled once.  Only pass a cache between calls whose
+        ``(ring.n, classes, d_ref, validate)`` agree, and only while the
+        batches stay alive (the dict is id-keyed).
         """
         self = cls()
         self.n = ring.n
         self.num_steps = len(steps)
         self.classes = tuple(classes)
-        self.max_wavelengths = max((s.wavelengths for s in steps), default=0)
 
         seg_of: dict[int, int] = {}
         seg_batches = []
@@ -180,43 +191,54 @@ class ScheduleProfile:
         seg_ptr = [0]
         cand_cls_parts, cand_hops_parts = [], []
         cand_ptr = [0]
-        scatter_src, scatter_dst = [], []
+        max_wavelengths = 0
         ref_bits = np.array(
             [c.bits(np.float64(d_ref)) for c in self.classes], dtype=np.float64
         )
         for batch in seg_batches:
             t = len(batch)
-            if validate and t:
-                validate_no_conflicts(batch, ring.n, ring.w,
-                                      max_hops=ring.max_hops)
-            hops = batch.arcs(ring.n)[2] if t else np.zeros(0, dtype=np.int64)
-            if len(self.classes) == 1:
-                cls_ids = np.zeros(t, dtype=np.int64)
-            else:
-                cls_ids = np.full(t, -1, dtype=np.int64)
-                for k, v in enumerate(ref_bits):
-                    cls_ids[batch.bits == v] = k
-                if t and (cls_ids < 0).any():
-                    raise ValueError(
-                        "transfer bits do not match any payload class at "
-                        f"d_ref={d_ref!r}"
-                    )
+            compiled = seg_cache.get(id(batch)) if seg_cache is not None else None
+            if compiled is None:
+                if validate and t:
+                    validate_no_conflicts(batch, ring.n, ring.w,
+                                          max_hops=ring.max_hops)
+                hops = batch.arcs(ring.n)[2] if t else np.zeros(0, dtype=np.int64)
+                if len(self.classes) == 1:
+                    cls_ids = np.zeros(t, dtype=np.int64)
+                else:
+                    cls_ids = np.full(t, -1, dtype=np.int64)
+                    for k, v in enumerate(ref_bits):
+                        cls_ids[batch.bits == v] = k
+                    if t and (cls_ids < 0).any():
+                        raise ValueError(
+                            "transfer bits do not match any payload class at "
+                            f"d_ref={d_ref!r}"
+                        )
+                # lockstep candidates: unique (class, hops) pairs per segment
+                if not t:
+                    keep = np.zeros(0, dtype=np.int64)
+                elif len(self.classes) == 1:
+                    # one class means one serialization time, and propagation
+                    # is monotone in hops, so the step max is exactly the
+                    # max-hops candidate — no dedup sort needed
+                    keep = np.asarray([hops.argmax()], dtype=np.int64)
+                else:
+                    pair = cls_ids * (int(hops.max()) + 1) + hops
+                    _, keep = np.unique(pair, return_index=True)
+                wmax = 1 + int(batch.wavelength.max()) if t else 0
+                compiled = (hops, cls_ids, cls_ids[keep], hops[keep], wmax)
+                if seg_cache is not None:
+                    seg_cache[id(batch)] = compiled
+            hops, cls_ids, keep_cls, keep_hops, wmax = compiled
+            max_wavelengths = max(max_wavelengths, wmax)
             src_parts.append(batch.src)
             dst_parts.append(batch.dst)
             hops_parts.append(hops)
             cls_parts.append(cls_ids)
             seg_ptr.append(seg_ptr[-1] + t)
-            # lockstep candidates: unique (class, hops) pairs of this segment
-            if t:
-                pair = cls_ids * (int(hops.max()) + 1) + hops
-                _, keep = np.unique(pair, return_index=True)
-            else:
-                keep = np.zeros(0, dtype=np.int64)
-            cand_cls_parts.append(cls_ids[keep])
-            cand_hops_parts.append(hops[keep])
-            cand_ptr.append(cand_ptr[-1] + keep.size)
-            scatter_src.append(_scatter(batch.src) if t else None)
-            scatter_dst.append(_scatter(batch.dst) if t else None)
+            cand_cls_parts.append(keep_cls)
+            cand_hops_parts.append(keep_hops)
+            cand_ptr.append(cand_ptr[-1] + keep_cls.size)
 
         def cat(parts, dtype=np.int64):
             return (np.concatenate(parts).astype(dtype, copy=False)
@@ -230,9 +252,23 @@ class ScheduleProfile:
         self.cand_cls = cat(cand_cls_parts)
         self.cand_hops = cat(cand_hops_parts)
         self.cand_ptr = np.asarray(cand_ptr, dtype=np.int64)
+        self.max_wavelengths = max_wavelengths
+        # endpoint scatter groupings are only needed by the overlap engine:
+        # built lazily (_ensure_scatters) so lockstep-only consumers — the
+        # auto-tuner sweep above all — never pay for them
+        self.scatter_src = None
+        self.scatter_dst = None
+        return self
+
+    def _ensure_scatters(self) -> None:
+        if self.scatter_src is not None:
+            return
+        scatter_src, scatter_dst = [], []
+        for lo, hi in zip(self.seg_ptr[:-1].tolist(), self.seg_ptr[1:].tolist()):
+            scatter_src.append(_scatter(self.src[lo:hi]) if hi > lo else None)
+            scatter_dst.append(_scatter(self.dst[lo:hi]) if hi > lo else None)
         self.scatter_src = scatter_src
         self.scatter_dst = scatter_dst
-        return self
 
     @property
     def num_segments(self) -> int:
@@ -342,6 +378,7 @@ class ScheduleProfile:
         d = np.atleast_1d(np.asarray(d_bits, dtype=np.float64))
         if not overlap:
             return self._event_barrier(ring, d, keep_per_step)
+        self._ensure_scatters()
         D = d.size
         a = ring.reconfig_delay_s
         # node-major [n, D] state: all per-step gathers/scatters hit axis 0
@@ -454,6 +491,44 @@ def _with_meta(times: BatchedTimes, algorithm: str, **overrides) -> BatchedTimes
 
 
 # ---------------------------------------------------------------------------
+# Profile (de)serialization — the plan cache's disk tier (DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+_PROFILE_ARRAYS = ("step_seg", "seg_ptr", "src", "dst", "hops", "cls",
+                   "cand_ptr", "cand_cls", "cand_hops")
+
+
+def profile_to_arrays(prof: ScheduleProfile) -> tuple[dict, dict[str, np.ndarray]]:
+    """Split a compiled profile into JSON-able metadata + stacked arrays."""
+    meta = {
+        "n": prof.n,
+        "num_steps": prof.num_steps,
+        "max_wavelengths": prof.max_wavelengths,
+        "classes": [list(c.divisors) for c in prof.classes],
+    }
+    return meta, {name: getattr(prof, name) for name in _PROFILE_ARRAYS}
+
+
+def profile_from_arrays(meta: dict, arrays: dict) -> ScheduleProfile:
+    """Rebuild a profile from :func:`profile_to_arrays` output.
+
+    The endpoint scatter groupings are recomputed from the stored ``src``/
+    ``dst`` columns — they are a pure function of them, so the round-trip
+    is exact (pinned by ``tests/test_plan_cache.py``).
+    """
+    prof = ScheduleProfile()
+    prof.n = int(meta["n"])
+    prof.num_steps = int(meta["num_steps"])
+    prof.max_wavelengths = int(meta["max_wavelengths"])
+    prof.classes = tuple(PayloadClass(tuple(d)) for d in meta["classes"])
+    for name in _PROFILE_ARRAYS:
+        setattr(prof, name, np.asarray(arrays[name]))
+    prof.scatter_src = None   # lazy, like from_steps (_ensure_scatters)
+    prof.scatter_dst = None
+    return prof
+
+
+# ---------------------------------------------------------------------------
 # Profile cache + per-algorithm front-ends (bit-identical to run_optical).
 # ---------------------------------------------------------------------------
 
@@ -462,18 +537,23 @@ def _ring_of(n: int, p: step_models.OpticalParams) -> Ring:
                 reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
 
 
-@functools.lru_cache(maxsize=1024)
 def _wrht_profile(
     n: int, p: step_models.OpticalParams, m: int | None,
     allow_alltoall: bool = True, max_hops: int | None = None,
 ) -> ScheduleProfile:
+    """WRHT profile via the two-tier plan cache (DESIGN.md §10).
+
+    The cache key is the d-independent structure ``(n, w, m, alltoall,
+    max_hops, rwa)`` — deliberately *not* the whole ``OpticalParams``:
+    bandwidth/reconfiguration only enter at evaluation time, so every
+    parameter flavour shares one compiled profile.
+    """
+    from . import plan_cache
+
     ring = _ring_of(n, p)
     hops = ring.max_hops if max_hops is None else max_hops
-    sched = simulator._cached_wrht_schedule(n, p.wavelengths, m, hops,
-                                            allow_alltoall)
-    # the builder fully validated the schedule; every transfer carries the
-    # constant full vector d (the bits_override convention)
-    return ScheduleProfile.from_steps(sched.steps, ring, validate=False)
+    return plan_cache.get_default().profile(plan_cache.PlanKey(
+        n=n, w=p.wavelengths, m=m, alltoall=allow_alltoall, max_hops=hops))
 
 
 @functools.lru_cache(maxsize=256)
@@ -757,25 +837,8 @@ class TuneResult:
         return int(self.best_m[i]), bool(self.best_alltoall[i])
 
 
-def tune_wrht(
-    n: int,
-    w: int,
-    d_bits,
-    max_hops: int | None = None,
-    p: step_models.OpticalParams | None = None,
-    timing: str = "lockstep",
-    m_candidates=None,
-) -> TuneResult:
-    """Sweep every feasible WRHT fan-out ``m`` (and the final all-to-all
-    on/off) through the batched simulator; return the simulated argmin.
-
-    The analytic rule picks ``m = 2w + 1`` capped by the insertion-loss
-    fan-out limit; the simulator-backed sweep also sees relay sub-steps,
-    all-to-all feasibility and (under a physical model) per-hop propagation,
-    so its argmin can differ — ``benchmarks/bench_sweep.py`` records the
-    comparison.  Schedules are built and compiled once per ``(m, alltoall)``
-    and cached across payloads, timings and calls.
-    """
+def _tune_candidates(n, w, d_bits, max_hops, p, m_candidates):
+    """Shared candidate-sweep preamble of the two tuner implementations."""
     p = p or step_models.OpticalParams(wavelengths=w)
     if p.wavelengths != w:
         p = replace(p, wavelengths=w)
@@ -793,23 +856,11 @@ def tune_wrht(
     if not ms:
         raise ValueError("no feasible WRHT fan-out candidates")
     d = np.atleast_1d(np.asarray(d_bits, dtype=np.float64))
-    candidates: list[tuple[int, bool]] = []
-    totals, steps = [], []
-    ring = _ring_of(n, p)
-    hops = ring.max_hops if max_hops is None else max_hops
-    for m in ms:
-        with_a2a = simulator._cached_wrht_schedule(n, p.wavelengths, m, hops,
-                                                   True)
-        took_a2a = any(s.kind == "alltoall" for s in with_a2a.steps)
-        for alltoall in (True, False):
-            if not alltoall and not took_a2a:
-                continue  # the a2a=True build never took the all-to-all:
-                          # both schedules are identical, evaluate once
-            prof = _wrht_profile(n, p, m, alltoall, max_hops)
-            times = prof.evaluate(ring, d, timing, keep_per_step=False)
-            candidates.append((m, alltoall))
-            totals.append(times.total_s)
-            steps.append(times.steps)
+    return p, max_hops, analytic_m, ms, d
+
+
+def _tune_result(n, w, max_hops, timing, d, candidates, totals, steps,
+                 analytic_m) -> TuneResult:
     total_s = np.stack(totals, axis=0)              # [C, D]
     best = np.argmin(total_s, axis=0)               # first argmin per payload
     cand_m = np.array([c[0] for c in candidates])
@@ -824,8 +875,124 @@ def tune_wrht(
     )
 
 
+@functools.lru_cache(maxsize=64)
+def _candidate_schedules(n: int, w: int, ms: tuple[int, ...],
+                         max_hops: int | None):
+    """Memoized batched candidate build — the tuner's repeat calls (one per
+    ``plan_buckets`` invocation, one per ``run_optical(m="auto")`` point)
+    share one construction per sweep signature."""
+    return wrht.build_candidate_schedules(
+        n, w, 1.0, ms, allow_alltoall=True, validate=False, max_hops=max_hops)
+
+
+def tune_wrht(
+    n: int,
+    w: int,
+    d_bits,
+    max_hops: int | None = None,
+    p: step_models.OpticalParams | None = None,
+    timing: str = "lockstep",
+    m_candidates=None,
+) -> TuneResult:
+    """Sweep every feasible WRHT fan-out ``m`` (and the final all-to-all
+    on/off) through the batched simulator; return the simulated argmin.
+
+    The analytic rule picks ``m = 2w + 1`` capped by the insertion-loss
+    fan-out limit; the simulator-backed sweep also sees relay sub-steps,
+    all-to-all feasibility and (under a physical model) per-hop propagation,
+    so its argmin can differ — ``benchmarks/bench_sweep.py`` records the
+    comparison.
+
+    All candidate schedules come from one pass of the batched
+    multi-candidate builder (``wrht.build_candidate_schedules``,
+    DESIGN.md §10) — bit-identical to the per-candidate loop, which is kept
+    as :func:`tune_wrht_reference` (the golden oracle;
+    ``benchmarks/bench_planner.py`` records the ≥5× speedup).  Compiled
+    profiles are published to the plan cache keyed on the d-independent
+    structure, so the sweep's winner — and every loser — is a warm plan for
+    ``run_optical(m="auto")`` and ``planner.plan_buckets``.  The batched
+    construction skips the per-step re-validation (it is conflict-free by
+    construction and golden-tested); materializing a schedule through the
+    plan cache re-validates it fully.
+    """
+    from . import plan_cache
+
+    p, max_hops, analytic_m, ms, d = _tune_candidates(
+        n, w, d_bits, max_hops, p, m_candidates)
+    ring = _ring_of(n, p)
+    hops = ring.max_hops if max_hops is None else max_hops
+    scheds = _candidate_schedules(n, p.wavelengths, tuple(ms), hops)
+    cache = plan_cache.get_default()
+    seg_cache: dict = {}
+    candidates: list[tuple[int, bool]] = []
+    totals, steps = [], []
+    for m in ms:
+        for alltoall in (True, False):
+            sched = scheds.get((m, alltoall))
+            if sched is None:
+                continue  # the a2a=True build never took the all-to-all:
+                          # both schedules are identical, evaluate once
+            key = plan_cache.PlanKey(n=n, w=p.wavelengths, m=m,
+                                     alltoall=alltoall, max_hops=hops)
+            prof = cache.peek_profile(key)   # memory, then disk tier
+            if prof is None:
+                prof = ScheduleProfile.from_steps(
+                    sched.steps, ring, validate=False, seg_cache=seg_cache)
+                cache.put_profile(key, prof)
+            times = prof.evaluate(ring, d, timing, keep_per_step=False)
+            candidates.append((m, alltoall))
+            totals.append(times.total_s)
+            steps.append(times.steps)
+    return _tune_result(n, w, max_hops, timing, d, candidates, totals, steps,
+                        analytic_m)
+
+
+def tune_wrht_reference(
+    n: int,
+    w: int,
+    d_bits,
+    max_hops: int | None = None,
+    p: step_models.OpticalParams | None = None,
+    timing: str = "lockstep",
+    m_candidates=None,
+) -> TuneResult:
+    """The original per-candidate tuner loop, kept verbatim as the golden
+    oracle for :func:`tune_wrht`: one full ``build_schedule`` + compile per
+    ``(m, alltoall)`` candidate.  Bit-identical results (argmin and totals)
+    are asserted by ``tests/test_amortized_planning.py`` and recorded by
+    ``benchmarks/bench_planner.py``."""
+    p, max_hops, analytic_m, ms, d = _tune_candidates(
+        n, w, d_bits, max_hops, p, m_candidates)
+    ring = _ring_of(n, p)
+    hops = ring.max_hops if max_hops is None else max_hops
+    candidates: list[tuple[int, bool]] = []
+    totals, steps = [], []
+    for m in ms:
+        with_a2a = simulator._cached_wrht_schedule(n, p.wavelengths, m, hops,
+                                                   True)
+        took_a2a = any(s.kind == "alltoall" for s in with_a2a.steps)
+        for alltoall in (True, False):
+            if not alltoall and not took_a2a:
+                continue
+            prof = _wrht_profile(n, p, m, alltoall, max_hops)
+            times = prof.evaluate(ring, d, timing, keep_per_step=False)
+            candidates.append((m, alltoall))
+            totals.append(times.total_s)
+            steps.append(times.steps)
+    return _tune_result(n, w, max_hops, timing, d, candidates, totals, steps,
+                        analytic_m)
+
+
 def clear_caches() -> None:
-    """Drop all compiled profiles (benchmarks use this for fair timing)."""
-    for fn in (_wrht_profile, _bt_profile, _ring_step_profile,
-               _hring_profile, _hring_intra_profile):
+    """Drop all compiled profiles and candidate sweeps, and install a fresh
+    *memory-only* default plan cache (benchmarks and tests use this for fair
+    cold timing — a ``REPRO_PLAN_CACHE_DIR`` disk tier would otherwise turn
+    "cold" lookups into disk hits).  Long-lived processes that only want to
+    shed memory should call ``plan_cache.get_default().clear()`` instead,
+    which keeps their disk tier attached."""
+    from . import plan_cache
+
+    for fn in (_bt_profile, _ring_step_profile,
+               _hring_profile, _hring_intra_profile, _candidate_schedules):
         fn.cache_clear()
+    plan_cache.set_default(plan_cache.PlanCache())

@@ -151,7 +151,7 @@ class TransferBatch:
     batch for all ``2(N-1)`` identical steps).
     """
 
-    __slots__ = ("src", "dst", "direction", "bits", "wavelength")
+    __slots__ = ("src", "dst", "direction", "bits", "wavelength", "_arcs")
 
     def __init__(
         self,
@@ -166,6 +166,7 @@ class TransferBatch:
         self.direction = direction
         self.bits = bits
         self.wavelength = wavelength
+        self._arcs = None  # (n, lane, start, hops) memo — see arcs()
         if not (len(src) == len(dst) == len(direction) == len(bits) == len(wavelength)):
             raise ValueError("TransferBatch columns must have equal length")
 
@@ -239,10 +240,12 @@ class TransferBatch:
         return list(self)
 
     def with_wavelengths(self, wavelength: np.ndarray) -> "TransferBatch":
-        return TransferBatch(
+        batch = TransferBatch(
             self.src, self.dst, self.direction, self.bits,
             np.asarray(wavelength, dtype=np.int64),
         )
+        batch._arcs = self._arcs  # geometry is wavelength-independent
+        return batch
 
     # -------------------------------------------------- geometry
     def arcs(self, n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -252,11 +255,20 @@ class TransferBatch:
         two fibers are independent), and the path covers directed segments
         ``start, start+1, ..., start+hops-1 (mod n)`` — the exact segment ids
         of :func:`path_segments` for either direction.
+
+        The result is memoized per ring size (geometry never changes after
+        construction — batches are immutable by convention), so RWA,
+        validation and profile compilation share one computation.
         """
-        cw = self.direction == CW
-        lane = np.where(cw, 0, 1)
-        hops = np.where(cw, (self.dst - self.src) % n, (self.src - self.dst) % n)
-        start = np.where(cw, self.src, self.dst)
+        memo = self._arcs
+        if memo is not None and memo[0] == n:
+            return memo[1], memo[2], memo[3]
+        # direction is ±1, so both branches collapse to arithmetic:
+        # lane = 0/1 for CW/CCW, hops = (dst-src)%n resp. (src-dst)%n
+        lane = (1 - self.direction) >> 1
+        hops = ((self.dst - self.src) * self.direction) % n
+        start = np.where(self.direction == CW, self.src, self.dst)
+        self._arcs = (n, lane, start, hops)
         return lane, start, hops
 
     @property

@@ -93,11 +93,13 @@ def split_overlong_arcs(transfers, n: int, max_hops: int) -> list[TransferBatch]
     out: list[TransferBatch] = []
     for k in range(int(chain_len.max())):
         sel = np.flatnonzero(chain_len > k)
-        src_k = (batch.src[sel] + k * max_hops * batch.direction[sel]) % n
+        direction = batch.direction[sel]
+        src_k = (batch.src[sel] + k * max_hops * direction) % n
         seg_h = np.minimum(hops[sel] - k * max_hops, max_hops)
-        dst_k = (src_k + seg_h * batch.direction[sel]) % n
-        out.append(TransferBatch.from_arrays(
-            src_k, dst_k, batch.direction[sel], batch.bits[sel], check=False
+        dst_k = (src_k + seg_h * direction) % n
+        out.append(TransferBatch(
+            src_k, dst_k, direction, batch.bits[sel],
+            np.full(sel.size, -1, dtype=np.int64),
         ))
     return out
 
@@ -214,7 +216,10 @@ def _lane_components(
     covered = np.cumsum(diff[:n]) > 0
     if covered.all():
         return np.zeros(len(start), dtype=np.int64), np.zeros(1, dtype=np.int64), True
-    run_start = covered & ~np.roll(covered, 1)
+    prev = np.empty_like(covered)
+    prev[0] = covered[-1]
+    prev[1:] = covered[:-1]
+    run_start = covered & ~prev
     ids = np.cumsum(run_start) - 1
     n_runs = int(ids[-1]) + 1
     # a run straddling the origin has its start late in the array; segments
@@ -224,44 +229,22 @@ def _lane_components(
     return ids[start], bases, False
 
 
-def first_fit_assign(
-    transfers, n: int, w: int, max_hops: int | None = None
-) -> TransferBatch:
-    """Vectorized First Fit: bit-identical to the reference greedy.
+def _assign_arcs_component(
+    lane: np.ndarray, start: np.ndarray, hops: np.ndarray,
+    n: int, w: int, cache: dict,
+) -> np.ndarray:
+    """Component path of First Fit on raw arc arrays of ONE step.
 
-    Accepts a :class:`TransferBatch` (or any ``Transfer`` sequence, coerced)
-    and returns a new batch with wavelengths assigned.  Raises
-    :exc:`WavelengthConflictError` iff the reference would.  When
-    ``max_hops`` is given, arcs exceeding the insertion-loss hop budget are
-    rejected with :exc:`InsertionLossError` before any assignment (such
-    paths must be relayed via :func:`split_overlong_arcs` first).
+    Processing order is longest-first with ties broken by row order — the
+    reference greedy's order.  ``cache`` is the translated-component dedup
+    table ``(circular, n, w, local starts, hops) -> assignment``; sharing
+    one dict across many steps (the batched schedule builder does,
+    DESIGN.md §10) — and even across ring sizes and wavelength budgets —
+    is sound because the key fully determines the greedy's input.
     """
-    batch = TransferBatch.coerce(transfers)
-    t_count = len(batch)
-    if t_count == 0:
-        return batch
-    if max_hops is not None:
-        validate_hop_budget(batch, n, max_hops)
-    lane, start, hops = batch.arcs(n)
+    t_count = lane.size
     order = np.argsort(-hops, kind="stable")  # longest-first, stable ties
-
     lam = np.empty(t_count, dtype=np.int64)
-    if t_count <= 32:
-        # tiny step: component machinery costs more than it saves
-        sel = order.tolist()
-        st = [int(start[i]) for i in sel]
-        hp = [int(hops[i]) for i in sel]
-        ln = [int(lane[i]) for i in sel]
-        for lane_id in (0, 1):
-            idxs = [k for k, l in enumerate(ln) if l == lane_id]
-            if not idxs:
-                continue
-            sub = _solve_first_fit(
-                [st[k] for k in idxs], [hp[k] for k in idxs], w, n, True
-            )
-            for k, v in zip(idxs, sub.tolist()):
-                lam[sel[k]] = v
-        return batch.with_wavelengths(lam)
 
     # ---- component labeling per lane (the two fibers never interact) ----
     comp = np.empty(t_count, dtype=np.int64)
@@ -288,19 +271,133 @@ def first_fit_assign(
     bounds = np.append(bounds, t_count)
 
     # ---- dedupe translated components, solve one representative each ----
-    cache: dict[tuple, np.ndarray] = {}
     for b, e in zip(bounds[:-1].tolist(), bounds[1:].tolist()):
         members = grouped[b:e]
         rs = rel[members]
         hp = hops[members]
         circ = circular_lane[int(lane[members[0]])]
-        key = (circ, rs.tobytes(), hp.tobytes())
+        key = (circ, n, w, rs.tobytes(), hp.tobytes())
         sub = cache.get(key)
         if sub is None:
             seg_count = n if circ else int((rs + hp).max())
             sub = _solve_first_fit(rs.tolist(), hp.tolist(), w, seg_count, circ)
             cache[key] = sub
         lam[members] = sub
+    return lam
+
+
+def first_fit_assign(
+    transfers, n: int, w: int, max_hops: int | None = None
+) -> TransferBatch:
+    """Vectorized First Fit: bit-identical to the reference greedy.
+
+    Accepts a :class:`TransferBatch` (or any ``Transfer`` sequence, coerced)
+    and returns a new batch with wavelengths assigned.  Raises
+    :exc:`WavelengthConflictError` iff the reference would.  When
+    ``max_hops`` is given, arcs exceeding the insertion-loss hop budget are
+    rejected with :exc:`InsertionLossError` before any assignment (such
+    paths must be relayed via :func:`split_overlong_arcs` first).
+    """
+    batch = TransferBatch.coerce(transfers)
+    t_count = len(batch)
+    if t_count == 0:
+        return batch
+    if max_hops is not None:
+        validate_hop_budget(batch, n, max_hops)
+    lane, start, hops = batch.arcs(n)
+
+    if t_count <= 32:
+        # tiny step: component machinery costs more than it saves
+        order = np.argsort(-hops, kind="stable")
+        lam = np.empty(t_count, dtype=np.int64)
+        sel = order.tolist()
+        st = [int(start[i]) for i in sel]
+        hp = [int(hops[i]) for i in sel]
+        ln = [int(lane[i]) for i in sel]
+        for lane_id in (0, 1):
+            idxs = [k for k, l in enumerate(ln) if l == lane_id]
+            if not idxs:
+                continue
+            sub = _solve_first_fit(
+                [st[k] for k in idxs], [hp[k] for k in idxs], w, n, True
+            )
+            for k, v in zip(idxs, sub.tolist()):
+                lam[sel[k]] = v
+        return batch.with_wavelengths(lam)
+
+    lam = _assign_arcs_component(lane, start, hops, n, w, {})
+    return batch.with_wavelengths(lam)
+
+
+def first_fit_assign_concat(
+    transfers, ptr, n: int, w: int,
+    max_hops: int | None = None, cache: dict | None = None,
+) -> TransferBatch:
+    """First-Fit RWA over concatenated independent steps (DESIGN.md §10).
+
+    ``ptr`` is an int array ``[S+1]`` of offset pointers: rows
+    ``[ptr[i], ptr[i+1])`` of ``transfers`` form step ``i``.  Each step is
+    assigned independently — wavelength occupancy resets at every pointer
+    boundary — so the result is bit-identical to calling
+    :func:`first_fit_assign` on each slice (the ≤32-transfer fast path of
+    the per-step entry point is a pure shortcut: both routes replay the
+    reference greedy, enforced by ``tests/test_rwa_equivalence.py``).
+
+    What the concatenation buys is *sharing*: the dedup table is one dict
+    for all steps, and via ``cache`` it can be carried across calls — the
+    batched multi-candidate schedule builder reuses one table across every
+    candidate's relay sub-steps, and a broadcast step's components are the
+    lane-mirrored image of its reduce step's, so the mirror assignments are
+    cache hits.
+
+    Memoization happens at two levels, both exploiting ring symmetries:
+
+    * per step and lane, keyed on the translation-normalized arc multiset
+      ``((start − start[0]) mod n, hops)`` — the ring is rotation-symmetric
+      and its two fiber lanes are independent and interchangeable, so a
+      translated (or lane-mirrored) step resolves without touching the
+      greedy at all.  Relay chains are the big winner: every interior
+      sub-step of a chain set is a translation of the first.
+    * per conflict component inside an unseen step (the table
+      ``first_fit_assign`` uses within one step).
+    """
+    batch = TransferBatch.coerce(transfers)
+    ptr = np.asarray(ptr, dtype=np.int64)
+    if ptr.size < 1 or ptr[0] != 0 or ptr[-1] != len(batch):
+        raise ValueError("ptr must run from 0 to len(transfers)")
+    if len(batch) == 0:
+        return batch
+    if max_hops is not None:
+        validate_hop_budget(batch, n, max_hops)
+    lane, start, hops = batch.arcs(n)
+    if cache is None:
+        cache = {}
+    lam = np.empty(len(batch), dtype=np.int64)
+    zero_lane: dict[int, np.ndarray] = {}
+    for lo, hi in zip(ptr[:-1].tolist(), ptr[1:].tolist()):
+        if lo == hi:
+            continue
+        ln = lane[lo:hi]
+        # the two fibers never interact and First Fit is per-lane greedy, so
+        # assign each lane of the step on its own (order within a lane is
+        # the global longest-first order restricted to it — identical)
+        for lane_id in (0, 1):
+            sel = np.flatnonzero(ln == lane_id)
+            if sel.size == 0:
+                continue
+            st = start[lo:hi][sel]
+            hp = hops[lo:hi][sel]
+            rel = (st - st[0]) % n
+            key = ("step", n, w, rel.tobytes(), hp.tobytes())
+            sub = cache.get(key)
+            if sub is None:
+                zeros = zero_lane.get(sel.size)
+                if zeros is None:
+                    zeros = zero_lane[sel.size] = np.zeros(sel.size,
+                                                           dtype=np.int64)
+                sub = _assign_arcs_component(zeros, st, hp, n, w, cache)
+                cache[key] = sub
+            lam[lo + sel] = sub
     return batch.with_wavelengths(lam)
 
 

@@ -42,6 +42,7 @@ from .topology import CCW, CW, PhysicalParams, Ring, TransferBatch
 from .wavelength import (
     WavelengthConflictError,
     first_fit_assign,
+    first_fit_assign_concat,
     first_fit_assign_reference,
     split_overlong_arcs,
     validate_no_conflicts,
@@ -121,10 +122,22 @@ def _assigner(rwa: str):
     raise ValueError(f"unknown rwa {rwa!r} (expected 'fast' or 'reference')")
 
 
-def _level_transfers(
-    active: np.ndarray, m: int, d_bits: float, broadcast: bool
-) -> tuple[TransferBatch, np.ndarray]:
-    """Member↔representative transfers for one tree level, as arrays.
+@dataclass(frozen=True)
+class _LevelGrouping:
+    """Grouping arrays of one tree level: the shared structure from which
+    the reduce batch, the broadcast batch and the closed-form First-Fit
+    assignment are all derived (DESIGN.md §10)."""
+
+    reps: np.ndarray       # representative node per group        [G]
+    members: np.ndarray    # member nodes, group-major order      [T]
+    rep_for: np.ndarray    # each member's representative         [T]
+    left: np.ndarray       # member sits left of its rep          [T] bool
+    pos: np.ndarray        # member's in-group position           [T]
+    gsize_for: np.ndarray  # size of the member's group           [T]
+
+
+def _level_grouping(active: np.ndarray, m: int) -> _LevelGrouping:
+    """Partition ``active`` into runs of ``m`` with middle representatives.
 
     Row order matches the original per-object builder exactly (group-major,
     member position order, representative skipped) so that stable
@@ -140,20 +153,56 @@ def _level_transfers(
     mid = gsize // 2
     reps = active[np.arange(n_groups) * m + mid]
     member = pos != mid[gi]
-    members = active[member]
-    rep_for = reps[gi[member]]
-    # left-of-rep members transmit clockwise, right-of-rep counter-clockwise
-    # (two Rx sets per node, Sec. III-B); broadcast reverses the paths.
-    left = pos[member] < mid[gi[member]]
+    gim = gi[member]
+    posm = pos[member]
+    return _LevelGrouping(
+        reps=reps, members=active[member], rep_for=reps[gim],
+        left=posm < mid[gim], pos=posm, gsize_for=gsize[gim],
+    )
+
+
+def _grouping_batch(g: _LevelGrouping, d_bits: float, broadcast: bool,
+                    wavelength=None) -> TransferBatch:
+    """Materialize one level's transfers from its grouping arrays.
+
+    Left-of-rep members transmit clockwise, right-of-rep counter-clockwise
+    (two Rx sets per node, Sec. III-B); broadcast reverses the paths.
+    """
     if broadcast:
-        batch = TransferBatch.from_arrays(
-            rep_for, members, np.where(left, CCW, CW), d_bits, check=False
+        return TransferBatch.from_arrays(
+            g.rep_for, g.members, np.where(g.left, CCW, CW), d_bits,
+            wavelength=wavelength, check=False
         )
-    else:
-        batch = TransferBatch.from_arrays(
-            members, rep_for, np.where(left, CW, CCW), d_bits, check=False
-        )
-    return batch, reps
+    return TransferBatch.from_arrays(
+        g.members, g.rep_for, np.where(g.left, CW, CCW), d_bits,
+        wavelength=wavelength, check=False
+    )
+
+
+def _level_transfers(
+    active: np.ndarray, m: int, d_bits: float, broadcast: bool
+) -> tuple[TransferBatch, np.ndarray]:
+    """Member↔representative transfers for one tree level, as arrays."""
+    g = _level_grouping(active, m)
+    return _grouping_batch(g, d_bits, broadcast), g.reps
+
+
+def _level_wavelengths(g: _LevelGrouping) -> np.ndarray:
+    """Closed-form First-Fit assignment for one plain tree level.
+
+    Within a group the two sides load disjoint fiber lanes, and the arcs of
+    one side are strictly nested toward the representative (lengths strictly
+    decrease as the member approaches it); different groups of the level
+    never share a directed segment on the same lane.  Longest-first First
+    Fit therefore gives the member at in-group position ``p`` wavelength
+    ``p`` (left side) or ``gsize − 1 − p`` (right side), on both stages —
+    the broadcast step's arcs are the lane-mirrored image of the reduce
+    step's, so the per-row assignment is identical.  Bit-identity to
+    :func:`~repro.core.wavelength.first_fit_assign` on the materialized
+    batch is pinned by the golden tests of the batched builder
+    (DESIGN.md §10).
+    """
+    return np.where(g.left, g.pos, g.gsize_for - 1 - g.pos)
 
 
 def _alltoall_fits(
@@ -305,6 +354,206 @@ def build_schedule(
     if validate:
         validate_schedule(sched, ring)
     return sched
+
+
+# ------------------------------------------------------------------
+# Batched multi-candidate builder (DESIGN.md §10).
+# ------------------------------------------------------------------
+
+def _concat_batches(batches: list[TransferBatch]) -> tuple[TransferBatch, np.ndarray]:
+    """Concatenate step batches into one arc batch with offset pointers."""
+    ptr = np.zeros(len(batches) + 1, dtype=np.int64)
+    np.cumsum([len(b) for b in batches], out=ptr[1:])
+    cat = TransferBatch(
+        np.concatenate([b.src for b in batches]),
+        np.concatenate([b.dst for b in batches]),
+        np.concatenate([b.direction for b in batches]),
+        np.concatenate([b.bits for b in batches]),
+        np.concatenate([b.wavelength for b in batches]),
+    )
+    return cat, ptr
+
+
+def _split_batch(batch: TransferBatch, ptr: np.ndarray) -> list[TransferBatch]:
+    """Slice an assigned concatenated batch back into per-step batches."""
+    memo = batch._arcs
+    out = []
+    for lo, hi in zip(ptr[:-1].tolist(), ptr[1:].tolist()):
+        sub = TransferBatch(batch.src[lo:hi], batch.dst[lo:hi],
+                            batch.direction[lo:hi], batch.bits[lo:hi],
+                            batch.wavelength[lo:hi])
+        if memo is not None:  # per-row geometry slices with the columns
+            sub._arcs = (memo[0], memo[1][lo:hi], memo[2][lo:hi],
+                         memo[3][lo:hi])
+        out.append(sub)
+    return out
+
+
+def build_candidate_schedules(
+    n: int,
+    w: int,
+    d_bits: float,
+    m_candidates=None,
+    allow_alltoall: bool = True,
+    bandwidth_bps: float = 40e9,
+    reconfig_delay_s: float = 25e-6,
+    validate: bool = True,
+    rwa: str = "fast",
+    physical: PhysicalParams | None = None,
+    max_hops: int | None = None,
+) -> dict[tuple[int, bool], WRHTSchedule]:
+    """Build every candidate WRHT schedule of a fan-out sweep in one pass.
+
+    The auto-tuner costs one schedule per ``(m, alltoall)`` candidate;
+    rebuilding each from scratch repeats the level walk, the RWA and the
+    validation ~2× per fan-out.  This builder amortizes the sweep
+    (DESIGN.md §10):
+
+    * the all-to-all and no-all-to-all variants of one ``m`` share their
+      per-level active-node/grouping arrays and their ``Step`` objects —
+      the full tree is walked once and the variant that took the all-to-all
+      at level ``L`` is the slice ``reduce[:L] + [alltoall] +
+      broadcast[L-1::-1]`` of it;
+    * plain tree levels take the closed-form First-Fit assignment
+      (:func:`_level_wavelengths`) instead of running the greedy;
+    * relay chains under a hop budget run First-Fit over concatenated
+      per-sub-step arc batches with offset pointers
+      (:func:`~repro.core.wavelength.first_fit_assign_concat`), sharing one
+      translated-component dedup table across every candidate and both
+      stages (a broadcast step's components are the lane-mirror of its
+      reduce step's, so mirrors are cache hits).
+
+    Returns ``{(m, alltoall): schedule}`` in candidate order, each entry
+    **bit-identical** to ``build_schedule(n, w, d_bits, m=m,
+    allow_alltoall=alltoall, ...)`` (golden-tested).  The ``(m, False)``
+    variant is materialized only when the ``(m, True)`` build actually took
+    the all-to-all — otherwise the two are the same schedule.  ``m`` keys
+    are the *requested* fan-outs (the per-schedule ``m`` field carries the
+    Lemma-1/hop-budget clamp, as in ``build_schedule``).
+
+    ``validate=True`` checks wavelength conflicts and the hop budget once
+    per unique step batch plus all-reduce semantics per candidate; the
+    tuner passes ``False`` (construction is conflict-free by design and the
+    winning schedule is re-validated when materialized through the plan
+    cache).
+    """
+    if n < 1:
+        raise ValueError("need >= 1 node")
+    if max_hops is None and physical is not None:
+        max_hops = physical.max_hops
+    if max_hops is not None and max_hops < 1:
+        raise ValueError("insertion-loss hop budget must allow >= 1 hop")
+    ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps,
+                reconfig_delay_s=reconfig_delay_s, physical=physical)
+    if m_candidates is None:
+        m_candidates = range(2, feasible_group_size(w, max_hops) + 1)
+    ms: list[int] = []
+    for m in m_candidates:
+        m = int(m)
+        if m < 2:
+            raise ValueError("group size m must be >= 2")
+        if m not in ms:
+            ms.append(m)
+    assign = _assigner(rwa)
+    closed_form = rwa == "fast"
+    rwa_cache: dict = {}  # translated-component dedup, shared by all candidates
+
+    def emit_level(kind: str, level: int, g: _LevelGrouping,
+                   relay: bool, broadcast: bool) -> list[Step]:
+        batch = _grouping_batch(g, d_bits, broadcast)
+        if relay:
+            subs = split_overlong_arcs(batch, ring.n, max_hops)
+            if closed_form:
+                cat, ptr = _concat_batches(subs)
+                assigned = first_fit_assign_concat(cat, ptr, ring.n, ring.w,
+                                                   cache=rwa_cache)
+                subs = _split_batch(assigned, ptr)
+            else:
+                subs = [assign(sub, ring.n, ring.w) for sub in subs]
+            return [Step(kind, level, sub) for sub in subs]
+        if closed_form:
+            return [Step(kind, level, batch.with_wavelengths(_level_wavelengths(g)))]
+        return [Step(kind, level, assign(batch, ring.n, ring.w))]
+
+    out: dict[tuple[int, bool], WRHTSchedule] = {}
+    for m_req in ms:
+        # same clamps as build_schedule: Lemma 1 then the level-0 fan-out cap
+        m = _cap_group_size(min(m_req, optimal_group_size(w)), max_hops, 1)
+        active = np.arange(n, dtype=np.int64)
+        levels = [active]
+        if n == 1:
+            out[(m_req, allow_alltoall)] = WRHTSchedule(
+                n=n, w=w, m=m, levels=[active.tolist()], max_hops=max_hops)
+            continue
+
+        reduce_steps: list[list[Step]] = []   # Steps per level (relays split)
+        groupings: list[_LevelGrouping] = []
+        meta: list[tuple[int, bool]] = []     # (m_lvl, relay) per level
+        a2a_at: int | None = None
+        a2a_step: Step | None = None
+        level = 0
+        while active.size > 1:
+            if allow_alltoall and a2a_at is None:
+                fit = _alltoall_fits(active, ring, d_bits, rwa,
+                                     max_hops=max_hops)
+                if fit is not None:
+                    # the all-to-all variant stops here; keep walking the
+                    # tree — the no-all-to-all variant needs the rest
+                    a2a_at = level
+                    a2a_step = Step("alltoall", level, fit)
+            m_lvl, relay = _level_cap(active, m, max_hops)
+            g = _level_grouping(active, m_lvl)
+            reduce_steps.append(emit_level("reduce", level, g, relay, False))
+            groupings.append(g)
+            meta.append((m_lvl, relay))
+            active = g.reps
+            levels.append(active)
+            level += 1
+
+        bcast_steps = [
+            emit_level("broadcast", lvl, g, meta[lvl][1], True)
+            for lvl, g in enumerate(groupings)
+        ]
+
+        def assemble(depth: int, tail: list[Step]) -> list[Step]:
+            steps = [s for lvl in range(depth) for s in reduce_steps[lvl]]
+            steps.extend(tail)
+            for lvl in range(depth - 1, -1, -1):
+                steps.extend(bcast_steps[lvl])
+            return steps
+
+        full_tree = WRHTSchedule(
+            n=n, w=w, m=m, steps=assemble(len(groupings), []),
+            levels=[l.tolist() for l in levels], max_hops=max_hops,
+            level_group_sizes=[ml for ml, _ in meta],
+        )
+        if a2a_at is None:
+            out[(m_req, allow_alltoall)] = full_tree
+        else:
+            out[(m_req, True)] = WRHTSchedule(
+                n=n, w=w, m=m, steps=assemble(a2a_at, [a2a_step]),
+                levels=[levels[i].tolist() for i in range(a2a_at + 1)],
+                max_hops=max_hops,
+                level_group_sizes=[meta[i][0] for i in range(a2a_at)],
+            )
+            out[(m_req, False)] = full_tree
+
+    if validate:
+        hops_budget = max_hops if max_hops is not None else ring.max_hops
+        seen: set[int] = set()
+        for sched in out.values():
+            for step in sched.steps:
+                if id(step.transfers) not in seen:
+                    seen.add(id(step.transfers))
+                    validate_no_conflicts(step.transfers, ring.n, ring.w,
+                                          max_hops=hops_budget)
+            bad = _incomplete_nodes(_contribution_words(sched), sched.n)
+            if bad:
+                raise AssertionError(
+                    f"all-reduce semantics violated: nodes {bad[:8]} missing "
+                    "contributions"
+                )
+    return out
 
 
 # ------------------------------------------------------------------

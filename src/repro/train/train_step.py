@@ -15,7 +15,10 @@ Gradient-sync modes (``TrainConfig.sync_algorithm``):
                 the mesh-factorized WRHT port (full-vector psum per level /
                 reduce-scatter down + all-gather up).
   planned       per-bucket α–β planner choice (core.planner), the Lemma-1
-                machinery deciding flat vs tree vs hierarchical per size.
+                machinery deciding flat vs tree vs hierarchical per size;
+                every bucket is planned once at setup via the amortized
+                ``planner.plan_buckets`` batch API (DESIGN.md §10) and each
+                traced step dispatches from the precomputed plan.
 
 ``compress_pod_axis`` swaps the pod level for int8+error-feedback recursive
 doubling (cross-pod links are the scarce resource at 512+ chips).
@@ -24,6 +27,7 @@ doubling (cross-pod links are the scarce resource at 512+ chips).
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -75,6 +79,53 @@ def abstract_train_state(cfg: ModelConfig, tc: TrainConfig):
 # gradient sync (explicit modes)
 # ---------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class GradSyncPlans:
+    """Setup-time product of the amortized planner (DESIGN.md §10): the
+    gradient bucket partition plus one schedule choice per (DP axis,
+    bucket)."""
+
+    spec: bucketing.BucketSpec
+    plans: dict[str, tuple[planner.Plan, ...]]   # DP axis -> per-bucket plan
+
+
+def plan_gradient_sync(grads, tc: TrainConfig, mesh,
+                       cost: planner.CostParams | None = None,
+                       backend: str = "analytic") -> GradSyncPlans:
+    """Partition the gradient pytree into size-capped buckets and plan every
+    bucket's schedule for every DP axis in one batched planner call.
+
+    ``grads`` may be abstract (``jax.ShapeDtypeStruct`` leaves) — only
+    shapes/dtypes are read, so ``make_train_step`` runs this once at setup
+    instead of re-planning inside every trace.  Bucket bytes are counted in
+    the wire dtype (``tc.sync_dtype``), matching what each collective
+    actually moves.
+    """
+    spec = bucketing.plan_buckets(grads, tc.bucket_bytes)
+    itemsize = jnp.dtype(_dtype(tc.sync_dtype)).itemsize
+    bucket_bytes = [s * itemsize for s in spec.bucket_sizes]
+    plans = {
+        ax: tuple(planner.plan_buckets(mesh.shape[ax], bucket_bytes, cost,
+                                       backend=backend))
+        for ax in dp_axes_of(mesh)
+    }
+    return GradSyncPlans(spec, plans)
+
+
+def _dispatch_planned(flat, axis, size, plan: planner.Plan):
+    """Run one bucket's planned schedule on one DP axis."""
+    if plan.strategy == "flat":
+        return lax.psum(flat, axis)
+    if plan.strategy == "rd":
+        return C.allreduce_rd(flat, axis, size)
+    if plan.strategy == "wrht_tree":
+        return C.allreduce_wrht_tree(
+            flat, axis, size, m=plan.m,
+            alltoall_max=plan.m if plan.alltoall else None)
+    # hier_scatter on one axis == ring reduce-scatter + all-gather
+    return C.allreduce_ring(flat, axis, size)
+
+
 def _sync_one_axis(flat, axis, size, alg, m):
     if alg == "psum":
         return lax.psum(flat, axis)
@@ -90,9 +141,14 @@ def _sync_one_axis(flat, axis, size, alg, m):
     raise ValueError(alg)
 
 
-def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None):
+def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None,
+                   sync_plans: GradSyncPlans | None = None):
     """Explicit gradient sync over the manual DP axes.  Returns (mean grads,
-    new_ef_state | None).  Must run inside shard_map (manual DP axes)."""
+    new_ef_state | None).  Must run inside shard_map (manual DP axes).
+
+    ``sync_plans`` carries the setup-time bucket partition and per-bucket
+    schedule choices for the ``"planned"`` mode; when absent they are
+    derived on the spot (plan-cache-warm, but re-done per trace)."""
     axes = dp_axes_of(mesh)
     sizes = {a: mesh.shape[a] for a in axes}
     total = math.prod(sizes.values())
@@ -127,22 +183,18 @@ def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None):
                 flat, axes, tuple(sizes[a] for a in axes), mode=mode)
 
     elif alg == "planned":
-        cost = planner.CostParams.tpu_v5e()
+        plans = sync_plans or plan_gradient_sync(grads, tc, mesh)
 
-        def bucket_fn(flat, nbytes):
+        def bucket_fn(flat, nbytes, i):
             for ax in axes:
-                plan = planner.plan_bucket(sizes[ax], nbytes)
-                if plan.strategy == "flat":
-                    flat = lax.psum(flat, ax)
-                elif plan.strategy == "rd":
-                    flat = C.allreduce_rd(flat, ax, sizes[ax])
-                elif plan.strategy == "wrht_tree":
-                    flat = C.allreduce_wrht_tree(
-                        flat, ax, sizes[ax], m=plan.m,
-                        alltoall_max=plan.m if plan.alltoall else None)
-                else:  # hier_scatter on one axis == ring reduce-scatter+gather
-                    flat = C.allreduce_ring(flat, ax, sizes[ax])
+                flat = _dispatch_planned(flat, ax, sizes[ax],
+                                         plans.plans[ax][i])
             return flat
+
+        grads = bucketing.bucketed_apply_indexed(
+            grads, bucket_fn, plans.spec, sync_dtype=_dtype(tc.sync_dtype))
+        grads = jax.tree.map(lambda g: g / total, grads)
+        return grads, new_ef
 
     else:
         def bucket_fn(flat, nbytes):
@@ -196,6 +248,18 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     api = mapi.get_api(cfg, compute_dtype=_dtype(tc.compute_dtype), remat=tc.remat)
     lr_fn = make_lr_schedule(tc)
 
+    # amortized planning: partition the (abstract) gradients into buckets
+    # and plan every bucket's schedule ONCE here — each traced step then
+    # just dispatches bucket i to its precomputed plan (DESIGN.md §10)
+    sync_plans = None
+    if tc.sync_algorithm == "planned" and mesh is not None and dp_axes_of(mesh):
+        g_dtype = _dtype(tc.grad_accum_dtype if tc.microbatches > 1
+                         else tc.param_dtype)
+        abstract_params = abstract_train_state(cfg, tc)["params"]
+        abstract_grads = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, g_dtype), abstract_params)
+        sync_plans = plan_gradient_sync(abstract_grads, tc, mesh)
+
     def loss_fn(params, batch):
         return api.loss(params, batch)
 
@@ -205,7 +269,8 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
             accum_dtype=_dtype(tc.grad_accum_dtype))
         new_ef = None
         if tc.sync_algorithm in MANUAL_ALGOS:
-            grads, new_ef = sync_gradients(grads, tc, mesh, state.get("ef"))
+            grads, new_ef = sync_gradients(grads, tc, mesh, state.get("ef"),
+                                           sync_plans=sync_plans)
             loss = lax.pmean(loss, dp_axes_of(mesh))
         lr = lr_fn(state["step"])
         params, opt, om = adamw_update(grads, state["opt"], state["params"], lr, tc)

@@ -1,0 +1,196 @@
+"""Two-tier plan cache (DESIGN.md §10): hit/miss accounting, LRU eviction,
+disk round-trip bit-equality, schema-version invalidation, and the
+absorption of the historical ad-hoc schedule/profile lru caches."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import plan_cache, simulator, step_models as sm, timing, wrht
+from repro.core.plan_cache import PlanCache, PlanKey
+from repro.core.topology import Ring
+
+KEY = PlanKey(n=64, w=8, m=4, alltoall=True, max_hops=None)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_default():
+    """Tests below reason about exact hit/miss counts on the process-default
+    cache — isolate them from whatever earlier tests left behind."""
+    plan_cache.set_default(None)
+    yield
+    plan_cache.set_default(None)
+
+
+# ---------------------------------------------------------------------------
+# memory tier: accounting + eviction
+# ---------------------------------------------------------------------------
+
+def test_schedule_hit_miss_accounting():
+    cache = PlanCache()
+    s1 = cache.schedule(KEY)
+    assert (cache.stats.misses, cache.stats.memory_hits) == (1, 0)
+    s2 = cache.schedule(KEY)
+    assert (cache.stats.misses, cache.stats.memory_hits) == (1, 1)
+    assert s1 is s2  # the cached object, not a rebuild
+    # the schedule is the fully validated build
+    ref = wrht.build_schedule(64, 8, 1.0, m=4, allow_alltoall=True)
+    assert s1.num_steps == ref.num_steps
+
+
+def test_profile_hit_miss_accounting():
+    cache = PlanCache()
+    p1 = cache.profile(KEY)
+    # one profile miss; the internal schedule build does not double-count
+    assert (cache.stats.misses, cache.stats.memory_hits) == (1, 0)
+    p2 = cache.profile(KEY)
+    assert (cache.stats.misses, cache.stats.memory_hits) == (1, 1)
+    assert p1 is p2
+    # schedule materialized along the way: a hit now
+    cache.schedule(KEY)
+    assert cache.stats.memory_hits == 2
+    assert cache.stats.lookups == 3 and cache.stats.hits == 2
+
+
+def test_lru_eviction():
+    cache = PlanCache(capacity=2)
+    keys = [PlanKey(n=16, w=4, m=m) for m in (2, 3, 4)]
+    for k in keys:
+        cache.schedule(k)
+    assert len(cache) == 2 and cache.stats.evictions == 1
+    assert keys[0] not in cache and keys[1] in cache and keys[2] in cache
+    cache.schedule(keys[0])            # rebuilt: a miss again
+    assert cache.stats.misses == 4
+
+
+def test_clear_resets_entries_and_stats():
+    cache = PlanCache()
+    cache.schedule(KEY)
+    cache.clear()
+    assert len(cache) == 0 and cache.stats.lookups == 0
+    cache.schedule(KEY)
+    assert cache.stats.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# disk tier: round-trip equality + schema invalidation
+# ---------------------------------------------------------------------------
+
+def _profiles_equal(a, b) -> bool:
+    meta_a, arr_a = timing.profile_to_arrays(a)
+    meta_b, arr_b = timing.profile_to_arrays(b)
+    return meta_a == meta_b and all(
+        np.array_equal(arr_a[k], arr_b[k]) for k in arr_a)
+
+
+def test_disk_round_trip_profile_equality(tmp_path):
+    warm = PlanCache(disk_dir=tmp_path)
+    built = warm.profile(KEY)
+    assert warm.stats.disk_writes == 1
+    assert (tmp_path / KEY.filename()).exists()
+
+    cold = PlanCache(disk_dir=tmp_path)     # fresh process, same artifacts
+    loaded = cold.profile(KEY)
+    assert (cold.stats.disk_hits, cold.stats.misses) == (1, 0)
+    assert _profiles_equal(built, loaded)
+
+    # evaluation is bit-identical through every engine, scatters included
+    ring = Ring(64, 8)
+    d = np.asarray([1e5, 1e6, 62.3e6 * 32])
+    for mode in ("lockstep", "event", "overlap"):
+        got = loaded.evaluate(ring, d, mode)
+        ref = built.evaluate(ring, d, mode)
+        np.testing.assert_array_equal(got.total_s, ref.total_s)
+        np.testing.assert_array_equal(got.serialization_s, ref.serialization_s)
+        np.testing.assert_array_equal(got.per_step_s, ref.per_step_s)
+
+
+def test_schema_version_invalidation(tmp_path, monkeypatch):
+    PlanCache(disk_dir=tmp_path).profile(KEY)
+    old_name = KEY.filename()
+
+    monkeypatch.setattr(plan_cache, "SCHEMA_VERSION", plan_cache.SCHEMA_VERSION + 1)
+    bumped = PlanCache(disk_dir=tmp_path)
+    bumped.profile(KEY)
+    # the v(N) artifact is invisible under v(N+1): a plain miss + rewrite
+    assert (bumped.stats.disk_hits, bumped.stats.misses) == (0, 1)
+    assert (tmp_path / KEY.filename()).exists()
+    assert KEY.filename() != old_name
+
+    # an artifact whose *filename* matches but whose metadata carries a
+    # stale schema (e.g. a bad copy) is also rejected
+    os.replace(tmp_path / old_name, tmp_path / KEY.filename())
+    stale = PlanCache(disk_dir=tmp_path)
+    stale.profile(KEY)
+    assert (stale.stats.disk_hits, stale.stats.misses) == (0, 1)
+
+
+def test_unreadable_artifact_is_a_miss(tmp_path):
+    (tmp_path / KEY.filename()).write_bytes(b"not an npz")
+    cache = PlanCache(disk_dir=tmp_path)
+    cache.profile(KEY)   # must not raise
+    assert (cache.stats.disk_hits, cache.stats.misses) == (0, 1)
+
+
+def test_corrupt_zip_artifact_is_a_miss(tmp_path):
+    """A truncated/interleaved write can leave a file with zip magic but
+    corrupt contents — np.load raises BadZipFile, which must degrade to a
+    miss, not crash every subsequent lookup."""
+    good = PlanCache(disk_dir=tmp_path)
+    good.profile(KEY)
+    path = tmp_path / KEY.filename()
+    path.write_bytes(path.read_bytes()[: path.stat().st_size // 2])
+    cache = PlanCache(disk_dir=tmp_path)
+    cache.profile(KEY)   # must not raise
+    assert (cache.stats.disk_hits, cache.stats.misses) == (0, 1)
+
+
+def test_clear_caches_installs_memory_only_default(tmp_path):
+    """timing.clear_caches() promises fair *cold* timing: a configured disk
+    tier must not turn post-clear lookups into disk hits."""
+    plan_cache.set_default(PlanCache(disk_dir=tmp_path))
+    plan_cache.get_default().profile(KEY)
+    timing.clear_caches()
+    cache = plan_cache.get_default()
+    assert cache.disk_dir is None
+    cache.profile(KEY)
+    assert (cache.stats.disk_hits, cache.stats.misses) == (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# absorption of the historical ad-hoc caches
+# ---------------------------------------------------------------------------
+
+def test_simulator_schedule_frontend_delegates():
+    timing.clear_caches()
+    s1 = simulator._cached_wrht_schedule(64, 8, 4, None, True)
+    s2 = simulator._cached_wrht_schedule(64, 8, 4, None, True)
+    assert s1 is s2
+    stats = plan_cache.get_default().stats
+    assert stats.misses == 1 and stats.memory_hits == 1
+
+
+def test_tuner_publishes_profiles_for_reuse():
+    """After one tune_wrht sweep every candidate is a warm plan: the
+    follow-up wrht_times/run_optical(m="auto") path compiles nothing."""
+    timing.clear_caches()
+    p = sm.OpticalParams(wavelengths=8)
+    tuned = timing.tune_wrht(64, 8, 1e6)
+    stats = plan_cache.get_default().stats
+    misses_after_tune = stats.misses
+    m, a2a = tuned.best(0)
+    times = timing.wrht_times(64, 1e6, p, m=m, allow_alltoall=a2a)
+    assert plan_cache.get_default().stats.misses == misses_after_tune
+    assert plan_cache.get_default().stats.memory_hits >= 1
+    # and the published profile times exactly like the per-point simulator
+    ref = simulator.run_optical("wrht", 64, 1e6, p, m=m)
+    assert float(times.total_s[0]) == ref.total_s
+
+
+def test_run_optical_auto_reuses_tuner_plans():
+    timing.clear_caches()
+    p = sm.OpticalParams(wavelengths=8)
+    res = simulator.run_optical("wrht", 64, 1e6, p, m="auto")
+    tuned = timing.tune_wrht(64, p.wavelengths, 1e6)
+    assert res.total_s == float(tuned.best_total_s[0])

@@ -120,12 +120,14 @@ def test_profile_dedupes_shared_batches():
 
 def test_profile_caches_hit_across_payloads_and_timings():
     timing.clear_caches()
+    from repro.core import plan_cache
+
     p = sm.OpticalParams(wavelengths=8)
     timing.evaluate_grid(("wrht",), (64,), (1e6,), TIMINGS, p)
     timing.evaluate_grid(("wrht",), (64,), (1e7, 1e8), TIMINGS, p)
-    info = timing._wrht_profile.cache_info()
-    assert info.misses == 1          # compiled once
-    assert info.hits >= 5            # reused for every other (timing, call)
+    stats = plan_cache.get_default().stats
+    assert stats.misses == 1         # compiled once
+    assert stats.memory_hits >= 5    # reused for every other (timing, call)
 
 
 def test_payload_class_division_chain_exact():
