@@ -1,0 +1,179 @@
+"""Scheduled collective algebra wall-clock: per-collective times + the
+RS+AG-vs-AR crossover (DESIGN.md §11, EXPERIMENTS.md §Collectives).
+
+Two measurements, written to ``BENCH_collectives.json`` by
+``python -m benchmarks.bench_collectives``:
+
+* ``collectives`` — simulated lockstep time of every scheduled collective
+  (reduce_scatter / all_gather / broadcast / alltoall / allreduce) across
+  ``N × d`` through the batched timing engine (one ``collective_times``
+  call per cell covers the whole payload grid).  Infeasible cells (the
+  single-step all-to-all beyond its ``⌈N²/8⌉`` wavelength budget) are
+  recorded as such, not skipped silently.
+* ``rs_ag_vs_ar`` — the ZeRO-style decomposition against the monolithic
+  all-reduce: per ring size, the payload ``d*`` where ``t_RS(d) + t_AG(d)``
+  crosses below ``t_AR(d)``.  Small buckets are step-bound (WRHT's
+  ``2⌈log_m N⌉−1`` full-vector steps win), large buckets are
+  bandwidth-bound (the ring passes move ``2·(N−1)/N·d`` total).  The
+  committed artifact records the measured crossover per N, which
+  ``sync_algorithm="planned_sharded"`` exploits per bucket.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the grid for the CI smoke run (the workflow uploads the
+JSON as an artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import step_models as sm, timing, wrht
+from repro.core.wavelength import InsertionLossError, WavelengthConflictError
+
+NS = (16, 64, 256, 1024)
+QUICK_NS = (16, 64)
+D_GRID = tuple(float(2 ** e) for e in range(13, 34))   # 8 Kb .. 8 Gb
+RESNET50 = sm.PAPER_MODELS_BITS["ResNet50"]
+
+COLLECTIVES = ("reduce_scatter", "all_gather", "broadcast", "alltoall",
+               "allreduce")
+
+
+def measure_collectives(ns=NS, d_grid=D_GRID,
+                        p: sm.OpticalParams | None = None) -> list[dict]:
+    """Lockstep totals of every collective over the N × d grid."""
+    p = p or sm.OpticalParams()
+    rows = []
+    d = np.asarray(d_grid)
+    for n in ns:
+        for coll in COLLECTIVES:
+            try:
+                times = timing.collective_times(coll, n, d, p,
+                                                keep_per_step=False)
+            except (WavelengthConflictError, InsertionLossError) as e:
+                rows.append({"collective": coll, "n": n, "feasible": False,
+                             "reason": str(e)})
+                continue
+            rows.append({
+                "collective": coll, "n": n, "feasible": True,
+                "steps": int(times.steps),
+                "max_wavelengths": int(times.max_wavelengths),
+                "d_bits": list(d),
+                "total_s": [float(t) for t in times.total_s],
+            })
+    return rows
+
+
+def _rs_ag_and_ar(n: int, d, p: sm.OpticalParams):
+    d = np.atleast_1d(np.asarray(d, dtype=np.float64))
+    rs = timing.collective_times("reduce_scatter", n, d, p,
+                                 keep_per_step=False).total_s
+    ag = timing.collective_times("all_gather", n, d, p,
+                                 keep_per_step=False).total_s
+    ar = timing.collective_times("allreduce", n, d, p,
+                                 keep_per_step=False).total_s
+    return rs + ag, ar
+
+
+def measure_crossover(ns=NS, p: sm.OpticalParams | None = None) -> list[dict]:
+    """Per ring size: the payload where RS+AG overtakes the all-reduce.
+
+    The grid bracket is refined by bisection on the continuous payload axis
+    (both curves are piecewise-affine in d, so 60 iterations pin the
+    crossover to the flit granularity).
+    """
+    p = p or sm.OpticalParams()
+    rows = []
+    d = np.asarray(D_GRID)
+    for n in ns:
+        sharded, mono = _rs_ag_and_ar(n, d, p)
+        wins = sharded <= mono
+        row = {
+            "n": n,
+            "ar_steps": int(timing.collective_times(
+                "allreduce", n, [1e6], p, keep_per_step=False).steps),
+            "rs_ag_steps": 2 * (n - 1),
+            "at_resnet50": {
+                "rs_ag_s": float(_rs_ag_and_ar(n, RESNET50, p)[0][0]),
+                "ar_s": float(_rs_ag_and_ar(n, RESNET50, p)[1][0]),
+            },
+        }
+        if wins.all() or not wins.any():
+            row["crossover_d_bits"] = None
+            row["rs_ag_always_wins"] = bool(wins.all())
+        else:
+            i = int(np.argmax(wins))          # first grid point RS+AG wins
+            lo, hi = float(d[i - 1]), float(d[i])
+            for _ in range(60):
+                mid = 0.5 * (lo + hi)
+                s, m_ = _rs_ag_and_ar(n, mid, p)
+                if s[0] <= m_[0]:
+                    hi = mid
+                else:
+                    lo = mid
+            row["crossover_d_bits"] = hi
+            row["crossover_mbytes"] = hi / 8 / 1e6
+        rows.append(row)
+    return rows
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` CSV harness."""
+    p = sm.OpticalParams()
+    out = []
+    for n in QUICK_NS:
+        for coll in COLLECTIVES:
+            try:
+                t = timing.collective_times(coll, n, [RESNET50], p,
+                                            keep_per_step=False)
+            except (WavelengthConflictError, InsertionLossError):
+                continue
+            out.append({
+                "name": f"collective_{coll}_n{n}",
+                "us_per_call": float(t.total_s[0]) * 1e6,
+                "derived": {"steps": int(t.steps),
+                            "wavelengths": int(t.max_wavelengths)},
+            })
+    for row in measure_crossover(ns=QUICK_NS):
+        out.append({
+            "name": f"rs_ag_vs_ar_crossover_n{row['n']}",
+            "us_per_call": 0.0,
+            "derived": {"crossover_d_bits": row.get("crossover_d_bits")},
+        })
+    return out
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    ns = QUICK_NS if quick else NS
+    p = sm.OpticalParams()
+    payload = {
+        "config": {
+            "wavelengths": p.wavelengths,
+            "bandwidth_bps": p.bandwidth_bps,
+            "reconfig_delay_s": p.reconfig_delay_s,
+            "collectives": list(COLLECTIVES),
+            "quick": quick,
+            "note": "allreduce = WRHT at the analytic fan-out (Lemma 1); "
+                    "RS/AG = the N-1-step ring passes (DESIGN.md §11)",
+        },
+        "collectives": measure_collectives(ns=ns, p=p),
+        "rs_ag_vs_ar": measure_crossover(ns=ns, p=p),
+    }
+    out = Path(__file__).resolve().parents[1] / "BENCH_collectives.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    for row in payload["rs_ag_vs_ar"]:
+        cx = row.get("crossover_d_bits")
+        print(f"  N={row['n']:5d}: RS+AG vs AR crossover at "
+              + (f"{cx:.3g} bits ({cx / 8 / 1e6:.2f} MB)" if cx
+                 else f"none on grid (rs_ag_always_wins="
+                      f"{row.get('rs_ag_always_wins')})"))
+
+
+if __name__ == "__main__":
+    main()

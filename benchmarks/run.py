@@ -16,6 +16,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   planner_batch      amortized planning: batched tuner vs per-candidate loop
                      + plan-cache cold/warm throughput (full sweep writes
                      BENCH_planner.json via `python -m benchmarks.bench_planner`)
+  collectives        scheduled collective algebra: per-collective times +
+                     the RS+AG-vs-AR crossover (full sweep writes
+                     BENCH_collectives.json via
+                     `python -m benchmarks.bench_collectives`)
 """
 
 from __future__ import annotations
@@ -26,6 +30,7 @@ import sys
 
 def main() -> None:
     from . import (
+        bench_collectives,
         bench_insertion_loss,
         bench_planner,
         bench_schedule_build,
@@ -47,6 +52,7 @@ def main() -> None:
         "insertion_loss": bench_insertion_loss,
         "sweep": bench_sweep,
         "planner_batch": bench_planner,
+        "collectives": bench_collectives,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

@@ -38,6 +38,19 @@ for alg in ("wrht", "hring", "ring", "bt"):
     r = simulator.run_optical(alg, 1024, 25e6 * 32)
     print(f"  {alg:6s} {r.total_s*1e3:9.2f} ms  ({r.steps} steps)")
 
+# ---- 2b. the scheduled collective algebra (DESIGN.md §11) ------------------
+from repro.core import timing
+
+d = 25e6 * 32
+rs = timing.collective_times("reduce_scatter", 1024, [d])
+ag = timing.collective_times("all_gather", 1024, [d])
+ar = timing.collective_times("allreduce", 1024, [d])
+print(f"\nZeRO-style sharded sync on 1024 nodes (ResNet50 bucket): "
+      f"RS+AG {float(rs.total_s[0] + ag.total_s[0])*1e3:.2f} ms vs "
+      f"monolithic all-reduce {float(ar.total_s[0])*1e3:.2f} ms "
+      f"(per-bucket crossover: BENCH_collectives.json; "
+      f'train with sync_algorithm="planned_sharded")')
+
 # ---- 3. physical layer: insertion loss + event-timed simulation ------------
 phys = PhysicalParams(insertion_loss_db_per_hop=2.0)  # 32 dB budget -> 16 hops
 pp = sm.OpticalParams(physical=phys)

@@ -155,7 +155,8 @@ class TrainConfig:
     remat: str = "full"              # "none" | "full" | "dots"
     fsdp: bool = False               # shard params/opt over the data axis
     # --- the paper's technique, first-class ---
-    sync_algorithm: str = "auto"     # auto|psum|ring|rd|bt|wrht|hier_faithful|hier_scatter
+    sync_algorithm: str = "auto"     # auto|psum|ring|rd|bt|wrht|hier_faithful|
+                                     # hier_scatter|planned|planned_sharded
     # wire dtype for explicit gradient sync: f32 default (the XLA *CPU*
     # backend aborts on some bf16 collectives — see EXPERIMENTS §Perf-10);
     # set "bfloat16" on TPU for 2x fewer wire bytes

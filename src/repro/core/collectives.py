@@ -27,9 +27,20 @@ Implemented algorithms and their optical-paper counterparts:
                           or per-level full psum ("faithful" mode — the
                           paper's constant-d accounting).
 
+Since PR 5 every *scheduled* collective (DESIGN.md §11) also has its
+device-level shard_map twin here, with matching ownership semantics:
+
+    reduce_scatter_ring / all_gather_ring      the ring passes (device i
+                          owns chunk i, like the scheduled collectives)
+    broadcast_wrht_tree   the WRHT broadcast tree alone (root = device 0)
+    alltoall_ppermute     single-phase personalized all-to-all, plus the
+                          reduce_scatter_alltoall / all_gather_alltoall
+                          single-step finisher variants the planner can pick
+
 Correctness of each against ``allreduce_psum`` is enforced by
 ``tests/test_collectives.py`` on 8 simulated devices, including a hypothesis
-sweep.
+sweep; the scheduled-vs-device conformance pairing lives in
+``tests/test_collective_conformance.py``.
 """
 
 from __future__ import annotations
@@ -109,8 +120,11 @@ def allreduce_ring(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
 
 def reduce_scatter_ring(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
     """Ring reduce-scatter only (returns this device's owned 1/S chunk of the
-    padded flat payload).  Used by the hierarchical composition tests."""
+    padded flat payload; device ``i`` owns chunk ``i``, exactly the scheduled
+    ``reduce_scatter`` collective's ownership map, DESIGN.md §11)."""
     s = axis_size
+    if s == 1:
+        return x.reshape(-1)
     flat, _ = _pad_to(x, s)
     chunks = flat.reshape(s, -1)
     idx = lax.axis_index(axis_name)
@@ -124,6 +138,115 @@ def reduce_scatter_ring(x: jax.Array, axis_name: str, axis_size: int) -> jax.Arr
         recv = lax.ppermute(send, axis_name, perm)
         send = recv + chunk(idx + s - 1 - t)
     return send
+
+
+def all_gather_ring(shard: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Ring all-gather: circulate this device's owned chunk ``S-1`` hops and
+    return the concatenation (chunk ``i`` from device ``i``) — the device
+    twin of the scheduled ``all_gather`` ring pass (DESIGN.md §11) and the
+    inverse of :func:`reduce_scatter_ring`."""
+    s = axis_size
+    flat = shard.reshape(-1)
+    if s == 1:
+        return flat
+    idx = lax.axis_index(axis_name)
+    perm = _shift_perm(s)
+    out = jnp.zeros((s, flat.shape[0]), flat.dtype)
+    out = lax.dynamic_update_index_in_dim(out, flat, idx % s, axis=0)
+    cur = flat
+    for t in range(1, s):
+        cur = lax.ppermute(cur, axis_name, perm)
+        out = lax.dynamic_update_index_in_dim(out, cur, (idx - t) % s, axis=0)
+    return out.reshape(-1)
+
+
+def broadcast_wrht_tree(x: jax.Array, axis_name: str, axis_size: int,
+                        m: int = 2) -> jax.Array:
+    """WRHT broadcast tree alone: device 0's value propagated to every
+    device down the m-ary levels — the device twin of the scheduled
+    ``broadcast`` collective (DESIGN.md §11; the scheduled root is the
+    tree's surviving representative, here canonicalized to device 0)."""
+    s = axis_size
+    if s == 1:
+        return x
+    if m < 2:
+        raise ValueError("m must be >= 2")
+    idx = lax.axis_index(axis_name)
+    strides = []
+    stride = 1
+    while stride < s:
+        strides.append(stride)
+        stride *= m
+    for stride in reversed(strides):
+        span = stride * m
+        for j in range(1, m):
+            perm = [
+                (h, h + j * stride)
+                for h in range(0, s, span)
+                if h + j * stride < s
+            ]
+            if not perm:
+                continue
+            recv = lax.ppermute(x, axis_name, perm)
+            is_member = (idx % span) == (j * stride)
+            x = jnp.where(is_member, recv, x)
+    return x
+
+
+def alltoall_ppermute(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:
+    """Single-phase personalized all-to-all: row ``j`` of the ``[S, ...]``
+    input is this device's message for device ``j``; row ``i`` of the output
+    is the message received from device ``i`` — the device twin of the
+    scheduled one-step ``alltoall`` collective (DESIGN.md §11), expressed as
+    S-1 rotation ppermutes (parallel wavelengths → parallel ICI channels).
+    """
+    s = axis_size
+    if x.shape[0] != s:
+        raise ValueError(f"leading dim {x.shape[0]} != axis size {s}")
+    if s == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    self_msg = lax.dynamic_index_in_dim(x, idx % s, axis=0, keepdims=False)
+    out = jnp.zeros_like(x)
+    out = lax.dynamic_update_index_in_dim(out, self_msg, idx % s, axis=0)
+    for off in range(1, s):
+        msg = lax.dynamic_index_in_dim(x, (idx + off) % s, axis=0,
+                                       keepdims=False)
+        perm = [(i, (i + off) % s) for i in range(s)]
+        recv = lax.ppermute(msg, axis_name, perm)
+        out = lax.dynamic_update_index_in_dim(out, recv, (idx - off) % s,
+                                              axis=0)
+    return out
+
+
+def reduce_scatter_alltoall(x: jax.Array, axis_name: str,
+                            axis_size: int) -> jax.Array:
+    """Reduce-scatter via the single-step all-to-all finisher: every device
+    posts its local chunk ``j`` to device ``j`` and locally reduces what it
+    received.  Same ownership map as :func:`reduce_scatter_ring` (device
+    ``i`` owns chunk ``i``); the optical plan trades ``S-1``
+    reconfigurations for ``⌈S²/8⌉`` wavelengths (DESIGN.md §11)."""
+    s = axis_size
+    if s == 1:
+        return x.reshape(-1)
+    flat, _ = _pad_to(x, s)
+    chunks = flat.reshape(s, -1)
+    recv = alltoall_ppermute(chunks, axis_name, s)
+    return recv.sum(axis=0)
+
+
+def all_gather_alltoall(shard: jax.Array, axis_name: str,
+                        axis_size: int) -> jax.Array:
+    """All-gather via the single-step all-to-all finisher: every device
+    posts its owned shard to every peer in one exchange.  Bit-compatible
+    output with :func:`all_gather_ring`."""
+    s = axis_size
+    flat = shard.reshape(-1)
+    if s == 1:
+        return flat
+    msgs = jnp.tile(flat[None], (s, 1))
+    recv = alltoall_ppermute(msgs, axis_name, s)
+    return recv.reshape(-1)
 
 
 def allreduce_rd(x: jax.Array, axis_name: str, axis_size: int) -> jax.Array:

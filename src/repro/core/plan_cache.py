@@ -2,11 +2,14 @@
 
 The amortized planning layer of DESIGN.md §10.  A network plan is a
 first-class, reused artifact (TopoOpt's thesis): the expensive part of
-planning — building a WRHT schedule and compiling it to a
+planning — building a collective schedule and compiling it to a
 :class:`~repro.core.timing.ScheduleProfile` — depends only on the
-*d-independent structure* ``(n, w, m, alltoall, max_hops, rwa)``, never on
-the payload size, so one cache entry serves every bucket size, every
-``OpticalParams`` flavour and every timing mode.
+*d-independent structure* ``(collective, n, w, m, alltoall, max_hops,
+rwa)``, never on the payload size, so one cache entry serves every bucket
+size, every ``OpticalParams`` flavour and every timing mode.  Since PR 5
+the key carries the *collective* (DESIGN.md §11) — schedules of different
+collectives never mix, and the :data:`SCHEMA_VERSION` bump makes every
+pre-collective on-disk artifact invisible.
 
 Two tiers:
 
@@ -43,15 +46,21 @@ import numpy as np
 from . import wrht
 from .topology import Ring
 
-SCHEMA_VERSION = 1
+# v2: PlanKey gained the `collective` field (DESIGN.md §11); v1 artifacts
+# (all-reduce only, no collective stamp) are invisible under v2.
+SCHEMA_VERSION = 2
 
 
 @dataclass(frozen=True)
 class PlanKey:
-    """The d-independent identity of one WRHT plan.
+    """The d-independent identity of one scheduled-collective plan.
 
     ``m=None`` means the builder's default fan-out (Lemma 1 capped by the
     hop budget); ``max_hops=None`` means no insertion-loss constraint.
+    ``collective`` names the scheduled collective (``wrht.COLLECTIVES``);
+    callers should normalize ``(m, alltoall)`` through
+    :func:`~repro.core.wrht.collective_plan_fields` so keys never fragment
+    on axes a collective does not have.
     """
 
     n: int
@@ -60,19 +69,21 @@ class PlanKey:
     alltoall: bool = True
     max_hops: int | None = None
     rwa: str = "fast"
+    collective: str = "allreduce"
 
     def filename(self) -> str:
         m = "auto" if self.m is None else str(self.m)
         h = "inf" if self.max_hops is None else str(self.max_hops)
-        return (f"wrht-n{self.n}-w{self.w}-m{m}-a2a{int(self.alltoall)}"
-                f"-H{h}-{self.rwa}.v{SCHEMA_VERSION}.npz")
+        return (f"{self.collective}-n{self.n}-w{self.w}-m{m}"
+                f"-a2a{int(self.alltoall)}-H{h}-{self.rwa}"
+                f".v{SCHEMA_VERSION}.npz")
 
     def meta(self) -> dict:
         return {
             "schema_version": SCHEMA_VERSION,
             "n": self.n, "w": self.w, "m": self.m,
             "alltoall": self.alltoall, "max_hops": self.max_hops,
-            "rwa": self.rwa,
+            "rwa": self.rwa, "collective": self.collective,
         }
 
 
@@ -138,12 +149,13 @@ class PlanCache:
     # ------------------------------------------------------------------
 
     def _build_schedule(self, key: PlanKey) -> wrht.WRHTSchedule:
-        # payload-independent structure (the bits_override convention):
-        # build with d=1 and fully validate, exactly like the historical
-        # simulator._cached_wrht_schedule
-        return wrht.build_schedule(
-            key.n, key.w, 1.0, m=key.m, allow_alltoall=key.alltoall,
-            validate=True, rwa=key.rwa, max_hops=key.max_hops,
+        # payload-independent structure (the bits_override / payload-class
+        # convention): build with d=1 and fully validate, exactly like the
+        # historical simulator._cached_wrht_schedule
+        return wrht.build_collective_schedule(
+            key.collective, key.n, key.w, 1.0, m=key.m,
+            allow_alltoall=key.alltoall, validate=True, rwa=key.rwa,
+            max_hops=key.max_hops,
         )
 
     def _schedule_nostat(self, key: PlanKey) -> wrht.WRHTSchedule:
@@ -188,10 +200,13 @@ class PlanCache:
         if prof is not None:
             return prof
         sched = self._schedule_nostat(key)
-        # the builder fully validated the schedule; every transfer carries
-        # the constant full vector d (the bits_override convention)
+        # the builder fully validated the schedule; the collective's payload
+        # accounting (constant full vector, or d/n chunks for the ring
+        # passes and the all-to-all) becomes the profile's payload class
+        divisors = wrht.COLLECTIVES[key.collective].payload_divisors(key.n)
         prof = timing.ScheduleProfile.from_steps(
-            sched.steps, Ring(max(key.n, 2), key.w), validate=False)
+            sched.steps, Ring(max(key.n, 2), key.w), validate=False,
+            classes=(timing.PayloadClass(divisors),))
         self.put_profile(key, prof)
         return prof
 

@@ -60,7 +60,7 @@ class CostParams:
 class Plan:
     """A chosen schedule for one bucket."""
 
-    strategy: str                     # "flat" | "rd" | "wrht_tree" | "hier_scatter"
+    strategy: str   # "flat" | "rd" | "wrht_tree" | "hier_scatter" | "alltoall"
     cost_s: float
     m: int = 2                       # branching for wrht_tree
     alltoall: bool = False           # finish tree with all-to-all
@@ -108,6 +108,47 @@ def _t_hier_scatter_arr(factors: tuple[int, ...], b: np.ndarray,
     return total
 
 
+# Closed forms of the non-all-reduce collectives (DESIGN.md §11).  The ring
+# pass is one half of the flat ring's RS+AG; the single-step all-to-all
+# trades ⌈N²/8⌉ wavelengths for a single α; the broadcast tree is half the
+# WRHT tree's step count.
+
+def _t_ring_pass_arr(s: int, b: np.ndarray, p: CostParams) -> np.ndarray:
+    """Ring reduce-scatter or all-gather: S-1 steps of b/S chunks."""
+    if s == 1:
+        return np.zeros(b.size)
+    return (s - 1) * p.alpha_s + b * (s - 1) / s / p.link_bw_Bps
+
+
+def _t_alltoall_arr(s: int, b: np.ndarray, p: CostParams) -> np.ndarray:
+    """One full-mesh step of personalized b/S shards: each node serializes
+    its S-1 messages over ``links`` concurrent channels."""
+    if s == 1:
+        return np.zeros(b.size)
+    serial = math.ceil((s - 1) / p.links)
+    return p.alpha_s + serial * (b / s) / p.link_bw_Bps
+
+
+def _t_bcast_tree_arr(s: int, b: np.ndarray, p: CostParams,
+                      m: int) -> np.ndarray:
+    """WRHT broadcast tree alone: ⌈log_m S⌉ full-vector levels."""
+    if s == 1:
+        return np.zeros(b.size)
+    serial = math.ceil((m - 1) / p.links)
+    levels = max(1, math.ceil(math.log(s, m)))
+    return levels * (p.alpha_s + serial * b / p.link_bw_Bps)
+
+
+def _alltoall_feasible(s: int, p: CostParams, max_hops: int | None) -> bool:
+    """Single-step all-to-all feasibility under the analytic model: the
+    wavelength budget is ``links // 2`` (the exact inverse of
+    ``CostParams.optical``/``OpticalParams.from_cost``), and the longest
+    shortest-direction pair spans ``⌊S/2⌋`` ring segments."""
+    if math.ceil(s ** 2 / 8) > max(1, p.links // 2):
+        return False
+    return max_hops is None or s // 2 <= max_hops
+
+
 def _b1(bytes_: float) -> np.ndarray:
     return np.asarray([bytes_], dtype=np.float64)
 
@@ -153,15 +194,25 @@ def _factorizations(n: int, max_levels: int = 3) -> list[tuple[int, ...]]:
     return uniq
 
 
+DEFAULT_STRATEGIES: dict[str, tuple[str, ...]] = {
+    "allreduce": ("flat", "rd", "wrht_tree", "hier_scatter"),
+    "reduce_scatter": ("flat", "alltoall"),
+    "all_gather": ("flat", "alltoall"),
+    "broadcast": ("wrht_tree",),
+    "alltoall": ("alltoall",),
+}
+
+
 def plan_bucket(
     axis_size: int,
     bytes_: float,
     params: CostParams | None = None,
     m_candidates: tuple[int, ...] = (2, 3, 4, 8, 16),
-    allow: tuple[str, ...] = ("flat", "rd", "wrht_tree", "hier_scatter"),
+    allow: tuple[str, ...] | None = None,
     max_hops: int | None = None,
     backend: str = "analytic",
     optical: "object | None" = None,
+    collective: str = "allreduce",
 ) -> Plan:
     """Return the minimum-cost schedule for one bucket on one device axis.
 
@@ -181,11 +232,18 @@ def plan_bucket(
     no explicit optical-ring schedule) and ``"hier_scatter"`` is costed via
     the H-Ring schedule, i.e. only its two-level factorizations.
 
+    ``collective`` plans any member of the scheduled collective algebra
+    (DESIGN.md §11), with per-collective candidate strategies
+    (:data:`DEFAULT_STRATEGIES`): the ring passes choose between the
+    bandwidth-optimal ``"flat"`` ring pass and the single-step
+    ``"alltoall"`` finisher (when it fits the wavelength/hop budgets); a
+    broadcast sweeps the tree fan-out.
+
     This is the one-bucket view of :func:`plan_buckets` — a single
     candidate-scan implementation serves both (DESIGN.md §10).
     """
     return plan_buckets(axis_size, [bytes_], params, m_candidates, allow,
-                        max_hops, backend, optical)[0]
+                        max_hops, backend, optical, collective)[0]
 
 
 def plan_buckets(
@@ -193,10 +251,11 @@ def plan_buckets(
     byte_sizes,
     params: CostParams | None = None,
     m_candidates: tuple[int, ...] = (2, 3, 4, 8, 16),
-    allow: tuple[str, ...] = ("flat", "rd", "wrht_tree", "hier_scatter"),
+    allow: tuple[str, ...] | None = None,
     max_hops: int | None = None,
     backend: str = "analytic",
     optical: "object | None" = None,
+    collective: str = "allreduce",
 ) -> list[Plan]:
     """Plan a whole list of gradient-bucket sizes in one batched call.
 
@@ -219,8 +278,16 @@ def plan_buckets(
     the gradient partition (``repro.train.train_step.plan_gradient_sync``);
     warm calls hit the plan cache and skip both build and compile.
     """
+    if collective not in DEFAULT_STRATEGIES:
+        raise ValueError(f"unknown collective {collective!r} "
+                         f"(expected one of {sorted(DEFAULT_STRATEGIES)})")
     p = params or CostParams.tpu_v5e()
     b = np.asarray(list(byte_sizes), dtype=np.float64)
+    if allow is None:
+        allow = DEFAULT_STRATEGIES[collective]
+    if collective != "allreduce":
+        return _plan_buckets_collective(axis_size, b, p, m_candidates, allow,
+                                        max_hops, backend, optical, collective)
     if backend == "simulated":
         return _plan_buckets_simulated(axis_size, b, p, m_candidates, allow,
                                        max_hops, optical)
@@ -344,6 +411,104 @@ def _plan_buckets_simulated(
     return best
 
 
+def _plan_buckets_collective(
+    axis_size: int,
+    b: np.ndarray,
+    p: CostParams,
+    m_candidates: tuple[int, ...],
+    allow: tuple[str, ...],
+    max_hops: int | None,
+    backend: str,
+    optical,
+    collective: str,
+) -> list[Plan]:
+    """Candidate scan for the non-all-reduce collectives (DESIGN.md §11).
+
+    The analytic and simulated backends share one enumeration order (flat
+    ring pass, then the single-step all-to-all, then the broadcast-tree
+    fan-out sweep), so tie-breaking matches across backends exactly like
+    the all-reduce path.  The simulated backend costs the same schedules
+    the optical simulator executes (``timing.collective_times``); an
+    all-to-all beyond the wavelength or hop budget is skipped, never
+    silently mis-costed.
+    """
+    if backend not in ("analytic", "simulated"):
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(expected 'analytic' or 'simulated')")
+    detail = {"backend": backend, "collective": collective}
+    if axis_size == 1:
+        return [Plan("flat", 0.0, detail=dict(detail)) for _ in range(b.size)]
+    best, consider = _bucket_argmin(b.size)
+    simulated = backend == "simulated"
+    if simulated:
+        from . import step_models, timing, wrht
+        from .wavelength import InsertionLossError, WavelengthConflictError
+
+        opt = optical or step_models.OpticalParams.from_cost(
+            p.alpha_s, p.link_bw_Bps, p.links
+        )
+        if max_hops is None and opt.physical is not None:
+            max_hops = opt.physical.max_hops
+        d_bits = b * 8
+
+        def simulated_cost(coll, **kw):
+            try:
+                return timing.collective_times(
+                    coll, axis_size, d_bits, opt, opt.timing,
+                    max_hops=max_hops, keep_per_step=False, **kw).total_s
+            except (InsertionLossError, WavelengthConflictError):
+                return None
+
+    ring_pass = collective if collective in ("reduce_scatter",
+                                             "all_gather") else None
+    if "flat" in allow and ring_pass is not None:
+        cost = (simulated_cost(ring_pass) if simulated
+                else _t_ring_pass_arr(axis_size, b, p))
+        if cost is not None:
+            consider(cost, lambda i, c: Plan("flat", c, detail=dict(detail)))
+    if "alltoall" in allow:
+        if simulated:
+            cost = simulated_cost("alltoall")
+        else:
+            cost = (_t_alltoall_arr(axis_size, b, p)
+                    if _alltoall_feasible(axis_size, p, max_hops) else None)
+        if cost is not None:
+            consider(cost, lambda i, c: Plan("alltoall", c,
+                                             detail=dict(detail)))
+    if "wrht_tree" in allow and collective == "broadcast":
+        fan_out_cap = None if max_hops is None else 2 * max_hops + 1
+        ms = tuple(m for m in m_candidates
+                   if 2 <= m <= axis_size
+                   and (fan_out_cap is None or m <= fan_out_cap))
+        if simulated:
+            # same Lemma-1/hop-budget pre-filter as the all-reduce simulated
+            # path: candidates beyond the tuner's feasible fan-out would make
+            # it raise its internal "no feasible candidates" error instead of
+            # this planner's uniform one below
+            cap = wrht.feasible_group_size(opt.wavelengths, max_hops)
+            ms = tuple(m for m in ms if m <= cap)
+            if ms:
+                tuned = timing.tune_wrht(axis_size, opt.wavelengths, d_bits,
+                                         max_hops, p=opt, timing=opt.timing,
+                                         m_candidates=ms,
+                                         collective="broadcast")
+                consider(tuned.best_total_s,
+                         lambda i, c: Plan("wrht_tree", c,
+                                           m=int(tuned.best_m[i]),
+                                           detail=dict(detail)))
+        else:
+            for m in ms:
+                consider(_t_bcast_tree_arr(axis_size, b, p, m),
+                         lambda i, c, m=m: Plan("wrht_tree", c, m=m,
+                                                detail=dict(detail)))
+    if any(pl is None for pl in best):
+        raise ValueError(
+            f"no feasible strategy in allow={allow!r} for collective "
+            f"{collective!r} at axis_size={axis_size}"
+        )
+    return best
+
+
 def crossover_table(
     axis_size: int,
     byte_sizes: tuple[float, ...] = tuple(2.0 ** e for e in range(10, 31, 2)),
@@ -351,6 +516,7 @@ def crossover_table(
     backend: str = "analytic",
     max_hops: int | None = None,
     optical: "object | None" = None,
+    collective: str = "allreduce",
 ) -> list[dict]:
     """Bucket-size sweep: which schedule wins where (benchmark + tests).
 
@@ -360,7 +526,8 @@ def crossover_table(
     sweep is one :func:`plan_buckets` call.
     """
     plans = plan_buckets(axis_size, byte_sizes, params, backend=backend,
-                         max_hops=max_hops, optical=optical)
+                         max_hops=max_hops, optical=optical,
+                         collective=collective)
     return [
         {
             "bytes": int(b),

@@ -418,3 +418,41 @@ def run_optical(
         return SimResult("hring", n, d_bits, total_steps, ser,
                          total_steps * ring.reconfig_delay_s, 1)
     raise ValueError(f"unknown optical algorithm {algorithm!r}")
+
+
+def run_collective(
+    collective: str,
+    n: int,
+    d_bits: float,
+    p: step_models.OpticalParams | None = None,
+    m: int | None = None,
+    timing: str | None = None,
+    allow_alltoall: bool = True,
+) -> SimResult:
+    """Simulate one scheduled collective on the optical ring (DESIGN.md §11).
+
+    The per-point counterpart of :func:`repro.core.timing.collective_times`
+    (which is golden-tested bit-identical to this path): the schedule's
+    d-independent structure comes from the plan cache, and the payload
+    accounting follows the collective's spec — the ring passes and the
+    all-to-all carry ``d/n`` per transfer, the trees the constant full
+    vector.  Infeasible schedules raise exactly like the builders
+    (``WavelengthConflictError`` / ``InsertionLossError``).
+    """
+    from . import plan_cache
+
+    p = p or step_models.OpticalParams()
+    timing = timing or p.timing
+    name = wrht.coerce_collective(collective)
+    spec = wrht.COLLECTIVES[name]
+    ring = Ring(max(n, 2), p.wavelengths, bandwidth_bps=p.bandwidth_bps,
+                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
+    km, ka = wrht.collective_plan_fields(name, m, allow_alltoall)
+    sched = plan_cache.get_default().schedule(plan_cache.PlanKey(
+        n=n, w=p.wavelengths, m=km, alltoall=ka, max_hops=ring.max_hops,
+        collective=name))
+    # the same division chain as the profile's PayloadClass((n,)) — float /
+    # int division promotes identically, so the two paths stay bit-identical
+    bits = d_bits / n if spec.chunked else d_bits
+    return _simulate(name, sched.steps, ring, d_bits, timing,
+                     validate=False, bits_override=bits)

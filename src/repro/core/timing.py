@@ -537,23 +537,38 @@ def _ring_of(n: int, p: step_models.OpticalParams) -> Ring:
                 reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
 
 
+def _collective_profile(
+    collective: str, n: int, p: step_models.OpticalParams, m: int | None,
+    allow_alltoall: bool = True, max_hops: int | None = None,
+) -> ScheduleProfile:
+    """Any scheduled collective's profile via the two-tier plan cache
+    (DESIGN.md §10, §11).
+
+    The cache key is the d-independent structure ``(collective, n, w, m,
+    alltoall, max_hops, rwa)`` — deliberately *not* the whole
+    ``OpticalParams``: bandwidth/reconfiguration only enter at evaluation
+    time, so every parameter flavour shares one compiled profile.  ``(m,
+    alltoall)`` are normalized per collective so keys never fragment on
+    axes the collective does not have.
+    """
+    from . import plan_cache
+
+    collective = wrht.coerce_collective(collective)
+    m, allow_alltoall = wrht.collective_plan_fields(collective, m,
+                                                    allow_alltoall)
+    ring = _ring_of(n, p)
+    hops = ring.max_hops if max_hops is None else max_hops
+    return plan_cache.get_default().profile(plan_cache.PlanKey(
+        n=n, w=p.wavelengths, m=m, alltoall=allow_alltoall, max_hops=hops,
+        collective=collective))
+
+
 def _wrht_profile(
     n: int, p: step_models.OpticalParams, m: int | None,
     allow_alltoall: bool = True, max_hops: int | None = None,
 ) -> ScheduleProfile:
-    """WRHT profile via the two-tier plan cache (DESIGN.md §10).
-
-    The cache key is the d-independent structure ``(n, w, m, alltoall,
-    max_hops, rwa)`` — deliberately *not* the whole ``OpticalParams``:
-    bandwidth/reconfiguration only enter at evaluation time, so every
-    parameter flavour shares one compiled profile.
-    """
-    from . import plan_cache
-
-    ring = _ring_of(n, p)
-    hops = ring.max_hops if max_hops is None else max_hops
-    return plan_cache.get_default().profile(plan_cache.PlanKey(
-        n=n, w=p.wavelengths, m=m, alltoall=allow_alltoall, max_hops=hops))
+    """The all-reduce view of :func:`_collective_profile` (historical name)."""
+    return _collective_profile("allreduce", n, p, m, allow_alltoall, max_hops)
 
 
 @functools.lru_cache(maxsize=256)
@@ -607,6 +622,30 @@ def wrht_times(
     prof = _wrht_profile(n, p, m, allow_alltoall, max_hops)
     return _with_meta(prof.evaluate(ring, d_bits, timing, keep_per_step),
                       "wrht")
+
+
+def collective_times(
+    collective: str, n: int, d_bits, p: step_models.OpticalParams | None = None,
+    timing: str = "lockstep", m: int | None = None,
+    allow_alltoall: bool = True, max_hops: int | None = None,
+    keep_per_step: bool = True,
+) -> BatchedTimes:
+    """Batched timing of any scheduled collective over a payload grid
+    (DESIGN.md §11): the profile comes from the plan cache (one compile per
+    d-independent structure), the grid evaluates through the same three
+    engines as all-reduce, and every number is bit-identical to the
+    per-point :func:`repro.core.simulator.run_collective`.
+
+    Infeasible collectives raise like the builders do — a single-step
+    all-to-all beyond the wavelength or hop budget is an error here, not a
+    silently worse schedule.
+    """
+    collective = wrht.coerce_collective(collective)
+    p = p or step_models.OpticalParams()
+    ring = _ring_of(n, p)
+    prof = _collective_profile(collective, n, p, m, allow_alltoall, max_hops)
+    return _with_meta(prof.evaluate(ring, d_bits, timing, keep_per_step),
+                      collective)
 
 
 def bt_times(n: int, d_bits, p: step_models.OpticalParams,
@@ -877,12 +916,14 @@ def _tune_result(n, w, max_hops, timing, d, candidates, totals, steps,
 
 @functools.lru_cache(maxsize=64)
 def _candidate_schedules(n: int, w: int, ms: tuple[int, ...],
-                         max_hops: int | None):
+                         max_hops: int | None,
+                         collective: str = "allreduce"):
     """Memoized batched candidate build — the tuner's repeat calls (one per
     ``plan_buckets`` invocation, one per ``run_optical(m="auto")`` point)
     share one construction per sweep signature."""
     return wrht.build_candidate_schedules(
-        n, w, 1.0, ms, allow_alltoall=True, validate=False, max_hops=max_hops)
+        n, w, 1.0, ms, allow_alltoall=True, validate=False,
+        max_hops=max_hops, collective=collective)
 
 
 def tune_wrht(
@@ -893,6 +934,7 @@ def tune_wrht(
     p: step_models.OpticalParams | None = None,
     timing: str = "lockstep",
     m_candidates=None,
+    collective: str = "allreduce",
 ) -> TuneResult:
     """Sweep every feasible WRHT fan-out ``m`` (and the final all-to-all
     on/off) through the batched simulator; return the simulated argmin.
@@ -914,26 +956,39 @@ def tune_wrht(
     construction skips the per-step re-validation (it is conflict-free by
     construction and golden-tested); materializing a schedule through the
     plan cache re-validates it fully.
+
+    ``collective`` widens the sweep beyond all-reduce to the other
+    fan-out-swept collective, ``"broadcast"`` (DESIGN.md §11) — its
+    candidates have no all-to-all variant, so every row is ``(m, False)``.
     """
     from . import plan_cache
 
+    collective = wrht.coerce_collective(collective)
+    if not wrht.COLLECTIVES[collective].tree:
+        raise ValueError(
+            f"collective {collective!r} has no fan-out axis to tune — "
+            "evaluate it directly with collective_times"
+        )
     p, max_hops, analytic_m, ms, d = _tune_candidates(
         n, w, d_bits, max_hops, p, m_candidates)
     ring = _ring_of(n, p)
     hops = ring.max_hops if max_hops is None else max_hops
-    scheds = _candidate_schedules(n, p.wavelengths, tuple(ms), hops)
+    scheds = _candidate_schedules(n, p.wavelengths, tuple(ms), hops,
+                                  collective)
+    variants = (True, False) if collective == "allreduce" else (False,)
     cache = plan_cache.get_default()
     seg_cache: dict = {}
     candidates: list[tuple[int, bool]] = []
     totals, steps = [], []
     for m in ms:
-        for alltoall in (True, False):
+        for alltoall in variants:
             sched = scheds.get((m, alltoall))
             if sched is None:
                 continue  # the a2a=True build never took the all-to-all:
                           # both schedules are identical, evaluate once
             key = plan_cache.PlanKey(n=n, w=p.wavelengths, m=m,
-                                     alltoall=alltoall, max_hops=hops)
+                                     alltoall=alltoall, max_hops=hops,
+                                     collective=collective)
             prof = cache.peek_profile(key)   # memory, then disk tier
             if prof is None:
                 prof = ScheduleProfile.from_steps(

@@ -1,8 +1,17 @@
-"""WRHT — Wavelength-Reused Hierarchical Tree all-reduce schedule builder.
+"""WRHT — Wavelength-Reused Hierarchical Tree schedule builder + the
+scheduled collective algebra (DESIGN.md §11).
 
-This is the paper's primary contribution (Sec. III-C).  Given ``N`` nodes on a
-bidirectional WDM ring with ``w`` wavelengths per fiber, build the explicit
-per-step transfer schedule:
+The paper derives WRHT only for all-reduce (Sec. III-C), but its two phases
+are a wavelength-reused reduce tree followed by a broadcast tree.  This
+module exposes those phases — plus the ring reduce-scatter / all-gather pass
+and the single-step all-to-all finisher — as first-class plannable
+collectives (:class:`Collective`, :func:`build_collective_schedule`), each
+with an explicit semantic spec (per-node contribution/ownership masks and
+payload-per-step accounting) validated by :func:`validate_schedule`.
+
+For the paper's all-reduce, given ``N`` nodes on a bidirectional WDM ring
+with ``w`` wavelengths per fiber, build the explicit per-step transfer
+schedule:
 
 Reduce stage
     Level 0 partitions the ring into contiguous groups of ``m`` nodes; the
@@ -33,6 +42,7 @@ building *and fully validating* a schedule is cheap even at N=32768.
 
 from __future__ import annotations
 
+import enum
 import math
 from dataclasses import dataclass, field
 
@@ -40,6 +50,7 @@ import numpy as np
 
 from .topology import CCW, CW, PhysicalParams, Ring, TransferBatch
 from .wavelength import (
+    InsertionLossError,
     WavelengthConflictError,
     first_fit_assign,
     first_fit_assign_concat,
@@ -51,9 +62,14 @@ from .wavelength import (
 
 @dataclass
 class Step:
-    kind: str                      # "reduce" | "alltoall" | "broadcast"
+    kind: str                      # "reduce" | "alltoall" | "broadcast" | ...
     level: int                     # tree level (alltoall: top level)
     transfers: TransferBatch
+    # chunked collectives (reduce_scatter / all_gather / alltoall): shard id
+    # carried by each transfer row — TransferBatch stays payload-agnostic,
+    # the chunk identity lives on the Step so a shared batch object can back
+    # many steps each moving different shards (DESIGN.md §11)
+    chunks: np.ndarray | None = None
 
     def __post_init__(self) -> None:
         self.transfers = TransferBatch.coerce(self.transfers)
@@ -72,6 +88,7 @@ class WRHTSchedule:
     levels: list[list[int]] = field(default_factory=list)  # active nodes per level
     max_hops: int | None = None            # insertion-loss hop budget, if any
     level_group_sizes: list[int] = field(default_factory=list)  # m used per level
+    collective: str = "allreduce"          # which Collective this schedule runs
 
     @property
     def num_steps(self) -> int:
@@ -84,6 +101,124 @@ class WRHTSchedule:
     @property
     def broadcast_steps(self) -> int:
         return sum(1 for s in self.steps if s.kind == "broadcast")
+
+
+# ------------------------------------------------------------------
+# The scheduled collective algebra (DESIGN.md §11).
+# ------------------------------------------------------------------
+
+class Collective(str, enum.Enum):
+    """The collectives the schedule builder can emit on the optical ring.
+
+    Every member reuses phases of the all-reduce machinery (DESIGN.md §11):
+
+    ``ALLREDUCE``       reduce tree [+ all-to-all finisher] + broadcast tree
+                        (the paper's WRHT, Sec. III-C); full ``d`` per step.
+    ``REDUCE_SCATTER``  ring pass: ``N-1`` neighbour steps of ``d/N`` chunks;
+                        node ``i`` ends owning the complete reduction of
+                        chunk ``i``.
+    ``ALL_GATHER``      ring pass, mirrored: node ``i`` starts owning chunk
+                        ``i``; ``N-1`` steps later every node holds every
+                        chunk.
+    ``BROADCAST``       the WRHT broadcast tree alone: the root (the tree's
+                        final surviving representative) propagates the full
+                        vector down the levels; full ``d`` per step.
+    ``ALLTOALL``        the single-step full-mesh exchange (paper
+                        Sec. III-C-2 / [16]): every ordered pair trades a
+                        personalized ``d/N`` shard in ONE reconfiguration,
+                        needing ``⌈N²/8⌉`` wavelengths — the one-step
+                        finisher for reduce-scatter *and* all-gather.
+    """
+
+    ALLREDUCE = "allreduce"
+    REDUCE_SCATTER = "reduce_scatter"
+    ALL_GATHER = "all_gather"
+    BROADCAST = "broadcast"
+    ALLTOALL = "alltoall"
+
+
+@dataclass(frozen=True)
+class CollectiveSpec:
+    """Semantic spec of one scheduled collective (DESIGN.md §11).
+
+    ``tree`` marks the fan-out ``m`` (and, for all-reduce, the all-to-all
+    finisher flag) as meaningful plan dimensions; ``chunked`` marks the
+    payload accounting: every transfer carries ``d / n`` bits (the division
+    chain :meth:`payload_divisors`) instead of the constant full vector.
+    Ownership semantics are enforced by :func:`validate_schedule` against
+    the data-flow oracles below.
+    """
+
+    name: str
+    tree: bool
+    chunked: bool
+    description: str
+
+    def payload_divisors(self, n: int) -> tuple[float, ...]:
+        """Division chain from the payload ``d`` to one transfer's bits
+        (the ``timing.PayloadClass`` contract: applied left to right)."""
+        return (float(n),) if self.chunked else ()
+
+
+COLLECTIVES: dict[str, CollectiveSpec] = {
+    "allreduce": CollectiveSpec(
+        "allreduce", tree=True, chunked=False,
+        description="reduce tree [+ all-to-all] + broadcast tree, full d"),
+    "reduce_scatter": CollectiveSpec(
+        "reduce_scatter", tree=False, chunked=True,
+        description="ring pass, N-1 steps of d/N; node i owns chunk i"),
+    "all_gather": CollectiveSpec(
+        "all_gather", tree=False, chunked=True,
+        description="mirrored ring pass, N-1 steps of d/N chunks"),
+    "broadcast": CollectiveSpec(
+        "broadcast", tree=True, chunked=False,
+        description="WRHT broadcast tree alone, root down, full d"),
+    "alltoall": CollectiveSpec(
+        "alltoall", tree=False, chunked=True,
+        description="one full-mesh step of personalized d/N shards"),
+}
+
+
+def coerce_collective(collective: "Collective | str") -> str:
+    name = (collective.value if isinstance(collective, Collective)
+            else str(collective))
+    if name not in COLLECTIVES:
+        raise ValueError(f"unknown collective {collective!r} "
+                         f"(expected one of {sorted(COLLECTIVES)})")
+    return name
+
+
+def collective_plan_fields(
+    collective: "Collective | str", m: int | None, allow_alltoall: bool,
+) -> tuple[int | None, bool]:
+    """Normalize the d-independent plan identity ``(m, alltoall)`` per
+    collective, so plan-cache keys never fragment on irrelevant axes:
+    the ring passes and the standalone all-to-all have no fan-out and no
+    finisher choice, and a pure broadcast never takes the all-to-all."""
+    spec = COLLECTIVES[coerce_collective(collective)]
+    if not spec.tree:
+        return None, True
+    if coerce_collective(collective) == "broadcast":
+        return m, False
+    return m, allow_alltoall
+
+
+def collective_steps(collective: "Collective | str", n: int,
+                     m: int | None = None, with_alltoall: bool = True) -> int:
+    """Nominal (relay-free) step count per collective (DESIGN.md §11)."""
+    name = coerce_collective(collective)
+    if n <= 1:
+        return 0
+    if name in ("reduce_scatter", "all_gather"):
+        return n - 1
+    if name == "alltoall":
+        return 1
+    if m is None or m < 2:
+        raise ValueError("tree collectives need a fan-out m >= 2")
+    l = max(1, math.ceil(math.log(n, m)))
+    if name == "broadcast":
+        return l
+    return 2 * l - 1 if with_alltoall else 2 * l
 
 
 def optimal_group_size(w: int) -> int:
@@ -205,6 +340,18 @@ def _level_wavelengths(g: _LevelGrouping) -> np.ndarray:
     return np.where(g.left, g.pos, g.gsize_for - 1 - g.pos)
 
 
+def _full_mesh_batch(nodes: np.ndarray, n: int, bits: float) -> TransferBatch:
+    """One transfer per ordered pair of ``nodes``, shortest direction each."""
+    r = nodes.size
+    src, dst = np.meshgrid(nodes, nodes, indexing="ij")
+    off = ~np.eye(r, dtype=bool)
+    src, dst = src[off], dst[off]
+    cw = (dst - src) % n <= (src - dst) % n  # shortest_direction
+    return TransferBatch.from_arrays(
+        src, dst, np.where(cw, CW, CCW), bits, check=False
+    )
+
+
 def _alltoall_fits(
     reps: np.ndarray, ring: Ring, d_bits: float, rwa: str = "fast",
     max_hops: int | None = None,
@@ -219,13 +366,7 @@ def _alltoall_fits(
     # also keeps the O(r²) enumeration off the N=4096 level-0 case.
     if math.ceil(r ** 2 / 8) > ring.w:
         return None
-    src, dst = np.meshgrid(reps, reps, indexing="ij")
-    off = ~np.eye(r, dtype=bool)
-    src, dst = src[off], dst[off]
-    cw = (dst - src) % ring.n <= (src - dst) % ring.n  # shortest_direction
-    batch = TransferBatch.from_arrays(
-        src, dst, np.where(cw, CW, CCW), d_bits, check=False
-    )
+    batch = _full_mesh_batch(reps, ring.n, d_bits)
     if max_hops is not None and (batch.arcs(ring.n)[2] > max_hops).any():
         return None  # some pair is out of optical reach — keep climbing the tree
     try:
@@ -356,6 +497,157 @@ def build_schedule(
     return sched
 
 
+def build_collective_schedule(
+    collective: "Collective | str",
+    n: int,
+    w: int,
+    d_bits: float,
+    m: int | None = None,
+    allow_alltoall: bool = True,
+    bandwidth_bps: float = 40e9,
+    reconfig_delay_s: float = 25e-6,
+    validate: bool = True,
+    rwa: str = "fast",
+    physical: PhysicalParams | None = None,
+    max_hops: int | None = None,
+) -> WRHTSchedule:
+    """Generalized schedule builder: one entry point for the whole scheduled
+    collective algebra (DESIGN.md §11).
+
+    Reuses the all-reduce machinery unchanged — level grouping, First-Fit
+    RWA, hop-budget relays and the insertion-loss caps:
+
+    * ``allreduce`` delegates to :func:`build_schedule`;
+    * ``broadcast`` walks the same reduce tree for structure but emits only
+      the broadcast stage (root = the final surviving representative; the
+      all-to-all finisher never applies — it is a reduce-phase device);
+    * ``reduce_scatter`` / ``all_gather`` emit the ``N-1``-step neighbour
+      ring pass of ``d/N`` chunks (one shared ``TransferBatch``, per-step
+      ``Step.chunks`` shard ids);
+    * ``alltoall`` emits the single full-mesh step of personalized ``d/N``
+      shards, raising :class:`~repro.core.wavelength.WavelengthConflictError`
+      when ``⌈N²/8⌉ > w`` and
+      :class:`~repro.core.wavelength.InsertionLossError` when any pair is
+      beyond the hop budget (unlike the all-reduce *finisher*, which simply
+      keeps climbing the tree).
+    """
+    collective = coerce_collective(collective)
+    if collective == "allreduce":
+        return build_schedule(
+            n, w, d_bits, m=m, allow_alltoall=allow_alltoall,
+            bandwidth_bps=bandwidth_bps, reconfig_delay_s=reconfig_delay_s,
+            validate=validate, rwa=rwa, physical=physical, max_hops=max_hops,
+        )
+    if n < 1:
+        raise ValueError("need >= 1 node")
+    if max_hops is None and physical is not None:
+        max_hops = physical.max_hops
+    if max_hops is not None and max_hops < 1:
+        raise ValueError("insertion-loss hop budget must allow >= 1 hop")
+    ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps,
+                reconfig_delay_s=reconfig_delay_s, physical=physical)
+    if m is None:
+        m = optimal_group_size(w)
+    if m < 2:
+        raise ValueError("group size m must be >= 2")
+    m = _cap_group_size(min(m, optimal_group_size(w)), max_hops, 1)
+    assign = _assigner(rwa)
+
+    sched = WRHTSchedule(n=n, w=w, m=m, max_hops=max_hops,
+                         collective=collective)
+    active = np.arange(n, dtype=np.int64)
+    sched.levels.append(active.tolist())
+    if n > 1:
+        if collective == "broadcast":
+            _emit_broadcast_tree(sched, active, m, ring, assign, max_hops,
+                                 d_bits)
+        elif collective in ("reduce_scatter", "all_gather"):
+            _emit_ring_pass(sched, collective, n, ring, assign, d_bits)
+        else:  # alltoall
+            _emit_alltoall(sched, active, ring, assign, max_hops, d_bits, w)
+    if validate:
+        validate_schedule(sched, ring)
+    return sched
+
+
+def _emit_broadcast_tree(
+    sched: WRHTSchedule, active: np.ndarray, m: int, ring: Ring, assign,
+    max_hops: int | None, d_bits: float,
+) -> None:
+    """The WRHT broadcast stage alone: walk the reduce tree for its
+    grouping structure (no reduce steps emitted, no all-to-all — a pure
+    broadcast has a single source), then emit the levels top-down."""
+    bcast_actives: list[np.ndarray] = []
+    level_meta: list[tuple[int, bool]] = []
+    while active.size > 1:
+        m_lvl, relay = _level_cap(active, m, max_hops)
+        g = _level_grouping(active, m_lvl)
+        bcast_actives.append(active)
+        level_meta.append((m_lvl, relay))
+        sched.level_group_sizes.append(m_lvl)
+        active = g.reps
+        sched.levels.append(active.tolist())
+    for level in range(len(bcast_actives) - 1, -1, -1):
+        m_lvl, relay = level_meta[level]
+        batch, _ = _level_transfers(bcast_actives[level], m_lvl, d_bits,
+                                    broadcast=True)
+        _append_level(sched, "broadcast", level, batch, relay, ring, assign,
+                      max_hops)
+
+
+def _emit_ring_pass(
+    sched: WRHTSchedule, collective: str, n: int, ring: Ring, assign,
+    d_bits: float,
+) -> None:
+    """``N-1`` neighbour steps of ``d/N`` chunks — the bandwidth-optimal
+    ring pass.  Every step shares ONE assigned batch (neighbour hops occupy
+    disjoint segments, so First Fit lands everything on wavelength 0); the
+    per-step shard identity lives in ``Step.chunks``:
+
+    reduce-scatter   step ``t``: node ``i`` forwards its partial of chunk
+                     ``(i - t) mod N`` — chunk ``c`` walks ``c+1 → … → c``,
+                     accumulating every node's contribution, so node ``i``
+                     ends owning the full reduction of chunk ``i``;
+    all-gather       step ``t``: node ``i`` forwards chunk ``(i - t + 1)
+                     mod N`` — node ``i``'s owned chunk circulates to all.
+    """
+    src = np.arange(n, dtype=np.int64)
+    batch = TransferBatch.from_arrays(
+        src, (src + 1) % n, CW, d_bits / n, check=False
+    )
+    assigned = assign(batch, ring.n, ring.w)
+    for t in range(1, n):
+        if collective == "reduce_scatter":
+            chunks = (src - t) % n
+        else:
+            chunks = (src - t + 1) % n
+        sched.steps.append(Step(collective, 0, assigned, chunks=chunks))
+
+
+def _emit_alltoall(
+    sched: WRHTSchedule, active: np.ndarray, ring: Ring, assign,
+    max_hops: int | None, d_bits: float, w: int,
+) -> None:
+    """The single-step full-mesh exchange among all ``n`` nodes."""
+    n = active.size
+    need = math.ceil(n ** 2 / 8)
+    if need > w:
+        raise WavelengthConflictError(
+            f"single-step all-to-all among {n} nodes needs ⌈n²/8⌉={need} "
+            f"wavelengths, but the ring has w={w}"
+        )
+    batch = _full_mesh_batch(active, ring.n, d_bits / n)
+    hops = batch.arcs(ring.n)[2]
+    if max_hops is not None and int(hops.max(initial=0)) > max_hops:
+        raise InsertionLossError(
+            f"all-to-all lightpath spans {int(hops.max())} segments, "
+            f"exceeding the insertion-loss hop budget of {max_hops}"
+        )
+    assigned = assign(batch, ring.n, ring.w)
+    sched.steps.append(Step("alltoall", 0, assigned,
+                            chunks=assigned.dst.copy()))
+
+
 # ------------------------------------------------------------------
 # Batched multi-candidate builder (DESIGN.md §10).
 # ------------------------------------------------------------------
@@ -401,6 +693,7 @@ def build_candidate_schedules(
     rwa: str = "fast",
     physical: PhysicalParams | None = None,
     max_hops: int | None = None,
+    collective: "Collective | str" = "allreduce",
 ) -> dict[tuple[int, bool], WRHTSchedule]:
     """Build every candidate WRHT schedule of a fan-out sweep in one pass.
 
@@ -432,11 +725,23 @@ def build_candidate_schedules(
     Lemma-1/hop-budget clamp, as in ``build_schedule``).
 
     ``validate=True`` checks wavelength conflicts and the hop budget once
-    per unique step batch plus all-reduce semantics per candidate; the
+    per unique step batch plus the collective's semantics per candidate; the
     tuner passes ``False`` (construction is conflict-free by design and the
     winning schedule is re-validated when materialized through the plan
     cache).
+
+    ``collective`` selects the fan-out-swept collective: ``"allreduce"``
+    (the default, both all-to-all variants per ``m``) or ``"broadcast"``
+    (the WRHT broadcast tree alone, keyed ``(m, False)`` — a pure broadcast
+    never takes the all-to-all).  The ring passes and the standalone
+    all-to-all have no fan-out axis, so sweeping them is a caller error.
     """
+    collective = coerce_collective(collective)
+    if not COLLECTIVES[collective].tree:
+        raise ValueError(
+            f"collective {collective!r} has no fan-out axis to sweep — "
+            "build it directly with build_collective_schedule"
+        )
     if n < 1:
         raise ValueError("need >= 1 node")
     if max_hops is None and physical is not None:
@@ -479,11 +784,13 @@ def build_candidate_schedules(
     for m_req in ms:
         # same clamps as build_schedule: Lemma 1 then the level-0 fan-out cap
         m = _cap_group_size(min(m_req, optimal_group_size(w)), max_hops, 1)
+        variant_key = allow_alltoall if collective == "allreduce" else False
         active = np.arange(n, dtype=np.int64)
         levels = [active]
         if n == 1:
-            out[(m_req, allow_alltoall)] = WRHTSchedule(
-                n=n, w=w, m=m, levels=[active.tolist()], max_hops=max_hops)
+            out[(m_req, variant_key)] = WRHTSchedule(
+                n=n, w=w, m=m, levels=[active.tolist()], max_hops=max_hops,
+                collective=collective)
             continue
 
         reduce_steps: list[list[Step]] = []   # Steps per level (relays split)
@@ -493,7 +800,7 @@ def build_candidate_schedules(
         a2a_step: Step | None = None
         level = 0
         while active.size > 1:
-            if allow_alltoall and a2a_at is None:
+            if collective == "allreduce" and allow_alltoall and a2a_at is None:
                 fit = _alltoall_fits(active, ring, d_bits, rwa,
                                      max_hops=max_hops)
                 if fit is not None:
@@ -503,7 +810,9 @@ def build_candidate_schedules(
                     a2a_step = Step("alltoall", level, fit)
             m_lvl, relay = _level_cap(active, m, max_hops)
             g = _level_grouping(active, m_lvl)
-            reduce_steps.append(emit_level("reduce", level, g, relay, False))
+            if collective == "allreduce":
+                reduce_steps.append(emit_level("reduce", level, g, relay,
+                                               False))
             groupings.append(g)
             meta.append((m_lvl, relay))
             active = g.reps
@@ -514,6 +823,17 @@ def build_candidate_schedules(
             emit_level("broadcast", lvl, g, meta[lvl][1], True)
             for lvl, g in enumerate(groupings)
         ]
+
+        if collective == "broadcast":
+            out[(m_req, False)] = WRHTSchedule(
+                n=n, w=w, m=m,
+                steps=[s for lvl in range(len(groupings) - 1, -1, -1)
+                       for s in bcast_steps[lvl]],
+                levels=[l.tolist() for l in levels], max_hops=max_hops,
+                level_group_sizes=[ml for ml, _ in meta],
+                collective="broadcast",
+            )
+            continue
 
         def assemble(depth: int, tail: list[Step]) -> list[Step]:
             steps = [s for lvl in range(depth) for s in reduce_steps[lvl]]
@@ -547,21 +867,24 @@ def build_candidate_schedules(
                     seen.add(id(step.transfers))
                     validate_no_conflicts(step.transfers, ring.n, ring.w,
                                           max_hops=hops_budget)
-            bad = _incomplete_nodes(_contribution_words(sched), sched.n)
-            if bad:
-                raise AssertionError(
-                    f"all-reduce semantics violated: nodes {bad[:8]} missing "
-                    "contributions"
-                )
+            _validate_semantics(sched)
     return out
 
 
 # ------------------------------------------------------------------
-# Validation: structural (wavelengths) and semantic (all-reduce).
+# Validation: structural (wavelengths) and semantic (per collective).
 # ------------------------------------------------------------------
 
+# Chunked-collective semantic validation tracks an [n, n_chunks, n/64] bitset
+# cube; beyond this many nodes only the (always-on) structural checks run —
+# the ring passes are correct by construction and conformance-tested at
+# every size below the cap (DESIGN.md §11).
+CHUNKED_SEMANTIC_CAP = 512
+
+
 def validate_schedule(sched: WRHTSchedule, ring: Ring | None = None) -> None:
-    """Structural validation (wavelengths + insertion loss) then semantic.
+    """Structural validation (wavelengths + insertion loss) then semantic —
+    the semantic check dispatches on ``sched.collective`` (DESIGN.md §11).
 
     The hop budget comes from the schedule itself or, failing that, from the
     ring's physical model — a schedule built without the constraint validates
@@ -571,12 +894,82 @@ def validate_schedule(sched: WRHTSchedule, ring: Ring | None = None) -> None:
     max_hops = sched.max_hops if sched.max_hops is not None else ring.max_hops
     for step in sched.steps:
         validate_no_conflicts(step.transfers, ring.n, ring.w, max_hops=max_hops)
-    words = _contribution_words(sched)
-    bad = _incomplete_nodes(words, sched.n)
-    if bad:
-        raise AssertionError(
-            f"all-reduce semantics violated: nodes {bad[:8]} missing contributions"
-        )
+    _validate_semantics(sched)
+
+
+def broadcast_root(sched: WRHTSchedule) -> int:
+    """The source node of a broadcast schedule: the final surviving
+    representative of the tree walk (node 0 on a one-node ring)."""
+    return int(sched.levels[-1][0]) if sched.levels else 0
+
+
+def _validate_semantics(sched: WRHTSchedule) -> None:
+    """Check the schedule's data-flow against its collective's semantic spec."""
+    c = sched.collective
+    n = sched.n
+    if n <= 1:
+        return
+    if c == "allreduce":
+        bad = _incomplete_nodes(_contribution_words(sched), n)
+        if bad:
+            raise AssertionError(
+                f"all-reduce semantics violated: nodes {bad[:8]} missing "
+                "contributions"
+            )
+    elif c == "broadcast":
+        words = _contribution_words(sched)
+        root = broadcast_root(sched)
+        want = np.zeros(words.shape[1], dtype=np.uint64)
+        want[root // 64] = np.uint64(1) << np.uint64(root % 64)
+        bad = np.flatnonzero((words != want).any(axis=1)).tolist()
+        if bad:
+            raise AssertionError(
+                f"broadcast semantics violated: nodes {bad[:8]} do not hold "
+                f"exactly the root node {root}'s value"
+            )
+    elif c in ("reduce_scatter", "all_gather"):
+        if n > CHUNKED_SEMANTIC_CAP:
+            return  # structural checks only beyond the cube cap (see above)
+        state = _chunk_contribution_words(sched)
+        ids = np.arange(n)
+        if c == "reduce_scatter":
+            own = state[ids, ids]              # node i's partial of chunk i
+            full = np.full(own.shape[1], np.uint64(0xFFFFFFFFFFFFFFFF))
+            tail = n % 64
+            if tail:
+                full[-1] = np.uint64((1 << tail) - 1)
+            bad = np.flatnonzero((own != full).any(axis=1)).tolist()
+            if bad:
+                raise AssertionError(
+                    f"reduce-scatter semantics violated: nodes {bad[:8]} do "
+                    "not own the complete reduction of their chunk"
+                )
+        else:
+            # every node must hold exactly chunk c's originator, for every c
+            want = np.zeros((n, state.shape[2]), dtype=np.uint64)
+            want[ids, ids // 64] = np.left_shift(
+                np.uint64(1), (ids % 64).astype(np.uint64))
+            bad = np.flatnonzero(
+                (state != want[None]).any(axis=(1, 2))).tolist()
+            if bad:
+                raise AssertionError(
+                    f"all-gather semantics violated: nodes {bad[:8]} are "
+                    "missing (or corrupting) some chunk"
+                )
+    elif c == "alltoall":
+        if len(sched.steps) != 1:
+            raise AssertionError(
+                f"all-to-all must be a single step, got {len(sched.steps)}"
+            )
+        b = sched.steps[0].transfers
+        codes = np.sort(b.src * n + b.dst)
+        pair = np.arange(n)[:, None] * n + np.arange(n)[None, :]
+        want = np.sort(pair[~np.eye(n, dtype=bool)])
+        if codes.size != want.size or (codes != want).any():
+            raise AssertionError(
+                "all-to-all semantics violated: transfer rows do not cover "
+                "every ordered pair exactly once"
+            )
 
 
 def _contribution_words(sched: WRHTSchedule) -> np.ndarray:
@@ -638,6 +1031,71 @@ def simulate_contributions(sched: WRHTSchedule) -> list[frozenset[int]]:
         frozenset(i for i in range(sched.n) if mask >> i & 1)
         for mask in simulate_contribution_masks(sched)
     ]
+
+
+def _chunk_contribution_words(sched: WRHTSchedule) -> np.ndarray:
+    """Chunk-granular data-flow simulation for the ring passes.
+
+    Returns an ``[n, n_chunks, n_words]`` uint64 cube: ``state[v, c]`` is the
+    contribution bitset of node ``v``'s current partial of chunk ``c``.
+    Initial state per the collective's spec — reduce-scatter starts every
+    node with its own bit on EVERY chunk (it holds its full local vector);
+    all-gather starts node ``i`` with its own bit on chunk ``i`` only (it
+    contributes exactly its owned shard).  Each transfer ORs the source's
+    partial of ``Step.chunks[row]`` into the destination's; reads precede
+    writes within a step, like :func:`_contribution_words`.
+    """
+    n = sched.n
+    n_words = (n + 63) // 64
+    ids = np.arange(n)
+    bit = np.left_shift(np.uint64(1), (ids % 64).astype(np.uint64))
+    state = np.zeros((n, n, n_words), dtype=np.uint64)
+    if sched.collective == "all_gather":
+        state[ids, ids, ids // 64] = bit
+    else:
+        state[ids[:, None], np.arange(n)[None, :], (ids // 64)[:, None]] = \
+            bit[:, None]
+    for step in sched.steps:
+        b = step.transfers
+        if len(b) == 0:
+            continue
+        if step.chunks is None:
+            raise AssertionError(
+                f"chunked collective step {step.kind!r} carries no chunk ids"
+            )
+        key = b.dst * n + step.chunks
+        order = np.argsort(key, kind="stable")
+        srcs, dsts = b.src[order], b.dst[order]
+        cks = step.chunks[order]
+        gathered = state[srcs, cks]       # reads precede writes in a step
+        ksorted = key[order]
+        bounds = np.flatnonzero(np.r_[True, ksorted[1:] != ksorted[:-1]])
+        if bounds.size == ksorted.size:
+            merged, rd, rc = gathered, dsts, cks
+        else:
+            merged = np.bitwise_or.reduceat(gathered, bounds, axis=0)
+            rd, rc = dsts[bounds], cks[bounds]
+        state[rd, rc] |= merged
+    return state
+
+
+def simulate_chunk_contributions(
+    sched: WRHTSchedule,
+) -> list[list[frozenset[int]]]:
+    """Set view of the chunk-granular data-flow: ``result[v][c]`` is the set
+    of nodes whose contribution reached node ``v``'s partial of chunk ``c``
+    (test convenience for the conformance harness, small ``n`` only)."""
+    state = _chunk_contribution_words(sched)
+    n = sched.n
+    out = []
+    for v in range(n):
+        row = []
+        for c in range(n):
+            mask = int.from_bytes(state[v, c].astype("<u8").tobytes(),
+                                  "little")
+            row.append(frozenset(i for i in range(n) if mask >> i & 1))
+        out.append(row)
+    return out
 
 
 def theoretical_steps(n: int, m: int) -> tuple[int, int]:

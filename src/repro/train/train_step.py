@@ -19,6 +19,15 @@ Gradient-sync modes (``TrainConfig.sync_algorithm``):
                 every bucket is planned once at setup via the amortized
                 ``planner.plan_buckets`` batch API (DESIGN.md §10) and each
                 traced step dispatches from the precomputed plan.
+  planned_sharded
+                ZeRO-style sharded sync (DESIGN.md §11): each bucket runs a
+                planned reduce-scatter down the DP axes then a planned
+                all-gather back up — between the phases every device holds
+                only its owned shard, so the bytes moved are the
+                bandwidth-optimal 2·(S-1)/S·d instead of the monolithic
+                all-reduce's per-step full vector.  Both phases are planned
+                per bucket through ``planner.plan_buckets(collective=...)``
+                (ring pass vs the single-step all-to-all finisher).
 
 ``compress_pod_axis`` swaps the pod level for int8+error-feedback recursive
 doubling (cross-pod links are the scarce resource at 512+ chips).
@@ -42,7 +51,7 @@ from repro.models import api as mapi
 from repro.optim import adamw_init, adamw_update, make_lr_schedule
 
 MANUAL_ALGOS = ("psum", "ring", "rd", "bt", "wrht", "hier_faithful",
-                "hier_scatter", "planned")
+                "hier_scatter", "planned", "planned_sharded")
 
 
 def _dtype(name: str):
@@ -83,15 +92,20 @@ def abstract_train_state(cfg: ModelConfig, tc: TrainConfig):
 class GradSyncPlans:
     """Setup-time product of the amortized planner (DESIGN.md §10): the
     gradient bucket partition plus one schedule choice per (DP axis,
-    bucket)."""
+    bucket).  For ``"planned_sharded"`` the monolithic per-axis plan is
+    replaced by a reduce-scatter plan and an all-gather plan per (axis,
+    bucket) (DESIGN.md §11)."""
 
     spec: bucketing.BucketSpec
     plans: dict[str, tuple[planner.Plan, ...]]   # DP axis -> per-bucket plan
+    rs_plans: dict[str, tuple[planner.Plan, ...]] | None = None
+    ag_plans: dict[str, tuple[planner.Plan, ...]] | None = None
 
 
 def plan_gradient_sync(grads, tc: TrainConfig, mesh,
                        cost: planner.CostParams | None = None,
-                       backend: str = "analytic") -> GradSyncPlans:
+                       backend: str = "analytic",
+                       sharded: bool = False) -> GradSyncPlans:
     """Partition the gradient pytree into size-capped buckets and plan every
     bucket's schedule for every DP axis in one batched planner call.
 
@@ -100,16 +114,37 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
     instead of re-planning inside every trace.  Bucket bytes are counted in
     the wire dtype (``tc.sync_dtype``), matching what each collective
     actually moves.
+
+    ``sharded=True`` plans the ``"planned_sharded"`` mode: per (DP axis,
+    bucket), a ``reduce_scatter`` plan for the way down and an
+    ``all_gather`` plan for the way back up (DESIGN.md §11) — the
+    all-gather sees the shard left by every axis *inside* it, so its byte
+    count shrinks by the already-scattered factors, exactly what
+    ``_sharded_sync_axes`` executes.
     """
     spec = bucketing.plan_buckets(grads, tc.bucket_bytes)
     itemsize = jnp.dtype(_dtype(tc.sync_dtype)).itemsize
     bucket_bytes = [s * itemsize for s in spec.bucket_sizes]
-    plans = {
-        ax: tuple(planner.plan_buckets(mesh.shape[ax], bucket_bytes, cost,
-                                       backend=backend))
-        for ax in dp_axes_of(mesh)
-    }
-    return GradSyncPlans(spec, plans)
+    axes = dp_axes_of(mesh)
+    if not sharded:
+        plans = {
+            ax: tuple(planner.plan_buckets(mesh.shape[ax], bucket_bytes, cost,
+                                           backend=backend))
+            for ax in axes
+        }
+        return GradSyncPlans(spec, plans)
+    rs_plans, ag_plans = {}, {}
+    shard_bytes = list(bucket_bytes)
+    for ax in axes:
+        size = mesh.shape[ax]
+        rs_plans[ax] = tuple(planner.plan_buckets(
+            size, shard_bytes, cost, backend=backend,
+            collective="reduce_scatter"))
+        ag_plans[ax] = tuple(planner.plan_buckets(
+            size, shard_bytes, cost, backend=backend,
+            collective="all_gather"))
+        shard_bytes = [b / size for b in shard_bytes]
+    return GradSyncPlans(spec, {}, rs_plans=rs_plans, ag_plans=ag_plans)
 
 
 def _dispatch_planned(flat, axis, size, plan: planner.Plan):
@@ -124,6 +159,39 @@ def _dispatch_planned(flat, axis, size, plan: planner.Plan):
             alltoall_max=plan.m if plan.alltoall else None)
     # hier_scatter on one axis == ring reduce-scatter + all-gather
     return C.allreduce_ring(flat, axis, size)
+
+
+def _dispatch_rs(flat, axis, size, plan: planner.Plan):
+    """One bucket's planned reduce-scatter on one DP axis (DESIGN.md §11)."""
+    if size == 1:
+        return flat
+    if plan.strategy == "alltoall":
+        return C.reduce_scatter_alltoall(flat, axis, size)
+    return C.reduce_scatter_ring(flat, axis, size)
+
+
+def _dispatch_ag(shard, axis, size, plan: planner.Plan):
+    """One bucket's planned all-gather on one DP axis (DESIGN.md §11)."""
+    if size == 1:
+        return shard
+    if plan.strategy == "alltoall":
+        return C.all_gather_alltoall(shard, axis, size)
+    return C.all_gather_ring(shard, axis, size)
+
+
+def _sharded_sync_axes(flat, axes, sizes, plans: GradSyncPlans, i):
+    """RS down the DP axes, AG back up: between the phases every device
+    holds only its owned shard of the bucket (ZeRO-style, DESIGN.md §11).
+    The ring bodies pad internally; the all-gather returns the padded
+    length, so each level slices back to the length it scattered."""
+    lengths = []
+    for ax in axes:
+        lengths.append(flat.shape[0])
+        flat = _dispatch_rs(flat, ax, sizes[ax], plans.rs_plans[ax][i])
+    for ax, length in zip(reversed(axes), reversed(lengths)):
+        flat = _dispatch_ag(flat, ax, sizes[ax], plans.ag_plans[ax][i])
+        flat = flat[:length]
+    return flat
 
 
 def _sync_one_axis(flat, axis, size, alg, m):
@@ -196,6 +264,18 @@ def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None,
         grads = jax.tree.map(lambda g: g / total, grads)
         return grads, new_ef
 
+    elif alg == "planned_sharded":
+        plans = sync_plans or plan_gradient_sync(grads, tc, mesh,
+                                                 sharded=True)
+
+        def bucket_fn(flat, nbytes, i):
+            return _sharded_sync_axes(flat, axes, sizes, plans, i)
+
+        grads = bucketing.bucketed_apply_indexed(
+            grads, bucket_fn, plans.spec, sync_dtype=_dtype(tc.sync_dtype))
+        grads = jax.tree.map(lambda g: g / total, grads)
+        return grads, new_ef
+
     else:
         def bucket_fn(flat, nbytes):
             for ax in axes:
@@ -252,13 +332,16 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     # and plan every bucket's schedule ONCE here — each traced step then
     # just dispatches bucket i to its precomputed plan (DESIGN.md §10)
     sync_plans = None
-    if tc.sync_algorithm == "planned" and mesh is not None and dp_axes_of(mesh):
+    if (tc.sync_algorithm in ("planned", "planned_sharded")
+            and mesh is not None and dp_axes_of(mesh)):
         g_dtype = _dtype(tc.grad_accum_dtype if tc.microbatches > 1
                          else tc.param_dtype)
         abstract_params = abstract_train_state(cfg, tc)["params"]
         abstract_grads = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct(p.shape, g_dtype), abstract_params)
-        sync_plans = plan_gradient_sync(abstract_grads, tc, mesh)
+        sync_plans = plan_gradient_sync(
+            abstract_grads, tc, mesh,
+            sharded=tc.sync_algorithm == "planned_sharded")
 
     def loss_fn(params, batch):
         return api.loss(params, batch)

@@ -188,6 +188,7 @@ def test_tuner_bit_identical_to_reference(n, w, max_hops, timing_mode):
     assert_tunes_identical(ref, bat)
 
 
+@pytest.mark.slow
 def test_tuner_speedup_on_pr3_sweep_cell():
     """Acceptance bar: ≥5× over the per-candidate loop, bit-identical, on a
     PR-3 sweep tuner cell (benchmarks/bench_sweep.measure_tuner; the full

@@ -159,6 +159,90 @@ def test_clear_caches_installs_memory_only_default(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# the `collective` key field (DESIGN.md §11): no cross-collective mixing,
+# pre-bump artifacts invisible, accounting extended
+# ---------------------------------------------------------------------------
+
+def test_collective_keys_never_mix():
+    """One (n, w) hosts five distinct plans — a lookup under one collective
+    must never return (or warm) another's schedule or profile."""
+    cache = PlanCache()
+    keys = {c: PlanKey(n=16, w=64, collective=c)
+            for c in ("allreduce", "reduce_scatter", "all_gather",
+                      "broadcast", "alltoall")}
+    scheds = {c: cache.schedule(k) for c, k in keys.items()}
+    assert cache.stats.misses == 5 and cache.stats.memory_hits == 0
+    assert len(cache) == 5
+    # structurally different schedules, each stamped with its collective
+    assert {c: s.collective for c, s in scheds.items()} == {
+        c: c for c in keys}
+    assert scheds["reduce_scatter"].num_steps == 15
+    assert scheds["alltoall"].num_steps == 1
+    assert [s.kind for s in scheds["broadcast"].steps] == ["broadcast"]
+    # (w=64 lets the 16-node all-reduce finish in one all-to-all step —
+    # same step count as broadcast, entirely different schedule)
+    assert [s.kind for s in scheds["allreduce"].steps] == ["alltoall"]
+    # repeat lookups hit their own entry only
+    for c, k in keys.items():
+        assert cache.schedule(k) is scheds[c]
+    assert cache.stats.memory_hits == 5
+    # distinct disk identities too
+    names = {k.filename() for k in keys.values()}
+    assert len(names) == 5
+    for c, k in keys.items():
+        assert k.filename().startswith(f"{c}-")
+        assert k.meta()["collective"] == c
+
+
+def test_collective_profiles_time_their_own_schedule(tmp_path):
+    """Disk round-trip per collective: the reloaded profile carries the
+    collective's payload class (d/n for the ring passes) and evaluates
+    bit-identically to the in-memory compile."""
+    ring = Ring(16, 64)
+    d = np.asarray([1e5, 1e9])
+    for c in ("reduce_scatter", "broadcast", "alltoall"):
+        key = PlanKey(n=16, w=64, collective=c)
+        warm = PlanCache(disk_dir=tmp_path)
+        built = warm.profile(key)
+        cold = PlanCache(disk_dir=tmp_path)
+        loaded = cold.profile(key)
+        assert (cold.stats.disk_hits, cold.stats.misses) == (1, 0)
+        assert _profiles_equal(built, loaded)
+        for mode in ("lockstep", "event", "overlap"):
+            np.testing.assert_array_equal(
+                loaded.evaluate(ring, d, mode).total_s,
+                built.evaluate(ring, d, mode).total_s)
+    # chunked payload class survived the round trip
+    key = PlanKey(n=16, w=64, collective="reduce_scatter")
+    prof = PlanCache(disk_dir=tmp_path).profile(key)
+    assert prof.classes == (timing.PayloadClass((16.0,)),)
+
+
+def test_pre_bump_disk_entries_miss_cleanly(tmp_path, monkeypatch):
+    """Artifacts written under the pre-collective schema (v1) are invisible
+    to the bumped cache: a clean miss + rewrite, never a misread."""
+    monkeypatch.setattr(plan_cache, "SCHEMA_VERSION",
+                        plan_cache.SCHEMA_VERSION - 1)
+    old = PlanCache(disk_dir=tmp_path)
+    old.profile(KEY)
+    old_name = KEY.filename()
+    assert (tmp_path / old_name).exists()
+    monkeypatch.undo()
+
+    bumped = PlanCache(disk_dir=tmp_path)
+    bumped.profile(KEY)
+    assert (bumped.stats.disk_hits, bumped.stats.misses) == (0, 1)
+    assert KEY.filename() != old_name
+    assert (tmp_path / KEY.filename()).exists()
+    # and a pre-bump file renamed over the new name is rejected by its
+    # metadata stamp, not just its filename
+    os.replace(tmp_path / old_name, tmp_path / KEY.filename())
+    stale = PlanCache(disk_dir=tmp_path)
+    stale.profile(KEY)
+    assert (stale.stats.disk_hits, stale.stats.misses) == (0, 1)
+
+
+# ---------------------------------------------------------------------------
 # absorption of the historical ad-hoc caches
 # ---------------------------------------------------------------------------
 

@@ -123,3 +123,41 @@ def test_simulated_backend_rejects_unknown_and_empty():
         plan_bucket(64, 1e6, p, backend="magic")
     with pytest.raises(ValueError, match="simulated"):
         plan_bucket(64, 1e6, p, backend="simulated", allow=("rd",))
+
+
+def test_collective_planning_strategies_and_backends_agree():
+    """The scheduled collective algebra in the planner (DESIGN.md §11):
+    per-collective candidate sets, ring-pass vs single-step all-to-all
+    crossover, and analytic/simulated strategy agreement."""
+    p = CostParams.optical(64)
+    # small axis: the 1-reconfiguration all-to-all wins both RS phases
+    for coll in ("reduce_scatter", "all_gather"):
+        for backend in ("analytic", "simulated"):
+            plan = plan_bucket(16, 1e6, p, backend=backend, collective=coll)
+            assert plan.strategy == "alltoall", (coll, backend)
+    # large axis: ⌈N²/8⌉ wavelengths are out of reach -> the ring pass
+    for backend in ("analytic", "simulated"):
+        plan = plan_bucket(1024, 1e6, p, backend=backend,
+                          collective="reduce_scatter")
+        assert plan.strategy == "flat", backend
+    # broadcast sweeps its tree fan-out
+    plan = plan_bucket(64, 1e6, p, collective="broadcast")
+    assert plan.strategy == "wrht_tree" and plan.m >= 2
+    # degenerate axis plans for free
+    assert plan_bucket(1, 1e9, p, collective="all_gather").cost_s == 0.0
+
+
+def test_collective_broadcast_simulated_infeasible_uniform_error():
+    """Regression: broadcast fan-out candidates beyond the Lemma-1 cap must
+    yield the planner's uniform 'no feasible strategy' error under the
+    simulated backend (not tune_wrht's internal one), matching the
+    all-reduce simulated path's pre-filter."""
+    tight = CostParams(alpha_s=25e-6, link_bw_Bps=5e9, links=2)  # w=1, cap 3
+    with pytest.raises(ValueError, match="no feasible strategy"):
+        plan_bucket(64, 1e6, tight, backend="simulated",
+                    collective="broadcast", m_candidates=(8, 16))
+    # a feasible candidate in the mix plans normally on both backends
+    for backend in ("analytic", "simulated"):
+        plan = plan_bucket(64, 1e6, tight, backend=backend,
+                           collective="broadcast", m_candidates=(2, 8, 16))
+        assert plan.strategy == "wrht_tree" and plan.m <= 8

@@ -102,6 +102,7 @@ def test_batch_roundtrip_preserves_transfers():
     assert len(batch) == 2 and batch.max_wavelength == 1
 
 
+@pytest.mark.slow
 def test_full_build_and_validate_at_4096():
     """End-to-end validated build at a scale the old engine capped out on."""
     sched = wrht.build_schedule(4096, 64, 1.0, validate=True)

@@ -45,7 +45,7 @@ src = SyntheticLM(cfg.vocab_size, 16, 8)
 out = {}
 with jax.set_mesh(mesh):
     pctx.set_mesh(mesh)
-    for alg in ("auto", "wrht", "hier_scatter", "planned"):
+    for alg in ("auto", "wrht", "hier_scatter", "planned", "planned_sharded"):
         tc = TrainConfig(total_steps=2, remat="none", sync_algorithm=alg,
                          sync_m=3, bucket_bytes=1 << 20)
         state = make_train_state(cfg, tc, jax.random.key(0))

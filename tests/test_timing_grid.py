@@ -200,6 +200,99 @@ def test_profile_empty_steps_match_legacy_engines():
 
 
 # ---------------------------------------------------------------------------
+# scheduled collective algebra: cross-engine goldens (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+COLLECTIVES = ("allreduce", "reduce_scatter", "all_gather", "broadcast",
+               "alltoall")
+
+
+@pytest.mark.parametrize("coll", COLLECTIVES)
+@pytest.mark.parametrize("tmode", TIMINGS)
+def test_collective_grid_matches_run_collective(coll, tmode):
+    """Every collective × engine × payload cell: the batched ScheduleProfile
+    grid path reproduces the per-point simulator bit for bit (the all-reduce
+    contract of test_grid_matches_run_optical, extended to the algebra)."""
+    p = sm.OpticalParams(wavelengths=64)
+    # the single-step all-to-all needs ⌈n²/8⌉ <= 64 -> n <= 22
+    ns = (2, 8, 16) if coll == "alltoall" else (2, 13, 16, 64)
+    for n in ns:
+        times = timing.collective_times(coll, n, PAYLOADS, p, tmode)
+        for i, d in enumerate(PAYLOADS):
+            legacy = simulator.run_collective(coll, n, d, p, timing=tmode)
+            assert_bit_identical(legacy, times.sim_result(i))
+
+
+@pytest.mark.parametrize("tmode", TIMINGS)
+def test_collective_grid_matches_with_physical(tmode):
+    phys = sm.OpticalParams(wavelengths=64,
+                            physical=PhysicalParams(insertion_loss_db_per_hop=2.0))
+    for coll in COLLECTIVES:
+        n = 16 if coll == "alltoall" else 64
+        times = timing.collective_times(coll, n, PAYLOADS, phys, tmode)
+        for i, d in enumerate(PAYLOADS):
+            legacy = simulator.run_collective(coll, n, d, phys, timing=tmode)
+            assert_bit_identical(legacy, times.sim_result(i))
+
+
+def test_collective_times_allreduce_equals_run_optical():
+    """collective_times("allreduce") and the historical wrht path are the
+    same numbers — one profile serves both entry points."""
+    p = sm.OpticalParams(wavelengths=8)
+    for tmode in TIMINGS:
+        a = timing.collective_times("allreduce", 64, PAYLOADS, p, tmode)
+        for i, d in enumerate(PAYLOADS):
+            legacy = simulator.run_optical("wrht", 64, d, p, timing=tmode)
+            got = a.sim_result(i)
+            for f in RESULT_FIELDS:
+                if f == "algorithm":
+                    continue  # labelled by collective name, not "wrht"
+                assert getattr(legacy, f) == getattr(got, f), f
+
+
+def test_allreduce_numbers_pinned_vs_pr4():
+    """Regression pin: the all-reduce totals must come out of this PR
+    unchanged (values recorded from the PR-4 tree on this exact config)."""
+    d = 25e6 * 32
+    for n, w in ((64, 8), (1024, 64)):
+        p = sm.OpticalParams(wavelengths=w)
+        for tmode in ("lockstep", "overlap"):
+            r = simulator.run_optical("wrht", n, d, p, timing=tmode)
+            assert r.total_s == 0.060075019199999996, (n, w, tmode)
+            assert r.steps == 3 and r.max_wavelengths == w
+            bt = timing.collective_times("allreduce", n, [d], p, tmode)
+            assert float(bt.total_s[0]) == 0.060075019199999996
+
+
+def test_collective_payload_accounting_in_profile():
+    """The ring passes and the all-to-all time d/n per transfer — the
+    profile's payload class must shrink with n while the trees stay full-d
+    (spot check of the spec's payload-per-step accounting)."""
+    p = sm.OpticalParams(wavelengths=64)
+    d = 1e9
+    rs = timing.collective_times("reduce_scatter", 16, [d], p)
+    ar = timing.collective_times("allreduce", 16, [d], p)
+    ring = timing._ring_of(16, p)
+    # one RS step serializes d/16; its 15 steps are cheaper than one
+    # full-vector tree step
+    per_rs_step = ring.serialization_time(d / 16)
+    assert abs(float(rs.serialization_s[0]) - 15 * per_rs_step) < 1e-12
+    assert float(rs.serialization_s[0]) < float(ar.serialization_s[0])
+
+
+def test_collective_times_infeasible_raises_like_builder():
+    p = sm.OpticalParams(wavelengths=8)
+    from repro.core.wavelength import WavelengthConflictError
+    with pytest.raises(WavelengthConflictError):
+        timing.collective_times("alltoall", 64, [1e6], p)
+    tight = sm.OpticalParams(
+        wavelengths=64,
+        physical=PhysicalParams(insertion_loss_db_per_hop=8.0))
+    with pytest.raises(InsertionLossError):
+        timing.collective_times("alltoall", 16, [1e6], tight)
+
+
+# ---------------------------------------------------------------------------
 # auto-tuner: simulated argmin == brute force
 # ---------------------------------------------------------------------------
 
@@ -269,6 +362,29 @@ def test_tune_wrht_caps_candidates_at_n():
     else:
         assert tr.best(0) == (m, a2a)
         assert tr.best_total_s[0] == total
+
+
+def test_tune_broadcast_matches_direct_builds():
+    """The broadcast fan-out sweep (DESIGN.md §11): argmin over the batched
+    candidates == brute-force per-m builds through the per-point engine."""
+    n, w = 64, 8
+    ds = (1e3, 1e9)
+    tr = timing.tune_wrht(n, w, ds, collective="broadcast")
+    assert all(not a2a for _, a2a in tr.candidates)
+    ring = Ring(n, w)
+    for i, d in enumerate(ds):
+        best = None
+        for m in range(2, wrht.feasible_group_size(w) + 1):
+            sched = wrht.build_collective_schedule("broadcast", n, w, 1.0,
+                                                   m=m)
+            r = simulator.simulate_steps("x", sched.steps, ring, d,
+                                         validate=False, bits_override=d)
+            if best is None or r.total_s < best[0]:
+                best = (r.total_s, m)
+        assert tr.best(i) == (best[1], False)
+        assert tr.best_total_s[i] == best[0]
+    with pytest.raises(ValueError, match="no fan-out axis"):
+        timing.tune_wrht(n, w, 1e6, collective="reduce_scatter")
 
 
 def test_run_optical_m_auto_uses_tuned_schedule():
