@@ -1,0 +1,239 @@
+"""Degraded-mode wall-clock: collective time and online re-plan latency as a
+function of injected failure count (DESIGN.md §12, EXPERIMENTS.md §Degraded).
+
+Written to ``BENCH_degraded.json`` by ``python -m benchmarks.bench_degraded``:
+
+* ``allreduce`` — event-timed WRHT all-reduce under ``k = 0..8`` injected
+  failures (alternating cut fiber spans on the CW lane and dead wavelengths
+  piled on one node — the per-node λ loss is what actually shrinks the
+  Lemma-1 group size) at ``N = 64..1024``.  Each cell is re-tuned under the
+  mask (``timing.tune_wrht(failures=...)``), so the number is the best the
+  degraded fabric can do, not the healthy schedule limping; the degradation
+  ratio vs the ``k=0`` baseline is recorded per cell.  Cells the mask makes
+  infeasible are recorded as such, never skipped silently.
+* ``ring_pass`` — the reduce-scatter ring pass under the same masks
+  (``planned_sharded``'s bandwidth phase).  Rerouted neighbour hops can
+  exceed the wavelength budget at larger N; those cells report infeasible,
+  which is exactly when the planner falls back to other strategies.
+* ``replan`` — the trainer-facing number: wall-clock latency of
+  ``SyncController.replan(mask)`` (the full ``plan_gradient_sync`` re-run
+  under the mask that feeds new strategy codes into the already-compiled
+  step with no retrace) with a DP axis of N nodes, plus the exact simulated
+  planner's batched ``plan_buckets`` latency for N ≤ 256.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the grid for the CI smoke run (the workflow uploads the
+JSON as an artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core import planner, step_models as sm, timing, wrht
+from repro.core.topology import FailureMask, PhysicalParams
+from repro.train import train_step as TS
+
+NS = (64, 256, 1024)
+QUICK_NS = (64,)
+KS = tuple(range(9))                      # 0..8 injected failures
+QUICK_KS = (0, 1, 2, 4, 8)
+W = 64
+D_BITS = sm.PAPER_MODELS_BITS["ResNet50"]
+# bounded fan-out sweep (the planner's own candidate set + two larger trees)
+M_CANDIDATES = (2, 3, 4, 8, 16, 32)
+
+
+def mask_of(k: int, n: int) -> FailureMask:
+    """Deterministic k-failure mask: even draws cut a CW fiber span (spread
+    around the ring so the CCW fiber keeps everything routable), odd draws
+    kill one more wavelength at node 0 (stacking per-node λ loss, the term
+    that shrinks the feasible group size)."""
+    segs, lams = [], []
+    for i in range(k):
+        if i % 2 == 0:
+            segs.append((0, (i // 2) * max(1, n // 8) % n))
+        else:
+            lams.append((0, i // 2))
+    return FailureMask(dead_segments=tuple(segs),
+                       dead_wavelengths=tuple(lams))
+
+
+def _optical() -> sm.OpticalParams:
+    # the event engine + per-hop physics make reroute detours cost real
+    # time; lockstep would hide lane flips entirely
+    return sm.OpticalParams(wavelengths=W, physical=PhysicalParams())
+
+
+def measure_allreduce(ns=NS, ks=KS) -> list[dict]:
+    p = _optical()
+    rows = []
+    for n in ns:
+        base = None
+        for k in ks:
+            mask = mask_of(k, n)
+            t0 = time.perf_counter()
+            try:
+                tuned = timing.tune_wrht(n, W, D_BITS, p=p, timing="event",
+                                         m_candidates=M_CANDIDATES,
+                                         failures=mask)
+            except (wrht.DegradedInfeasibleError, ValueError) as e:
+                rows.append({"n": n, "failures": k, "feasible": False,
+                             "reason": str(e)})
+                continue
+            tune_s = time.perf_counter() - t0
+            best = float(tuned.best_total_s[0])
+            m, a2a = tuned.best(0)
+            if k == 0:
+                base = best
+            rows.append({
+                "n": n, "failures": k, "feasible": True,
+                "total_s": best, "best_m": m, "best_alltoall": a2a,
+                "tune_s": tune_s,
+                "degradation": (best / base) if base else None,
+            })
+    return rows
+
+
+def measure_ring_pass(ns=NS, ks=KS) -> list[dict]:
+    p = _optical()
+    rows = []
+    d = np.asarray([D_BITS])
+    for n in ns:
+        base = None
+        for k in ks:
+            mask = mask_of(k, n)
+            try:
+                t = timing.collective_times("reduce_scatter", n, d, p,
+                                            timing="event",
+                                            keep_per_step=False,
+                                            failures=mask)
+            except wrht.DegradedInfeasibleError as e:
+                rows.append({"n": n, "failures": k, "feasible": False,
+                             "reason": str(e)})
+                continue
+            best = float(np.asarray(t.total_s)[0])
+            if k == 0:
+                base = best
+            rows.append({
+                "n": n, "failures": k, "feasible": True, "total_s": best,
+                "degradation": (best / base) if base else None,
+            })
+    return rows
+
+
+class _AxisMesh:
+    """Named-axis stub: the planner only reads axis_names and shape."""
+
+    axis_names = ("data",)
+
+    def __init__(self, n: int) -> None:
+        self.shape = {"data": n}
+
+
+def _abstract_grads():
+    return {k: jax.ShapeDtypeStruct((n,), jnp.float32)
+            for k, n in (("qkv", 1 << 16), ("mlp", 1 << 20),
+                         ("emb", 1 << 22))}
+
+
+def measure_replan(ns=NS, ks=KS, repeats: int = 3) -> list[dict]:
+    tc = TrainConfig(sync_algorithm="planned_sharded", bucket_bytes=1 << 22)
+    rows = []
+    for n in ns:
+        ctrl = TS.SyncController(_abstract_grads(), tc, _AxisMesh(n))
+        n_buckets = sum(len(v) for v in ctrl.plans.rs_plans.values())
+        for k in ks:
+            mask = mask_of(k, n)
+            lat = []
+            for _ in range(repeats):
+                ctrl.replan(mask if k else None)
+                lat.append(ctrl.last_replan_s)
+            row = {"n": n, "failures": k, "buckets": n_buckets,
+                   "replan_ms": 1e3 * min(lat)}
+            if n <= 256:
+                sizes = [1 << 18, 1 << 22, 1 << 24]
+                t0 = time.perf_counter()
+                try:
+                    planner.plan_buckets(n, sizes, backend="simulated",
+                                         collective="reduce_scatter",
+                                         failures=mask if k else None)
+                    row["simulated_plan_ms"] = 1e3 * (time.perf_counter() - t0)
+                except wrht.DegradedInfeasibleError:
+                    row["simulated_plan_ms"] = None
+            rows.append(row)
+    return rows
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` CSV harness."""
+    out = []
+    for row in measure_allreduce(ns=QUICK_NS, ks=QUICK_KS):
+        if row["feasible"]:
+            out.append({
+                "name": f"degraded_allreduce_n{row['n']}_k{row['failures']}",
+                "us_per_call": row["total_s"] * 1e6,
+                "derived": {"degradation": row["degradation"],
+                            "best_m": row["best_m"]},
+            })
+    for row in measure_replan(ns=QUICK_NS, ks=(0, 8), repeats=1):
+        out.append({
+            "name": f"degraded_replan_n{row['n']}_k{row['failures']}",
+            "us_per_call": row["replan_ms"] * 1e3,
+            "derived": {"buckets": row["buckets"]},
+        })
+    return out
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    ns = QUICK_NS if quick else NS
+    ks = QUICK_KS if quick else KS
+    payload = {
+        "config": {
+            "wavelengths": W,
+            "d_bits": D_BITS,
+            "timing": "event",
+            "m_candidates": list(M_CANDIDATES),
+            "mask": "k alternating: CW span cuts spread n/8 apart; "
+                    "dead λs stacked on node 0",
+            "quick": quick,
+            "note": "allreduce cells are re-tuned under each mask; "
+                    "infeasible cells are recorded, not skipped.  The "
+                    "simulated planner runs at the CostParams-derived "
+                    "fabric (w = links/2), so stacked per-node λ loss can "
+                    "be genuinely infeasible there (simulated_plan_ms "
+                    "null) while the w=64 timing cells still route",
+        },
+        "allreduce": measure_allreduce(ns=ns, ks=ks),
+        "ring_pass": measure_ring_pass(ns=ns, ks=ks),
+        "replan": measure_replan(ns=ns, ks=ks),
+    }
+    out = Path(__file__).resolve().parents[1] / "BENCH_degraded.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    for row in payload["allreduce"]:
+        if row["feasible"]:
+            print(f"  N={row['n']:5d} k={row['failures']}: "
+                  f"{row['total_s'] * 1e3:8.3f} ms  "
+                  f"(x{row['degradation']:.3f} vs healthy, "
+                  f"m={row['best_m']}, a2a={row['best_alltoall']})")
+        else:
+            print(f"  N={row['n']:5d} k={row['failures']}: infeasible")
+    for row in payload["replan"]:
+        sim = row.get("simulated_plan_ms")
+        print(f"  replan N={row['n']:5d} k={row['failures']}: "
+              f"{row['replan_ms']:7.2f} ms analytic"
+              + (f", {sim:7.2f} ms simulated" if sim else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
                      the RS+AG-vs-AR crossover (full sweep writes
                      BENCH_collectives.json via
                      `python -m benchmarks.bench_collectives`)
+  degraded           failure-masked schedules: collective time + online
+                     re-plan latency vs injected failure count (full sweep
+                     writes BENCH_degraded.json via
+                     `python -m benchmarks.bench_degraded`)
 """
 
 from __future__ import annotations
@@ -31,6 +35,7 @@ import sys
 def main() -> None:
     from . import (
         bench_collectives,
+        bench_degraded,
         bench_insertion_loss,
         bench_planner,
         bench_schedule_build,
@@ -53,6 +58,7 @@ def main() -> None:
         "sweep": bench_sweep,
         "planner_batch": bench_planner,
         "collectives": bench_collectives,
+        "degraded": bench_degraded,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

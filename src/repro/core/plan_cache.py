@@ -44,11 +44,13 @@ from pathlib import Path
 import numpy as np
 
 from . import wrht
-from .topology import Ring
+from .topology import FailureMask, Ring
 
-# v2: PlanKey gained the `collective` field (DESIGN.md §11); v1 artifacts
-# (all-reduce only, no collective stamp) are invisible under v2.
-SCHEMA_VERSION = 2
+# v3: PlanKey gained the `failures` mask (DESIGN.md §12) — the filename and
+# metadata carry its canonical fingerprint, so a degraded plan can never be
+# served for a healthy ring or vice versa.  v2 artifacts (no mask stamp)
+# are invisible under v3, as v1 (pre-collective) were under v2.
+SCHEMA_VERSION = 3
 
 
 @dataclass(frozen=True)
@@ -60,7 +62,11 @@ class PlanKey:
     ``collective`` names the scheduled collective (``wrht.COLLECTIVES``);
     callers should normalize ``(m, alltoall)`` through
     :func:`~repro.core.wrht.collective_plan_fields` so keys never fragment
-    on axes a collective does not have.
+    on axes a collective does not have.  ``failures`` is the
+    :class:`~repro.core.topology.FailureMask` the plan routes around
+    (``None`` = healthy ring); the mask is canonical and hashable, so it
+    rides in the key directly and its :meth:`fingerprint` stamps the
+    artifact filename.
     """
 
     n: int
@@ -70,12 +76,23 @@ class PlanKey:
     max_hops: int | None = None
     rwa: str = "fast"
     collective: str = "allreduce"
+    failures: FailureMask | None = None
+
+    def __post_init__(self) -> None:
+        # an empty mask IS the healthy ring — normalize so both spellings
+        # land on one cache entry and one artifact
+        if self.failures is not None and self.failures.empty:
+            object.__setattr__(self, "failures", None)
+
+    def failure_fingerprint(self) -> str:
+        return "ok" if self.failures is None else self.failures.fingerprint()
 
     def filename(self) -> str:
         m = "auto" if self.m is None else str(self.m)
         h = "inf" if self.max_hops is None else str(self.max_hops)
         return (f"{self.collective}-n{self.n}-w{self.w}-m{m}"
                 f"-a2a{int(self.alltoall)}-H{h}-{self.rwa}"
+                f"-F{self.failure_fingerprint()}"
                 f".v{SCHEMA_VERSION}.npz")
 
     def meta(self) -> dict:
@@ -84,6 +101,9 @@ class PlanKey:
             "n": self.n, "w": self.w, "m": self.m,
             "alltoall": self.alltoall, "max_hops": self.max_hops,
             "rwa": self.rwa, "collective": self.collective,
+            "failure_fingerprint": self.failure_fingerprint(),
+            "failures": (None if self.failures is None
+                         else self.failures.to_lists()),
         }
 
 
@@ -155,7 +175,7 @@ class PlanCache:
         return wrht.build_collective_schedule(
             key.collective, key.n, key.w, 1.0, m=key.m,
             allow_alltoall=key.alltoall, validate=True, rwa=key.rwa,
-            max_hops=key.max_hops,
+            max_hops=key.max_hops, failures=key.failures,
         )
 
     def _schedule_nostat(self, key: PlanKey) -> wrht.WRHTSchedule:

@@ -213,6 +213,7 @@ def plan_bucket(
     backend: str = "analytic",
     optical: "object | None" = None,
     collective: str = "allreduce",
+    failures: "object | None" = None,
 ) -> Plan:
     """Return the minimum-cost schedule for one bucket on one device axis.
 
@@ -239,11 +240,20 @@ def plan_bucket(
     ``"alltoall"`` finisher (when it fits the wavelength/hop budgets); a
     broadcast sweeps the tree fan-out.
 
+    ``failures`` plans against a degraded ring
+    (:class:`~repro.core.topology.FailureMask`, DESIGN.md §12).  The
+    simulated backend is exact: every candidate is the degraded builder's
+    actual relay/detour schedule, and candidates the mask makes unroutable
+    are skipped.  The analytic backend only models the λ loss — the
+    channel count shrinks by the worst per-node dead-wavelength count —
+    because its closed forms have no route notion; use the simulated
+    backend when dead arcs/transceivers matter.
+
     This is the one-bucket view of :func:`plan_buckets` — a single
     candidate-scan implementation serves both (DESIGN.md §10).
     """
     return plan_buckets(axis_size, [bytes_], params, m_candidates, allow,
-                        max_hops, backend, optical, collective)[0]
+                        max_hops, backend, optical, collective, failures)[0]
 
 
 def plan_buckets(
@@ -256,6 +266,7 @@ def plan_buckets(
     backend: str = "analytic",
     optical: "object | None" = None,
     collective: str = "allreduce",
+    failures: "object | None" = None,
 ) -> list[Plan]:
     """Plan a whole list of gradient-bucket sizes in one batched call.
 
@@ -282,15 +293,25 @@ def plan_buckets(
         raise ValueError(f"unknown collective {collective!r} "
                          f"(expected one of {sorted(DEFAULT_STRATEGIES)})")
     p = params or CostParams.tpu_v5e()
+    if failures is not None and failures.empty:
+        failures = None
+    if failures is not None and backend == "analytic":
+        # the closed forms have no route notion — the mask enters only as a
+        # conservative channel shrink (worst per-node λ loss halves `links`
+        # symmetrically, matching wrht.effective_wavelengths)
+        w_eff = max(1, p.links // 2 - failures.max_dead_lambda_per_node())
+        p = CostParams(alpha_s=p.alpha_s, link_bw_Bps=p.link_bw_Bps,
+                       links=2 * w_eff)
     b = np.asarray(list(byte_sizes), dtype=np.float64)
     if allow is None:
         allow = DEFAULT_STRATEGIES[collective]
     if collective != "allreduce":
         return _plan_buckets_collective(axis_size, b, p, m_candidates, allow,
-                                        max_hops, backend, optical, collective)
+                                        max_hops, backend, optical, collective,
+                                        failures)
     if backend == "simulated":
         return _plan_buckets_simulated(axis_size, b, p, m_candidates, allow,
-                                       max_hops, optical)
+                                       max_hops, optical, failures)
     if backend != "analytic":
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'analytic' or 'simulated')")
@@ -350,6 +371,7 @@ def _plan_buckets_simulated(
     allow: tuple[str, ...],
     max_hops: int | None,
     optical,
+    failures=None,
 ) -> list[Plan]:
     """The simulated backend: candidate schedules costed by the flit-level
     simulator over the whole ``d_bits`` axis at once, so every bucket shares
@@ -377,21 +399,30 @@ def _plan_buckets_simulated(
     d_bits = b * 8
     best, consider = _bucket_argmin(b.size)
 
-    if "flat" in allow:
+    if "flat" in allow and failures is None:
+        # the flat ring is a fixed wavelength-0 neighbour pattern with no
+        # route-around — under a mask only the WRHT builder can replan
         cost = timing.ring_times(axis_size, d_bits, opt, opt.timing).total_s
         consider(cost, lambda i, c: Plan("flat", c, detail=dict(detail)))
     if "wrht_tree" in allow:
-        cap = wrht.feasible_group_size(opt.wavelengths, max_hops)
+        cap = wrht.feasible_group_size(opt.wavelengths, max_hops,
+                                       failures=failures)
         ms = tuple(m for m in m_candidates if 2 <= m <= min(axis_size, cap))
         if ms:
-            tuned = timing.tune_wrht(axis_size, opt.wavelengths, d_bits,
-                                     max_hops, p=opt, timing=opt.timing,
-                                     m_candidates=ms)
-            consider(tuned.best_total_s,
-                     lambda i, c: Plan("wrht_tree", c, m=int(tuned.best_m[i]),
-                                       alltoall=bool(tuned.best_alltoall[i]),
-                                       detail=dict(detail)))
-    if "hier_scatter" in allow:
+            try:
+                tuned = timing.tune_wrht(axis_size, opt.wavelengths, d_bits,
+                                         max_hops, p=opt, timing=opt.timing,
+                                         m_candidates=ms, failures=failures)
+            except wrht.DegradedInfeasibleError:
+                tuned = None
+            if tuned is not None:
+                consider(tuned.best_total_s,
+                         lambda i, c: Plan("wrht_tree", c,
+                                           m=int(tuned.best_m[i]),
+                                           alltoall=bool(
+                                               tuned.best_alltoall[i]),
+                                           detail=dict(detail)))
+    if "hier_scatter" in allow and failures is None:
         for factors in _factorizations(axis_size, max_levels=2):
             if len(factors) != 2 or factors[0] < 2 or axis_size % factors[0]:
                 continue
@@ -404,6 +435,13 @@ def _plan_buckets_simulated(
                      Plan("hier_scatter", c, factors=f, detail=dict(detail)))
     # "rd" has no explicit optical-ring schedule: skipped under this backend
     if any(pl is None for pl in best):
+        if failures is not None:
+            from .wrht import DegradedInfeasibleError
+
+            raise DegradedInfeasibleError(
+                "no strategy survives the failure mask for the simulated "
+                f"backend (allow={allow!r}, failures={failures!r})"
+            )
         raise ValueError(
             "no strategy in `allow` has an optical-ring schedule for the "
             f"simulated backend (allow={allow!r})"
@@ -421,6 +459,7 @@ def _plan_buckets_collective(
     backend: str,
     optical,
     collective: str,
+    failures=None,
 ) -> list[Plan]:
     """Candidate scan for the non-all-reduce collectives (DESIGN.md §11).
 
@@ -455,8 +494,10 @@ def _plan_buckets_collective(
             try:
                 return timing.collective_times(
                     coll, axis_size, d_bits, opt, opt.timing,
-                    max_hops=max_hops, keep_per_step=False, **kw).total_s
-            except (InsertionLossError, WavelengthConflictError):
+                    max_hops=max_hops, keep_per_step=False,
+                    failures=failures, **kw).total_s
+            except (InsertionLossError, WavelengthConflictError,
+                    wrht.DegradedInfeasibleError):
                 return None
 
     ring_pass = collective if collective in ("reduce_scatter",
@@ -485,23 +526,37 @@ def _plan_buckets_collective(
             # path: candidates beyond the tuner's feasible fan-out would make
             # it raise its internal "no feasible candidates" error instead of
             # this planner's uniform one below
-            cap = wrht.feasible_group_size(opt.wavelengths, max_hops)
+            cap = wrht.feasible_group_size(opt.wavelengths, max_hops,
+                                           failures=failures)
             ms = tuple(m for m in ms if m <= cap)
             if ms:
-                tuned = timing.tune_wrht(axis_size, opt.wavelengths, d_bits,
-                                         max_hops, p=opt, timing=opt.timing,
-                                         m_candidates=ms,
-                                         collective="broadcast")
-                consider(tuned.best_total_s,
-                         lambda i, c: Plan("wrht_tree", c,
-                                           m=int(tuned.best_m[i]),
-                                           detail=dict(detail)))
+                try:
+                    tuned = timing.tune_wrht(axis_size, opt.wavelengths,
+                                             d_bits, max_hops, p=opt,
+                                             timing=opt.timing,
+                                             m_candidates=ms,
+                                             collective="broadcast",
+                                             failures=failures)
+                except wrht.DegradedInfeasibleError:
+                    tuned = None
+                if tuned is not None:
+                    consider(tuned.best_total_s,
+                             lambda i, c: Plan("wrht_tree", c,
+                                               m=int(tuned.best_m[i]),
+                                               detail=dict(detail)))
         else:
             for m in ms:
                 consider(_t_bcast_tree_arr(axis_size, b, p, m),
                          lambda i, c, m=m: Plan("wrht_tree", c, m=m,
                                                 detail=dict(detail)))
     if any(pl is None for pl in best):
+        if failures is not None and simulated:
+            from .wrht import DegradedInfeasibleError
+
+            raise DegradedInfeasibleError(
+                f"no strategy in allow={allow!r} survives the failure mask "
+                f"for collective {collective!r} at axis_size={axis_size}"
+            )
         raise ValueError(
             f"no feasible strategy in allow={allow!r} for collective "
             f"{collective!r} at axis_size={axis_size}"

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from . import step_models, wrht
-from .topology import CCW, CW, Ring, TransferBatch
+from .topology import CCW, CW, FailureMask, Ring, TransferBatch
 from .wavelength import InsertionLossError, validate_no_conflicts
 
 
@@ -301,7 +301,7 @@ def hring_allreduce_schedule(n: int, g: int, d_bits: float) -> list[wrht.Step]:
 
 def _cached_wrht_schedule(
     n: int, w: int, m: int | None, max_hops: int | None = None,
-    allow_alltoall: bool = True,
+    allow_alltoall: bool = True, failures: FailureMask | None = None,
 ) -> wrht.WRHTSchedule:
     """WRHT schedule structure is independent of the payload size — build and
     fully validate (structural + semantic, both vectorized) once per
@@ -312,7 +312,8 @@ def _cached_wrht_schedule(
     from . import plan_cache
 
     return plan_cache.get_default().schedule(plan_cache.PlanKey(
-        n=n, w=w, m=m, alltoall=allow_alltoall, max_hops=max_hops))
+        n=n, w=w, m=m, alltoall=allow_alltoall, max_hops=max_hops,
+        failures=failures))
 
 
 def _simulate(
@@ -339,6 +340,7 @@ def run_optical(
     g: int = 8,
     m: int | str | None = None,
     timing: str | None = None,
+    failures: FailureMask | None = None,
 ) -> SimResult:
     """Simulate one all-reduce on the optical ring.
 
@@ -353,23 +355,35 @@ def run_optical(
     auto-tuner (:func:`repro.core.timing.tune_wrht`): every feasible group
     size — and the final all-to-all on/off — is swept through the batched
     timing engine and the simulated argmin is used here.
+
+    ``failures`` simulates the degraded ring (DESIGN.md §12) — WRHT only:
+    the baselines' schedules are fixed patterns with no route-around, so a
+    non-empty mask on them is an error, not a silently wrong number.
     """
     p = p or step_models.OpticalParams()
     timing = timing or p.timing
+    if failures is not None and failures.empty:
+        failures = None
     ring = Ring(n, p.wavelengths, bandwidth_bps=p.bandwidth_bps,
-                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
+                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical,
+                failures=failures)
     if algorithm == "wrht":
         allow_alltoall = True
         if m == "auto":
             from . import timing as _timing  # import here: timing builds on us
             tuned = _timing.tune_wrht(n, p.wavelengths, d_bits, ring.max_hops,
-                                      p=p, timing=timing)
+                                      p=p, timing=timing, failures=failures)
             m, allow_alltoall = tuned.best(0)
         sched = _cached_wrht_schedule(n, p.wavelengths, m, ring.max_hops,
-                                      allow_alltoall)
+                                      allow_alltoall, failures)
         # every WRHT transfer carries the constant full vector d
         return _simulate("wrht", sched.steps, ring, d_bits, timing,
                          validate=False, bits_override=d_bits)
+    if failures is not None:
+        raise ValueError(
+            f"algorithm {algorithm!r} has a fixed schedule and cannot route "
+            "around failures — only 'wrht' supports a failure mask"
+        )
     if algorithm == "ring":
         # every one of the 2(N-1) steps is the identical neighbour pattern
         # and every node is both a sender and a receiver, so all three
@@ -428,6 +442,7 @@ def run_collective(
     m: int | None = None,
     timing: str | None = None,
     allow_alltoall: bool = True,
+    failures: FailureMask | None = None,
 ) -> SimResult:
     """Simulate one scheduled collective on the optical ring (DESIGN.md §11).
 
@@ -445,12 +460,15 @@ def run_collective(
     timing = timing or p.timing
     name = wrht.coerce_collective(collective)
     spec = wrht.COLLECTIVES[name]
+    if failures is not None and failures.empty:
+        failures = None
     ring = Ring(max(n, 2), p.wavelengths, bandwidth_bps=p.bandwidth_bps,
-                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
+                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical,
+                failures=failures)
     km, ka = wrht.collective_plan_fields(name, m, allow_alltoall)
     sched = plan_cache.get_default().schedule(plan_cache.PlanKey(
         n=n, w=p.wavelengths, m=km, alltoall=ka, max_hops=ring.max_hops,
-        collective=name))
+        collective=name, failures=failures))
     # the same division chain as the profile's PayloadClass((n,)) — float /
     # int division promotes identically, so the two paths stay bit-identical
     bits = d_bits / n if spec.chunked else d_bits

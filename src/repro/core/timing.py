@@ -43,7 +43,7 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from . import simulator, step_models, wrht
-from .topology import CW, Ring, TransferBatch
+from .topology import CW, FailureMask, Ring, TransferBatch
 from .wavelength import InsertionLossError, validate_no_conflicts
 
 
@@ -540,6 +540,7 @@ def _ring_of(n: int, p: step_models.OpticalParams) -> Ring:
 def _collective_profile(
     collective: str, n: int, p: step_models.OpticalParams, m: int | None,
     allow_alltoall: bool = True, max_hops: int | None = None,
+    failures: FailureMask | None = None,
 ) -> ScheduleProfile:
     """Any scheduled collective's profile via the two-tier plan cache
     (DESIGN.md §10, §11).
@@ -560,15 +561,17 @@ def _collective_profile(
     hops = ring.max_hops if max_hops is None else max_hops
     return plan_cache.get_default().profile(plan_cache.PlanKey(
         n=n, w=p.wavelengths, m=m, alltoall=allow_alltoall, max_hops=hops,
-        collective=collective))
+        collective=collective, failures=failures))
 
 
 def _wrht_profile(
     n: int, p: step_models.OpticalParams, m: int | None,
     allow_alltoall: bool = True, max_hops: int | None = None,
+    failures: FailureMask | None = None,
 ) -> ScheduleProfile:
     """The all-reduce view of :func:`_collective_profile` (historical name)."""
-    return _collective_profile("allreduce", n, p, m, allow_alltoall, max_hops)
+    return _collective_profile("allreduce", n, p, m, allow_alltoall, max_hops,
+                               failures)
 
 
 @functools.lru_cache(maxsize=256)
@@ -617,9 +620,10 @@ def wrht_times(
     n: int, d_bits, p: step_models.OpticalParams, timing: str = "lockstep",
     m: int | None = None, allow_alltoall: bool = True,
     max_hops: int | None = None, keep_per_step: bool = True,
+    failures: FailureMask | None = None,
 ) -> BatchedTimes:
     ring = _ring_of(n, p)
-    prof = _wrht_profile(n, p, m, allow_alltoall, max_hops)
+    prof = _wrht_profile(n, p, m, allow_alltoall, max_hops, failures)
     return _with_meta(prof.evaluate(ring, d_bits, timing, keep_per_step),
                       "wrht")
 
@@ -628,7 +632,7 @@ def collective_times(
     collective: str, n: int, d_bits, p: step_models.OpticalParams | None = None,
     timing: str = "lockstep", m: int | None = None,
     allow_alltoall: bool = True, max_hops: int | None = None,
-    keep_per_step: bool = True,
+    keep_per_step: bool = True, failures: FailureMask | None = None,
 ) -> BatchedTimes:
     """Batched timing of any scheduled collective over a payload grid
     (DESIGN.md §11): the profile comes from the plan cache (one compile per
@@ -643,7 +647,8 @@ def collective_times(
     collective = wrht.coerce_collective(collective)
     p = p or step_models.OpticalParams()
     ring = _ring_of(n, p)
-    prof = _collective_profile(collective, n, p, m, allow_alltoall, max_hops)
+    prof = _collective_profile(collective, n, p, m, allow_alltoall, max_hops,
+                               failures)
     return _with_meta(prof.evaluate(ring, d_bits, timing, keep_per_step),
                       collective)
 
@@ -876,14 +881,14 @@ class TuneResult:
         return int(self.best_m[i]), bool(self.best_alltoall[i])
 
 
-def _tune_candidates(n, w, d_bits, max_hops, p, m_candidates):
+def _tune_candidates(n, w, d_bits, max_hops, p, m_candidates, failures=None):
     """Shared candidate-sweep preamble of the two tuner implementations."""
     p = p or step_models.OpticalParams(wavelengths=w)
     if p.wavelengths != w:
         p = replace(p, wavelengths=w)
     if max_hops is None:
         max_hops = p.physical.max_hops if p.physical is not None else None
-    analytic_m = wrht.feasible_group_size(w, max_hops)
+    analytic_m = wrht.feasible_group_size(w, max_hops, failures=failures)
     # every m >= n yields the identical single-group schedule, so cap the
     # sweep at n — smaller m wins argmin ties anyway, and this keeps small
     # rings from building hundreds of duplicate candidates
@@ -917,13 +922,15 @@ def _tune_result(n, w, max_hops, timing, d, candidates, totals, steps,
 @functools.lru_cache(maxsize=64)
 def _candidate_schedules(n: int, w: int, ms: tuple[int, ...],
                          max_hops: int | None,
-                         collective: str = "allreduce"):
+                         collective: str = "allreduce",
+                         failures: FailureMask | None = None):
     """Memoized batched candidate build — the tuner's repeat calls (one per
     ``plan_buckets`` invocation, one per ``run_optical(m="auto")`` point)
-    share one construction per sweep signature."""
+    share one construction per sweep signature.  ``FailureMask`` is frozen
+    and hashable, so degraded sweeps memoize per-mask like any other axis."""
     return wrht.build_candidate_schedules(
         n, w, 1.0, ms, allow_alltoall=True, validate=False,
-        max_hops=max_hops, collective=collective)
+        max_hops=max_hops, collective=collective, failures=failures)
 
 
 def tune_wrht(
@@ -935,6 +942,7 @@ def tune_wrht(
     timing: str = "lockstep",
     m_candidates=None,
     collective: str = "allreduce",
+    failures: FailureMask | None = None,
 ) -> TuneResult:
     """Sweep every feasible WRHT fan-out ``m`` (and the final all-to-all
     on/off) through the batched simulator; return the simulated argmin.
@@ -960,6 +968,13 @@ def tune_wrht(
     ``collective`` widens the sweep beyond all-reduce to the other
     fan-out-swept collective, ``"broadcast"`` (DESIGN.md §11) — its
     candidates have no all-to-all variant, so every row is ``(m, False)``.
+
+    ``failures`` re-tunes under a degraded ring (DESIGN.md §12): the
+    candidate pool shrinks to what the degraded builder can route, relay
+    sub-steps change every candidate's cost, and the argmin can move —
+    which is exactly why a mid-run failure re-plans instead of reusing the
+    healthy winner.  Raises ``wrht.DegradedInfeasibleError`` when no
+    candidate survives the mask.
     """
     from . import plan_cache
 
@@ -969,12 +984,14 @@ def tune_wrht(
             f"collective {collective!r} has no fan-out axis to tune — "
             "evaluate it directly with collective_times"
         )
+    if failures is not None and failures.empty:
+        failures = None
     p, max_hops, analytic_m, ms, d = _tune_candidates(
-        n, w, d_bits, max_hops, p, m_candidates)
+        n, w, d_bits, max_hops, p, m_candidates, failures)
     ring = _ring_of(n, p)
     hops = ring.max_hops if max_hops is None else max_hops
     scheds = _candidate_schedules(n, p.wavelengths, tuple(ms), hops,
-                                  collective)
+                                  collective, failures)
     variants = (True, False) if collective == "allreduce" else (False,)
     cache = plan_cache.get_default()
     seg_cache: dict = {}
@@ -988,7 +1005,8 @@ def tune_wrht(
                           # both schedules are identical, evaluate once
             key = plan_cache.PlanKey(n=n, w=p.wavelengths, m=m,
                                      alltoall=alltoall, max_hops=hops,
-                                     collective=collective)
+                                     collective=collective,
+                                     failures=failures)
             prof = cache.peek_profile(key)   # memory, then disk tier
             if prof is None:
                 prof = ScheduleProfile.from_steps(

@@ -13,6 +13,7 @@ This module is pure Python/NumPy — it backs the schedule builder, the RWA
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Iterable, Iterator
 
@@ -20,6 +21,123 @@ import numpy as np
 
 CW = +1   # clockwise
 CCW = -1  # counter-clockwise
+
+
+def _canonical_pairs(pairs) -> tuple[tuple[int, int], ...]:
+    """Sorted, deduplicated ``(int, int)`` tuples — one canonical form per
+    logical set, so equal masks hash and fingerprint identically."""
+    return tuple(sorted({(int(a), int(b)) for a, b in pairs}))
+
+
+@dataclass(frozen=True)
+class FailureMask:
+    """Which optical resources of the ring are dead (DESIGN.md §12).
+
+    Three independent failure classes, each a canonical sorted tuple so the
+    mask is hashable (plan-cache keys carry it directly) and two masks
+    describing the same failures compare — and fingerprint — equal:
+
+    ``dead_segments``      ``(lane, segment)`` pairs: the directed fiber
+                           span is cut.  Lane 0 is the CW fiber, lane 1 the
+                           CCW fiber (the :meth:`TransferBatch.arcs`
+                           convention); segment ids are the ones
+                           :func:`path_segments` yields.  No lightpath on
+                           that lane may cover the segment.
+    ``dead_wavelengths``   ``(node, λ)`` pairs: the node's MRR add/drop bank
+                           for wavelength λ is dead, so no transfer may be
+                           *added or dropped* at that node on λ (transfers
+                           passing through optically are unaffected).
+    ``dead_transceivers``  ``(node, lane)`` pairs: the node's Tx/Rx set on
+                           that fiber direction is dead — it can neither
+                           transmit nor receive on the lane (and cannot act
+                           as an O/E/O relay there).
+
+    An empty mask is semantically "healthy" everywhere; builders and
+    validators treat ``failures=None`` and an empty mask identically.
+    """
+
+    dead_segments: tuple[tuple[int, int], ...] = ()
+    dead_wavelengths: tuple[tuple[int, int], ...] = ()
+    dead_transceivers: tuple[tuple[int, int], ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "dead_segments",
+                           _canonical_pairs(self.dead_segments))
+        object.__setattr__(self, "dead_wavelengths",
+                           _canonical_pairs(self.dead_wavelengths))
+        object.__setattr__(self, "dead_transceivers",
+                           _canonical_pairs(self.dead_transceivers))
+        for lane, _ in self.dead_segments:
+            if lane not in (0, 1):
+                raise ValueError(f"dead segment lane must be 0/1, got {lane}")
+        for _, lane in self.dead_transceivers:
+            if lane not in (0, 1):
+                raise ValueError(f"dead transceiver lane must be 0/1, got {lane}")
+
+    # -------------------------------------------------- identity
+    @property
+    def empty(self) -> bool:
+        return not (self.dead_segments or self.dead_wavelengths
+                    or self.dead_transceivers)
+
+    def fingerprint(self) -> str:
+        """Canonical short hash of the mask — the plan-cache key/filename
+        stamp (DESIGN.md §12).  ``"ok"`` for the healthy (empty) mask."""
+        if self.empty:
+            return "ok"
+        payload = repr((self.dead_segments, self.dead_wavelengths,
+                        self.dead_transceivers)).encode()
+        return hashlib.sha256(payload).hexdigest()[:12]
+
+    def to_lists(self) -> dict:
+        """JSON-able view (plan-cache artifact metadata)."""
+        return {
+            "dead_segments": [list(p) for p in self.dead_segments],
+            "dead_wavelengths": [list(p) for p in self.dead_wavelengths],
+            "dead_transceivers": [list(p) for p in self.dead_transceivers],
+        }
+
+    @classmethod
+    def from_lists(cls, d: dict) -> "FailureMask":
+        return cls(
+            dead_segments=tuple(map(tuple, d.get("dead_segments", ()))),
+            dead_wavelengths=tuple(map(tuple, d.get("dead_wavelengths", ()))),
+            dead_transceivers=tuple(map(tuple, d.get("dead_transceivers", ()))),
+        )
+
+    # -------------------------------------------------- array views
+    def segment_dead(self, n: int) -> np.ndarray:
+        """Bool ``[2, n]``: ``[lane, seg]`` is True iff the span is cut."""
+        out = np.zeros((2, n), dtype=bool)
+        for lane, seg in self.dead_segments:
+            out[lane, seg % n] = True
+        return out
+
+    def transceiver_dead(self, n: int) -> np.ndarray:
+        """Bool ``[n, 2]``: ``[node, lane]`` is True iff the Tx/Rx is dead."""
+        out = np.zeros((n, 2), dtype=bool)
+        for node, lane in self.dead_transceivers:
+            out[node % n, lane] = True
+        return out
+
+    def forbidden_lambda_bits(self, n: int) -> list[int]:
+        """Per-node forbidden-wavelength bitmask (arbitrary-precision Python
+        ints, so ``w > 64`` works): a dead λ at a node forbids adding or
+        dropping that λ there."""
+        out = [0] * n
+        for node, lam in self.dead_wavelengths:
+            if lam >= 0:
+                out[node % n] |= 1 << lam
+        return out
+
+    def max_dead_lambda_per_node(self) -> int:
+        """Largest count of dead wavelengths at any single node — the
+        conservative shrink applied to the Lemma-1 group size
+        (:func:`repro.core.wrht.feasible_group_size`)."""
+        counts: dict[int, int] = {}
+        for node, _ in self.dead_wavelengths:
+            counts[node] = counts.get(node, 0) + 1
+        return max(counts.values(), default=0)
 
 
 @dataclass(frozen=True)
@@ -290,6 +408,7 @@ class Ring:
     flit_bits: int = 32 * 8            # flit size (Table II)
     oeo_cycle_s: float = field(default=0.0)  # O/E/O conversion, per flit
     physical: PhysicalParams | None = None   # power budget; None = unconstrained
+    failures: FailureMask | None = None      # dead resources; None = healthy
 
     def __post_init__(self) -> None:
         if self.n < 2:

@@ -31,7 +31,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .topology import Transfer, TransferBatch, path_segments
+from .topology import FailureMask, Transfer, TransferBatch, path_segments
 
 
 class WavelengthConflictError(ValueError):
@@ -40,6 +40,126 @@ class WavelengthConflictError(ValueError):
 
 class InsertionLossError(ValueError):
     """A lightpath exceeds the insertion-loss hop budget (Sec. III)."""
+
+
+class FailedResourceError(ValueError):
+    """A schedule touches a resource the :class:`FailureMask` marks dead —
+    a cut fiber span, a dead per-node wavelength, or a dead transceiver
+    (DESIGN.md §12).  Raised by the validators; the degraded builder routes
+    around failures so its output never trips this."""
+
+
+# ---------------------------------------------------------------------------
+# Failure-mask enforcement (DESIGN.md §12).
+# ---------------------------------------------------------------------------
+
+def _covers_dead_segment(batch: TransferBatch, n: int,
+                         failures: FailureMask) -> np.ndarray:
+    """Bool per row: the lightpath covers a cut span on its lane."""
+    lane, start, hops = batch.arcs(n)
+    dead = failures.segment_dead(n)
+    if not dead.any():
+        return np.zeros(len(batch), dtype=bool)
+    # prefix-sum of dead segments per lane -> covered-count per arc in O(1)
+    csum = np.concatenate([np.zeros((2, 1)), np.cumsum(dead, axis=1)], axis=1)
+    end = start + hops           # may exceed n: arc wraps the origin
+    wrap = np.minimum(end - n, n)
+    covered = (csum[lane, np.minimum(end, n)] - csum[lane, start]
+               + np.where(wrap > 0, csum[lane, np.maximum(wrap, 0)], 0.0))
+    return covered > 0
+
+
+def _uses_dead_transceiver(batch: TransferBatch, n: int,
+                           failures: FailureMask) -> np.ndarray:
+    """Bool per row: src transmits or dst receives on a dead Tx/Rx lane."""
+    lane = batch.arcs(n)[0]
+    dead = failures.transceiver_dead(n)
+    if not dead.any():
+        return np.zeros(len(batch), dtype=bool)
+    return dead[batch.src % n, lane] | dead[batch.dst % n, lane]
+
+
+def validate_failures(transfers, n: int, failures: FailureMask | None,
+                      check_wavelengths: bool = True) -> None:
+    """Reject any transfer touching a dead resource (DESIGN.md §12).
+
+    Checks, in order: cut fiber spans (path covers a dead ``(lane,
+    segment)``), dead transceivers (endpoint adds/drops on a dead lane),
+    and — when ``check_wavelengths`` and the batch is assigned — dead
+    per-node wavelengths (endpoint adds/drops a dead λ).  Raises
+    :exc:`FailedResourceError` on the first offender.
+    """
+    if failures is None or failures.empty:
+        return
+    batch = TransferBatch.coerce(transfers)
+    if len(batch) == 0:
+        return
+    bad = _covers_dead_segment(batch, n, failures)
+    if bad.any():
+        i = int(np.flatnonzero(bad)[0])
+        raise FailedResourceError(
+            f"transfer {int(batch.src[i])}->{int(batch.dst[i])} traverses a "
+            f"dead fiber span (lane {int(batch.arcs(n)[0][i])})"
+        )
+    bad = _uses_dead_transceiver(batch, n, failures)
+    if bad.any():
+        i = int(np.flatnonzero(bad)[0])
+        raise FailedResourceError(
+            f"transfer {int(batch.src[i])}->{int(batch.dst[i])} uses a dead "
+            f"transceiver (lane {int(batch.arcs(n)[0][i])})"
+        )
+    if check_wavelengths and failures.dead_wavelengths:
+        forbid = failures.forbidden_lambda_bits(n)
+        lam = batch.wavelength
+        for i in range(len(batch)):
+            lm = int(lam[i])
+            if lm < 0:
+                continue
+            if ((forbid[int(batch.src[i]) % n] >> lm) & 1
+                    or (forbid[int(batch.dst[i]) % n] >> lm) & 1):
+                raise FailedResourceError(
+                    f"transfer {int(batch.src[i])}->{int(batch.dst[i])} "
+                    f"adds/drops dead wavelength {lm}"
+                )
+
+
+def _first_fit_forbidden(batch: TransferBatch, n: int, w: int,
+                         failures: FailureMask) -> TransferBatch:
+    """First Fit honoring per-node forbidden wavelengths.
+
+    Same processing order as the reference greedy (longest-path-first,
+    stable ties), but each transfer's candidate set additionally excludes
+    every λ dead at its src or dst.  Per-node forbidden sets break the
+    translation-symmetry dedup of the fast path, so this is a plain
+    dict-based greedy — degraded operation is rare and schedules are built
+    once per plan-cache key, so the cost is immaterial (EXPERIMENTS.md
+    §Degraded records it).
+    """
+    lane, start, hops = batch.arcs(n)
+    forbid = failures.forbidden_lambda_bits(n)
+    full = (1 << w) - 1
+    order = np.argsort(-hops, kind="stable")
+    occ: dict[tuple[int, int], int] = {}
+    lam = np.empty(len(batch), dtype=np.int64)
+    for i in order.tolist():
+        l, s, h = int(lane[i]), int(start[i]), int(hops[i])
+        used = forbid[int(batch.src[i]) % n] | forbid[int(batch.dst[i]) % n]
+        segs = [(l, (s + k) % n) for k in range(h)]
+        for key in segs:
+            used |= occ.get(key, 0)
+        free = ~used & full
+        if free == 0:
+            raise WavelengthConflictError(
+                f"step needs more than the {w} available wavelengths under "
+                f"the failure mask (transfer "
+                f"{int(batch.src[i])}->{int(batch.dst[i])})"
+            )
+        lm = (free & -free).bit_length() - 1
+        bit = 1 << lm
+        for key in segs:
+            occ[key] = occ.get(key, 0) | bit
+        lam[i] = lm
+    return batch.with_wavelengths(lam)
 
 
 # ---------------------------------------------------------------------------
@@ -287,7 +407,8 @@ def _assign_arcs_component(
 
 
 def first_fit_assign(
-    transfers, n: int, w: int, max_hops: int | None = None
+    transfers, n: int, w: int, max_hops: int | None = None,
+    failures: FailureMask | None = None,
 ) -> TransferBatch:
     """Vectorized First Fit: bit-identical to the reference greedy.
 
@@ -297,6 +418,11 @@ def first_fit_assign(
     ``max_hops`` is given, arcs exceeding the insertion-loss hop budget are
     rejected with :exc:`InsertionLossError` before any assignment (such
     paths must be relayed via :func:`split_overlong_arcs` first).
+
+    With a non-empty ``failures`` mask, routes touching a dead span or
+    transceiver are rejected (:exc:`FailedResourceError` — the degraded
+    builder must re-route before calling RWA) and the assignment honors
+    per-node dead wavelengths via the forbidden-aware greedy.
     """
     batch = TransferBatch.coerce(transfers)
     t_count = len(batch)
@@ -304,6 +430,10 @@ def first_fit_assign(
         return batch
     if max_hops is not None:
         validate_hop_budget(batch, n, max_hops)
+    if failures is not None and not failures.empty:
+        validate_failures(batch, n, failures, check_wavelengths=False)
+        if failures.dead_wavelengths:
+            return _first_fit_forbidden(batch, n, w, failures)
     lane, start, hops = batch.arcs(n)
 
     if t_count <= 32:
@@ -332,6 +462,7 @@ def first_fit_assign(
 def first_fit_assign_concat(
     transfers, ptr, n: int, w: int,
     max_hops: int | None = None, cache: dict | None = None,
+    failures: FailureMask | None = None,
 ) -> TransferBatch:
     """First-Fit RWA over concatenated independent steps (DESIGN.md §10).
 
@@ -360,6 +491,12 @@ def first_fit_assign_concat(
       sub-step of a chain set is a translation of the first.
     * per conflict component inside an unseen step (the table
       ``first_fit_assign`` uses within one step).
+
+    A non-empty ``failures`` mask disables both memo levels — per-node dead
+    wavelengths break translation symmetry — and each step falls back to
+    the forbidden-aware greedy (occupancy still resets at every pointer
+    boundary).  Dead spans/transceivers on any route raise
+    :exc:`FailedResourceError` up front.
     """
     batch = TransferBatch.coerce(transfers)
     ptr = np.asarray(ptr, dtype=np.int64)
@@ -369,6 +506,21 @@ def first_fit_assign_concat(
         return batch
     if max_hops is not None:
         validate_hop_budget(batch, n, max_hops)
+    if failures is not None and not failures.empty:
+        validate_failures(batch, n, failures, check_wavelengths=False)
+        if failures.dead_wavelengths:
+            lam = np.empty(len(batch), dtype=np.int64)
+            for lo, hi in zip(ptr[:-1].tolist(), ptr[1:].tolist()):
+                if lo == hi:
+                    continue
+                sub = TransferBatch(
+                    batch.src[lo:hi], batch.dst[lo:hi],
+                    batch.direction[lo:hi], batch.bits[lo:hi],
+                    batch.wavelength[lo:hi],
+                )
+                lam[lo:hi] = _first_fit_forbidden(sub, n, w,
+                                                  failures).wavelength
+            return batch.with_wavelengths(lam)
     lane, start, hops = batch.arcs(n)
     if cache is None:
         cache = {}
@@ -402,20 +554,25 @@ def first_fit_assign_concat(
 
 
 def validate_no_conflicts(
-    transfers, n: int, w: int, max_hops: int | None = None
+    transfers, n: int, w: int, max_hops: int | None = None,
+    failures: FailureMask | None = None,
 ) -> None:
     """Check wavelength-conflict-freedom of an already-assigned step.
 
     Vectorized: expand every transfer into its directed segments, build
     ``(lane, segment, λ)`` keys, sort, and look for adjacent duplicates.
     With ``max_hops`` set, the insertion-loss hop budget is checked first
-    (:exc:`InsertionLossError`).
+    (:exc:`InsertionLossError`); with a non-empty ``failures`` mask, any
+    transfer touching a dead span/transceiver/λ is rejected
+    (:exc:`FailedResourceError`).
     """
     batch = TransferBatch.coerce(transfers)
     if len(batch) == 0:
         return
     if max_hops is not None:
         validate_hop_budget(batch, n, max_hops)
+    if failures is not None and not failures.empty:
+        validate_failures(batch, n, failures)
     lam = batch.wavelength
     if (lam < 0).any():
         i = int(np.flatnonzero(lam < 0)[0])

@@ -48,16 +48,30 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .topology import CCW, CW, PhysicalParams, Ring, TransferBatch
+from .topology import CCW, CW, FailureMask, PhysicalParams, Ring, TransferBatch
 from .wavelength import (
     InsertionLossError,
     WavelengthConflictError,
+    _covers_dead_segment,
+    _uses_dead_transceiver,
     first_fit_assign,
     first_fit_assign_concat,
     first_fit_assign_reference,
     split_overlong_arcs,
     validate_no_conflicts,
 )
+
+
+class DegradedInfeasibleError(RuntimeError):
+    """No feasible schedule exists under the given :class:`FailureMask`.
+
+    The uniform infeasibility signal of degraded-mode building
+    (DESIGN.md §12): raised when a transfer's route is cut in *both* ring
+    directions, when no live O/E/O relay exists within the hop budget, or
+    when the surviving wavelengths cannot carry a required step (the
+    original :class:`WavelengthConflictError` is chained as ``__cause__``).
+    Healthy-mode builds (no mask) never raise this.
+    """
 
 
 @dataclass
@@ -89,6 +103,7 @@ class WRHTSchedule:
     max_hops: int | None = None            # insertion-loss hop budget, if any
     level_group_sizes: list[int] = field(default_factory=list)  # m used per level
     collective: str = "allreduce"          # which Collective this schedule runs
+    failures: FailureMask | None = None    # mask the schedule routes around
 
     @property
     def num_steps(self) -> int:
@@ -238,13 +253,211 @@ def _cap_group_size(m: int, max_hops: int | None, spacing: int) -> int:
     return m
 
 
-def feasible_group_size(w: int, max_hops: int | None = None, spacing: int = 1) -> int:
+def effective_wavelengths(w: int, failures: FailureMask | None = None) -> int:
+    """Wavelengths usable at *every* node under the mask (floored at 1).
+
+    A λ dead at node ``v`` only forbids add/drop *at v*, so this is a
+    conservative uniform shrink — the group-size and all-to-all budgets are
+    worst-case-node bounds, which is exactly what Lemma 1 needs.
+    """
+    if failures is None or failures.empty:
+        return w
+    return max(1, w - failures.max_dead_lambda_per_node())
+
+
+def feasible_group_size(w: int, max_hops: int | None = None, spacing: int = 1,
+                        failures: FailureMask | None = None) -> int:
     """Lemma-1 optimum capped by the insertion-loss fan-out limit.
 
     A group of 2 whose pair distance still exceeds ``H`` must be relayed —
-    ``build_schedule`` does this automatically.
+    ``build_schedule`` does this automatically.  A failure mask shrinks the
+    Lemma-1 budget to the worst node's surviving wavelength count.
     """
-    return _cap_group_size(optimal_group_size(w), max_hops, spacing)
+    return _cap_group_size(optimal_group_size(effective_wavelengths(w, failures)),
+                           max_hops, spacing)
+
+
+# ------------------------------------------------------------------
+# Degraded-mode routing (DESIGN.md §12).
+#
+# A single lightpath has exactly two simple routes per ordered pair, so a
+# transfer blocked by a cut span first tries the *direction flip*.  When
+# both directions are blocked as single lightpaths (e.g. a dead CW span on
+# one side plus a dead CCW transceiver at the destination), an O/E/O
+# detour can still work: two legs through a live relay node, each leg
+# choosing its own fiber direction.  The router therefore plans per row:
+# direct → flipped → cheapest feasible two-leg detour → infeasible.  Legs
+# longer than the hop budget are further relayed through live nodes,
+# reusing the store-and-forward sub-step convention of
+# `split_overlong_arcs`.  Only the single-step all-to-all is restricted to
+# the direction flip — a detour would need a second reconfiguration.
+# ------------------------------------------------------------------
+
+def _route_blocked(batch: TransferBatch, n: int,
+                   failures: FailureMask) -> np.ndarray:
+    """Bool per row: the route (as currently directed) touches a dead span
+    or a dead endpoint transceiver."""
+    return (_covers_dead_segment(batch, n, failures)
+            | _uses_dead_transceiver(batch, n, failures))
+
+
+def _reroute_batch(batch: TransferBatch, n: int,
+                   failures: FailureMask) -> TransferBatch:
+    """Flip the ring direction of every blocked transfer; raise
+    :exc:`DegradedInfeasibleError` when a transfer is blocked both ways."""
+    if len(batch) == 0:
+        return batch
+    bad = _route_blocked(batch, n, failures)
+    if not bad.any():
+        return batch
+    flipped = TransferBatch.from_arrays(
+        batch.src, batch.dst,
+        np.where(bad, -batch.direction, batch.direction), batch.bits,
+        check=False,
+    )
+    still = _route_blocked(flipped, n, failures) & bad
+    if still.any():
+        i = int(np.flatnonzero(still)[0])
+        raise DegradedInfeasibleError(
+            f"transfer {int(batch.src[i])}->{int(batch.dst[i])} is blocked "
+            "in both ring directions under the failure mask"
+        )
+    return flipped
+
+
+class _DegradedRouter:
+    """Per-row route planner under a failure mask (plain Python loops:
+    degraded operation is rare and schedules build once per cache key)."""
+
+    def __init__(self, n: int, max_hops: int | None,
+                 failures: FailureMask) -> None:
+        self.n = n
+        self.max_hops = max_hops
+        self.segd = failures.segment_dead(n)
+        self.tdead = failures.transceiver_dead(n)
+
+    def _leg_ok(self, s: int, t: int, d: int) -> bool:
+        """Can ``s -> t`` run as ONE lightpath in direction ``d``?"""
+        n, lane = self.n, (1 - d) >> 1
+        if self.tdead[s, lane] or self.tdead[t, lane]:
+            return False
+        h = (t - s) * d % n
+        start = s if d == CW else t
+        row = self.segd[lane]
+        if row.any() and row[(start + np.arange(h)) % n].any():
+            return False
+        return True
+
+    def _hops(self, s: int, t: int, d: int) -> int:
+        return (t - s) * d % self.n
+
+    def _split_leg(self, s: int, t: int, d: int) -> list[tuple[int, int, int]]:
+        """Cut one feasible leg into hop-budget pieces through live relays:
+        each relay is the farthest live node at most ``max_hops`` ahead, so
+        dead nodes are skipped at the price of shorter pieces."""
+        h = self._hops(s, t, d)
+        if self.max_hops is None or h <= self.max_hops:
+            return [(s, t, d)]
+        n, lane = self.n, (1 - d) >> 1
+        parts: list[tuple[int, int, int]] = []
+        off = 0
+        while h - off > self.max_hops:
+            nxt = None
+            for k in range(off + self.max_hops, off, -1):
+                if not self.tdead[(s + k * d) % n, lane]:
+                    nxt = k
+                    break
+            if nxt is None:
+                raise DegradedInfeasibleError(
+                    f"no live O/E/O relay within {self.max_hops} hops along "
+                    f"{s}->{t} (lane {lane})"
+                )
+            parts.append(((s + off * d) % n, (s + nxt * d) % n, d))
+            off = nxt
+        parts.append(((s + off * d) % n, t, d))
+        return parts
+
+    def plan_row(self, s: int, t: int, d_pref: int) -> list[tuple[int, int, int]]:
+        """Route one transfer: direct → flipped → cheapest two-leg detour.
+        Returns the store-and-forward chain as ``(src, dst, dir)`` legs."""
+        for d in (d_pref, -d_pref):
+            if self._leg_ok(s, t, d):
+                return self._split_leg(s, t, d)
+        best: tuple[int, int, int, int] | None = None  # (cost, x, d1, d2)
+        for x in range(self.n):
+            if x in (s, t):
+                continue
+            for d1 in (CW, CCW):
+                if not self._leg_ok(s, x, d1):
+                    continue
+                for d2 in (CW, CCW):
+                    if not self._leg_ok(x, t, d2):
+                        continue
+                    cost = self._hops(s, x, d1) + self._hops(x, t, d2)
+                    if best is None or cost < best[0]:
+                        best = (cost, x, d1, d2)
+        if best is None:
+            raise DegradedInfeasibleError(
+                f"transfer {s}->{t} is unroutable under the failure mask "
+                "(both directions blocked and no live relay detour exists)"
+            )
+        _, x, d1, d2 = best
+        return self._split_leg(s, x, d1) + self._split_leg(x, t, d2)
+
+
+def _degraded_substeps(
+    batch: TransferBatch, n: int, max_hops: int | None,
+    failures: FailureMask,
+) -> list[tuple[TransferBatch, np.ndarray]]:
+    """Route a step around the failure mask, as relay sub-steps.
+
+    Every row becomes a chain of one or more legs (see :class:`_DegradedRouter`);
+    leg ``k`` of every chain lands in sub-step ``k`` (the store-and-forward
+    convention of :func:`~repro.core.wavelength.split_overlong_arcs`, so
+    single-leg rows sit in sub-step 0).  Returns ``(sub_batch,
+    original_rows)`` per sub-step — the row map lets chunked callers slice
+    their per-row shard ids.  Rows whose original route is clean skip the
+    planner entirely (vectorized precheck), so lightly-degraded steps cost
+    barely more than healthy ones.
+    """
+    if len(batch) == 0:
+        return [(batch, np.arange(0, dtype=np.int64))]
+    router = _DegradedRouter(n, max_hops, failures)
+    hops = batch.arcs(n)[2]
+    clean = ~_route_blocked(batch, n, failures)
+    if max_hops is not None:
+        clean &= hops <= max_hops
+    chains: list[list[tuple[int, int, int]]] = []
+    for i in range(len(batch)):
+        s, t = int(batch.src[i]), int(batch.dst[i])
+        if clean[i]:
+            chains.append([(s, t, int(batch.direction[i]))])
+        else:
+            chains.append(router.plan_row(s, t, int(batch.direction[i])))
+    out: list[tuple[TransferBatch, np.ndarray]] = []
+    for k in range(max(len(c) for c in chains)):
+        rows = np.array([i for i, c in enumerate(chains) if len(c) > k],
+                        dtype=np.int64)
+        legs = [chains[i][k] for i in rows]
+        out.append((TransferBatch.from_arrays(
+            [l[0] for l in legs], [l[1] for l in legs],
+            [l[2] for l in legs], batch.bits[rows], check=False,
+        ), rows))
+    return out
+
+
+def _degraded_assign(batch: TransferBatch, ring: Ring,
+                     failures: FailureMask) -> TransferBatch:
+    """Failure-aware RWA with the uniform degraded error contract: a
+    wavelength shortfall under the mask is an infeasibility, not a caller
+    bug, so it surfaces as :exc:`DegradedInfeasibleError` (cause chained)."""
+    try:
+        return first_fit_assign(batch, ring.n, ring.w, failures=failures)
+    except WavelengthConflictError as e:
+        raise DegradedInfeasibleError(
+            "surviving wavelengths cannot carry a required step under the "
+            f"failure mask: {e}"
+        ) from e
 
 
 def _assigner(rwa: str):
@@ -354,22 +567,30 @@ def _full_mesh_batch(nodes: np.ndarray, n: int, bits: float) -> TransferBatch:
 
 def _alltoall_fits(
     reps: np.ndarray, ring: Ring, d_bits: float, rwa: str = "fast",
-    max_hops: int | None = None,
+    max_hops: int | None = None, failures: FailureMask | None = None,
 ) -> TransferBatch | None:
     """Try to schedule a one-step all-to-all among ``reps``; None if > w
     or if any pairwise lightpath would exceed the insertion-loss budget."""
     r = reps.size
     if r < 2:
         return None
+    degraded = failures is not None and not failures.empty
     # Paper Sec. III-C-2 / [16]: all-to-all among m* ring nodes needs
     # ⌈m*²/8⌉ wavelengths.  Cheap necessary condition before running RWA —
     # also keeps the O(r²) enumeration off the N=4096 level-0 case.
-    if math.ceil(r ** 2 / 8) > ring.w:
+    if math.ceil(r ** 2 / 8) > effective_wavelengths(ring.w, failures):
         return None
     batch = _full_mesh_batch(reps, ring.n, d_bits)
+    if degraded:
+        try:
+            batch = _reroute_batch(batch, ring.n, failures)
+        except DegradedInfeasibleError:
+            return None  # the finisher is optional — keep climbing the tree
     if max_hops is not None and (batch.arcs(ring.n)[2] > max_hops).any():
         return None  # some pair is out of optical reach — keep climbing the tree
     try:
+        if degraded:
+            return first_fit_assign(batch, ring.n, ring.w, failures=failures)
         return _assigner(rwa)(batch, ring.n, ring.w)
     except WavelengthConflictError:
         return None
@@ -397,9 +618,18 @@ def _level_cap(active: np.ndarray, m: int, max_hops: int | None) -> tuple[int, b
 def _append_level(
     sched: WRHTSchedule, kind: str, level: int, batch: TransferBatch,
     relay: bool, ring: Ring, assign, max_hops: int | None,
+    failures: FailureMask | None = None,
 ) -> None:
     """Emit one tree level as a Step, splitting into relay sub-steps when the
-    hop budget demands it (each sub-step re-runs RWA)."""
+    hop budget demands it (each sub-step re-runs RWA).  Under a failure mask
+    the batch is first re-routed around dead spans/transceivers (which may
+    push flipped rows over the hop budget, triggering the relay path even
+    when the healthy level needed none)."""
+    if failures is not None and not failures.empty:
+        for sub, _ in _degraded_substeps(batch, ring.n, max_hops, failures):
+            sched.steps.append(
+                Step(kind, level, _degraded_assign(sub, ring, failures)))
+        return
     if relay:
         for sub in split_overlong_arcs(batch, ring.n, max_hops):
             sched.steps.append(Step(kind, level, assign(sub, ring.n, ring.w)))
@@ -419,6 +649,7 @@ def build_schedule(
     rwa: str = "fast",
     physical: PhysicalParams | None = None,
     max_hops: int | None = None,
+    failures: FailureMask | None = None,
 ) -> WRHTSchedule:
     """Construct and validate the full WRHT schedule for an N-node ring.
 
@@ -434,29 +665,40 @@ def build_schedule(
     drifted beyond the budget are relayed through intermediate O/E/O
     regeneration sub-steps.  The resulting schedule never contains a
     transfer longer than the budget (enforced by :func:`validate_schedule`).
+
+    A non-empty ``failures`` mask puts the build in degraded mode
+    (DESIGN.md §12): blocked routes flip direction (relayed through live
+    O/E/O nodes when the long way exceeds the hop budget), the Lemma-1
+    group size shrinks to the worst node's surviving wavelengths, and any
+    remaining infeasibility raises :exc:`DegradedInfeasibleError`.
     """
     if n < 1:
         raise ValueError("need >= 1 node")
+    if failures is not None and failures.empty:
+        failures = None
     if max_hops is None and physical is not None:
         max_hops = physical.max_hops
     if max_hops is not None and max_hops < 1:
         raise ValueError("insertion-loss hop budget must allow >= 1 hop")
     ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps,
-                reconfig_delay_s=reconfig_delay_s, physical=physical)
+                reconfig_delay_s=reconfig_delay_s, physical=physical,
+                failures=failures)
+    w_eff = effective_wavelengths(w, failures)
     if m is None:
-        m = optimal_group_size(w)
+        m = optimal_group_size(w_eff)
     if m < 2:
         raise ValueError("group size m must be >= 2")
     # Lemma 1 feasibility: a group of m nodes drains over two fibers with
     # ⌈(m-1)/2⌉ wavelengths per side; beyond m = 2w+1 the step cannot be
-    # conflict-free, so clamp (callers probing larger m get the feasible max).
-    m = min(m, optimal_group_size(w))
+    # conflict-free, so clamp (callers probing larger m get the feasible
+    # max; a failure mask shrinks the budget to the worst surviving node).
+    m = min(m, optimal_group_size(w_eff))
     # level-0 fan-out cap (unit spacing); deeper levels re-cap per spacing
     # in _level_cap as the active nodes spread out
     m = _cap_group_size(m, max_hops, 1)
     assign = _assigner(rwa)
 
-    sched = WRHTSchedule(n=n, w=w, m=m, max_hops=max_hops)
+    sched = WRHTSchedule(n=n, w=w, m=m, max_hops=max_hops, failures=failures)
     active = np.arange(n, dtype=np.int64)
     sched.levels.append(active.tolist())
     if n == 1:
@@ -468,13 +710,15 @@ def build_schedule(
     level = 0
     while active.size > 1:
         if allow_alltoall:
-            a2a = _alltoall_fits(active, ring, d_bits, rwa, max_hops=max_hops)
+            a2a = _alltoall_fits(active, ring, d_bits, rwa, max_hops=max_hops,
+                                 failures=failures)
             if a2a is not None:
                 sched.steps.append(Step("alltoall", level, a2a))
                 break
         m_lvl, relay = _level_cap(active, m, max_hops)
         batch, reps = _level_transfers(active, m_lvl, d_bits, broadcast=False)
-        _append_level(sched, "reduce", level, batch, relay, ring, assign, max_hops)
+        _append_level(sched, "reduce", level, batch, relay, ring, assign,
+                      max_hops, failures)
         reduce_actives.append(active)
         level_meta.append((m_lvl, relay))
         sched.level_group_sizes.append(m_lvl)
@@ -490,7 +734,7 @@ def build_schedule(
         batch, _ = _level_transfers(reduce_actives[level], m_lvl, d_bits,
                                     broadcast=True)
         _append_level(sched, "broadcast", level, batch, relay, ring, assign,
-                      max_hops)
+                      max_hops, failures)
 
     if validate:
         validate_schedule(sched, ring)
@@ -510,6 +754,7 @@ def build_collective_schedule(
     rwa: str = "fast",
     physical: PhysicalParams | None = None,
     max_hops: int | None = None,
+    failures: FailureMask | None = None,
 ) -> WRHTSchedule:
     """Generalized schedule builder: one entry point for the whole scheduled
     collective algebra (DESIGN.md §11).
@@ -530,13 +775,22 @@ def build_collective_schedule(
       :class:`~repro.core.wavelength.InsertionLossError` when any pair is
       beyond the hop budget (unlike the all-reduce *finisher*, which simply
       keeps climbing the tree).
+
+    A non-empty ``failures`` mask puts every collective in degraded mode
+    (DESIGN.md §12): blocked routes flip direction (relayed when the long
+    way exceeds the hop budget), budgets shrink to the surviving
+    wavelengths, and ALL infeasibilities — including the all-to-all cases
+    above — surface uniformly as :exc:`DegradedInfeasibleError`.
     """
     collective = coerce_collective(collective)
+    if failures is not None and failures.empty:
+        failures = None
     if collective == "allreduce":
         return build_schedule(
             n, w, d_bits, m=m, allow_alltoall=allow_alltoall,
             bandwidth_bps=bandwidth_bps, reconfig_delay_s=reconfig_delay_s,
             validate=validate, rwa=rwa, physical=physical, max_hops=max_hops,
+            failures=failures,
         )
     if n < 1:
         raise ValueError("need >= 1 node")
@@ -545,26 +799,30 @@ def build_collective_schedule(
     if max_hops is not None and max_hops < 1:
         raise ValueError("insertion-loss hop budget must allow >= 1 hop")
     ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps,
-                reconfig_delay_s=reconfig_delay_s, physical=physical)
+                reconfig_delay_s=reconfig_delay_s, physical=physical,
+                failures=failures)
+    w_eff = effective_wavelengths(w, failures)
     if m is None:
-        m = optimal_group_size(w)
+        m = optimal_group_size(w_eff)
     if m < 2:
         raise ValueError("group size m must be >= 2")
-    m = _cap_group_size(min(m, optimal_group_size(w)), max_hops, 1)
+    m = _cap_group_size(min(m, optimal_group_size(w_eff)), max_hops, 1)
     assign = _assigner(rwa)
 
     sched = WRHTSchedule(n=n, w=w, m=m, max_hops=max_hops,
-                         collective=collective)
+                         collective=collective, failures=failures)
     active = np.arange(n, dtype=np.int64)
     sched.levels.append(active.tolist())
     if n > 1:
         if collective == "broadcast":
             _emit_broadcast_tree(sched, active, m, ring, assign, max_hops,
-                                 d_bits)
+                                 d_bits, failures)
         elif collective in ("reduce_scatter", "all_gather"):
-            _emit_ring_pass(sched, collective, n, ring, assign, d_bits)
+            _emit_ring_pass(sched, collective, n, ring, assign, d_bits,
+                            max_hops, failures)
         else:  # alltoall
-            _emit_alltoall(sched, active, ring, assign, max_hops, d_bits, w)
+            _emit_alltoall(sched, active, ring, assign, max_hops, d_bits, w,
+                           failures)
     if validate:
         validate_schedule(sched, ring)
     return sched
@@ -573,6 +831,7 @@ def build_collective_schedule(
 def _emit_broadcast_tree(
     sched: WRHTSchedule, active: np.ndarray, m: int, ring: Ring, assign,
     max_hops: int | None, d_bits: float,
+    failures: FailureMask | None = None,
 ) -> None:
     """The WRHT broadcast stage alone: walk the reduce tree for its
     grouping structure (no reduce steps emitted, no all-to-all — a pure
@@ -592,12 +851,13 @@ def _emit_broadcast_tree(
         batch, _ = _level_transfers(bcast_actives[level], m_lvl, d_bits,
                                     broadcast=True)
         _append_level(sched, "broadcast", level, batch, relay, ring, assign,
-                      max_hops)
+                      max_hops, failures)
 
 
 def _emit_ring_pass(
     sched: WRHTSchedule, collective: str, n: int, ring: Ring, assign,
-    d_bits: float,
+    d_bits: float, max_hops: int | None = None,
+    failures: FailureMask | None = None,
 ) -> None:
     """``N-1`` neighbour steps of ``d/N`` chunks — the bandwidth-optimal
     ring pass.  Every step shares ONE assigned batch (neighbour hops occupy
@@ -610,11 +870,31 @@ def _emit_ring_pass(
                      ends owning the full reduction of chunk ``i``;
     all-gather       step ``t``: node ``i`` forwards chunk ``(i - t + 1)
                      mod N`` — node ``i``'s owned chunk circulates to all.
+
+    Degraded mode keeps the logical neighbour data flow but re-routes
+    blocked hops the long way around (relayed through live O/E/O nodes when
+    over the hop budget); each logical step then expands into its
+    store-and-forward sub-steps, every sub-step carrying the chunk ids of
+    the rows it forwards.
     """
     src = np.arange(n, dtype=np.int64)
     batch = TransferBatch.from_arrays(
         src, (src + 1) % n, CW, d_bits / n, check=False
     )
+    if failures is not None and not failures.empty:
+        # geometry repeats every step — assign each sub-batch once, share it
+        subs = [(_degraded_assign(sb, ring, failures), rows)
+                for sb, rows in
+                _degraded_substeps(batch, ring.n, max_hops, failures)]
+        for t in range(1, n):
+            if collective == "reduce_scatter":
+                chunks = (src - t) % n
+            else:
+                chunks = (src - t + 1) % n
+            for sb, rows in subs:
+                sched.steps.append(Step(collective, 0, sb,
+                                        chunks=chunks[rows]))
+        return
     assigned = assign(batch, ring.n, ring.w)
     for t in range(1, n):
         if collective == "reduce_scatter":
@@ -627,23 +907,44 @@ def _emit_ring_pass(
 def _emit_alltoall(
     sched: WRHTSchedule, active: np.ndarray, ring: Ring, assign,
     max_hops: int | None, d_bits: float, w: int,
+    failures: FailureMask | None = None,
 ) -> None:
-    """The single-step full-mesh exchange among all ``n`` nodes."""
+    """The single-step full-mesh exchange among all ``n`` nodes.
+
+    Degraded mode preserves the single-step invariant — a relayed pair
+    would need a second reconfiguration — so a blocked-both-ways pair, a
+    flipped path over the hop budget, or a wavelength shortfall all raise
+    :exc:`DegradedInfeasibleError` (the healthy errors stay as documented).
+    """
     n = active.size
+    degraded = failures is not None and not failures.empty
     need = math.ceil(n ** 2 / 8)
-    if need > w:
-        raise WavelengthConflictError(
+    w_eff = effective_wavelengths(w, failures)
+    if need > w_eff:
+        err = WavelengthConflictError(
             f"single-step all-to-all among {n} nodes needs ⌈n²/8⌉={need} "
-            f"wavelengths, but the ring has w={w}"
+            f"wavelengths, but the ring has w={w_eff}"
+            + (" surviving the failure mask" if degraded else "")
         )
+        if degraded:
+            raise DegradedInfeasibleError(str(err)) from err
+        raise err
     batch = _full_mesh_batch(active, ring.n, d_bits / n)
+    if degraded:
+        batch = _reroute_batch(batch, ring.n, failures)
     hops = batch.arcs(ring.n)[2]
     if max_hops is not None and int(hops.max(initial=0)) > max_hops:
-        raise InsertionLossError(
+        err = InsertionLossError(
             f"all-to-all lightpath spans {int(hops.max())} segments, "
             f"exceeding the insertion-loss hop budget of {max_hops}"
         )
-    assigned = assign(batch, ring.n, ring.w)
+        if degraded:  # a relay would break the single-step invariant
+            raise DegradedInfeasibleError(str(err)) from err
+        raise err
+    if degraded:
+        assigned = _degraded_assign(batch, ring, failures)
+    else:
+        assigned = assign(batch, ring.n, ring.w)
     sched.steps.append(Step("alltoall", 0, assigned,
                             chunks=assigned.dst.copy()))
 
@@ -694,6 +995,7 @@ def build_candidate_schedules(
     physical: PhysicalParams | None = None,
     max_hops: int | None = None,
     collective: "Collective | str" = "allreduce",
+    failures: FailureMask | None = None,
 ) -> dict[tuple[int, bool], WRHTSchedule]:
     """Build every candidate WRHT schedule of a fan-out sweep in one pass.
 
@@ -735,6 +1037,13 @@ def build_candidate_schedules(
     (the WRHT broadcast tree alone, keyed ``(m, False)`` — a pure broadcast
     never takes the all-to-all).  The ring passes and the standalone
     all-to-all have no fan-out axis, so sweeping them is a caller error.
+
+    A non-empty ``failures`` mask disables the amortized one-pass walk —
+    per-node deadness breaks the translation symmetries it exploits, and a
+    single infeasible candidate must not poison the sweep — and falls back
+    to one degraded :func:`build_schedule` per candidate, skipping fan-outs
+    that raise :exc:`DegradedInfeasibleError`.  If *no* candidate survives,
+    the error propagates.
     """
     collective = coerce_collective(collective)
     if not COLLECTIVES[collective].tree:
@@ -744,14 +1053,18 @@ def build_candidate_schedules(
         )
     if n < 1:
         raise ValueError("need >= 1 node")
+    if failures is not None and failures.empty:
+        failures = None
     if max_hops is None and physical is not None:
         max_hops = physical.max_hops
     if max_hops is not None and max_hops < 1:
         raise ValueError("insertion-loss hop budget must allow >= 1 hop")
     ring = Ring(max(n, 2), w, bandwidth_bps=bandwidth_bps,
-                reconfig_delay_s=reconfig_delay_s, physical=physical)
+                reconfig_delay_s=reconfig_delay_s, physical=physical,
+                failures=failures)
     if m_candidates is None:
-        m_candidates = range(2, feasible_group_size(w, max_hops) + 1)
+        m_candidates = range(2, feasible_group_size(w, max_hops,
+                                                    failures=failures) + 1)
     ms: list[int] = []
     for m in m_candidates:
         m = int(m)
@@ -759,6 +1072,11 @@ def build_candidate_schedules(
             raise ValueError("group size m must be >= 2")
         if m not in ms:
             ms.append(m)
+    if failures is not None:
+        return _candidate_schedules_degraded(
+            collective, n, w, d_bits, ms, allow_alltoall, bandwidth_bps,
+            reconfig_delay_s, validate, rwa, physical, max_hops, failures,
+        )
     assign = _assigner(rwa)
     closed_form = rwa == "fast"
     rwa_cache: dict = {}  # translated-component dedup, shared by all candidates
@@ -871,6 +1189,50 @@ def build_candidate_schedules(
     return out
 
 
+def _candidate_schedules_degraded(
+    collective: str, n: int, w: int, d_bits: float, ms: list[int],
+    allow_alltoall: bool, bandwidth_bps: float, reconfig_delay_s: float,
+    validate: bool, rwa: str, physical: PhysicalParams | None,
+    max_hops: int | None, failures: FailureMask,
+) -> dict[tuple[int, bool], WRHTSchedule]:
+    """Per-candidate degraded sweep (see :func:`build_candidate_schedules`):
+    each fan-out builds independently so one infeasible ``m`` cannot poison
+    the rest; the all-to-all variant split mirrors the healthy builder."""
+    kw = dict(bandwidth_bps=bandwidth_bps, reconfig_delay_s=reconfig_delay_s,
+              validate=validate, rwa=rwa, physical=physical,
+              max_hops=max_hops, failures=failures)
+    out: dict[tuple[int, bool], WRHTSchedule] = {}
+    last_err: DegradedInfeasibleError | None = None
+    for m_req in ms:
+        try:
+            if collective == "broadcast":
+                out[(m_req, False)] = build_collective_schedule(
+                    "broadcast", n, w, d_bits, m=m_req,
+                    allow_alltoall=False, **kw)
+                continue
+            sched = build_schedule(n, w, d_bits, m=m_req,
+                                   allow_alltoall=allow_alltoall, **kw)
+        except DegradedInfeasibleError as e:
+            last_err = e
+            continue
+        took_a2a = any(s.kind == "alltoall" for s in sched.steps)
+        if allow_alltoall and took_a2a:
+            out[(m_req, True)] = sched
+            try:
+                out[(m_req, False)] = build_schedule(
+                    n, w, d_bits, m=m_req, allow_alltoall=False, **kw)
+            except DegradedInfeasibleError as e:
+                last_err = e
+        else:
+            out[(m_req, allow_alltoall)] = sched
+    if not out:
+        raise DegradedInfeasibleError(
+            f"no feasible fan-out among {ms} for {collective} on n={n} "
+            f"w={w} under the failure mask"
+        ) from last_err
+    return out
+
+
 # ------------------------------------------------------------------
 # Validation: structural (wavelengths) and semantic (per collective).
 # ------------------------------------------------------------------
@@ -888,12 +1250,17 @@ def validate_schedule(sched: WRHTSchedule, ring: Ring | None = None) -> None:
 
     The hop budget comes from the schedule itself or, failing that, from the
     ring's physical model — a schedule built without the constraint validates
-    as before.
+    as before.  Likewise the failure mask: a degraded schedule (or a ring
+    with failures) additionally rejects any step touching a dead
+    span/transceiver/λ (:exc:`~repro.core.wavelength.FailedResourceError`).
     """
     ring = ring or Ring(max(sched.n, 2), sched.w)
     max_hops = sched.max_hops if sched.max_hops is not None else ring.max_hops
+    failures = (sched.failures if sched.failures is not None
+                else ring.failures)
     for step in sched.steps:
-        validate_no_conflicts(step.transfers, ring.n, ring.w, max_hops=max_hops)
+        validate_no_conflicts(step.transfers, ring.n, ring.w,
+                              max_hops=max_hops, failures=failures)
     _validate_semantics(sched)
 
 

@@ -27,13 +27,38 @@ class InjectedFailure(RuntimeError):
 
 @dataclass
 class FailureInjector:
+    """Deterministic failure injection for restart/re-plan tests.
+
+    ``fail_at_steps`` raise :class:`InjectedFailure` once each (hard crash →
+    trainer restart).  ``degrade_at`` maps a step to the
+    :class:`~repro.core.topology.FailureMask` that becomes active there
+    (soft optical failure → trainer re-plan, DESIGN.md §12); each mask is
+    reported exactly once via :meth:`degradation`.  ``reset()`` re-arms
+    everything so a restarted trainer can reuse one injector without
+    double-firing inside a single run loop.
+    """
+
     fail_at_steps: tuple[int, ...] = ()
-    fired: set = field(default_factory=set)
+    fired: set[int] = field(default_factory=set)
+    degrade_at: dict[int, object] = field(default_factory=dict)
+    degraded_fired: set[int] = field(default_factory=set)
 
     def check(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self.fired:
             self.fired.add(step)
             raise InjectedFailure(f"injected node failure at step {step}")
+
+    def degradation(self, step: int):
+        """The failure mask newly active at ``step`` (one-shot), else None."""
+        if step in self.degrade_at and step not in self.degraded_fired:
+            self.degraded_fired.add(step)
+            return self.degrade_at[step]
+        return None
+
+    def reset(self) -> None:
+        """Re-arm every configured failure and degradation."""
+        self.fired.clear()
+        self.degraded_fired.clear()
 
 
 @dataclass

@@ -36,6 +36,7 @@ doubling (cross-pod links are the scarce resource at 512+ chips).
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass
 from functools import partial
 
@@ -105,7 +106,8 @@ class GradSyncPlans:
 def plan_gradient_sync(grads, tc: TrainConfig, mesh,
                        cost: planner.CostParams | None = None,
                        backend: str = "analytic",
-                       sharded: bool = False) -> GradSyncPlans:
+                       sharded: bool = False,
+                       failures=None) -> GradSyncPlans:
     """Partition the gradient pytree into size-capped buckets and plan every
     bucket's schedule for every DP axis in one batched planner call.
 
@@ -121,6 +123,11 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
     all-gather sees the shard left by every axis *inside* it, so its byte
     count shrinks by the already-scattered factors, exactly what
     ``_sharded_sync_axes`` executes.
+
+    ``failures`` re-plans every (axis, bucket) choice against a degraded
+    ring (:class:`~repro.core.topology.FailureMask`, DESIGN.md §12) — the
+    online re-plan path (:class:`SyncController`) calls back in here with
+    the mask the watchdog/injector reported.
     """
     spec = bucketing.plan_buckets(grads, tc.bucket_bytes)
     itemsize = jnp.dtype(_dtype(tc.sync_dtype)).itemsize
@@ -129,7 +136,8 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
     if not sharded:
         plans = {
             ax: tuple(planner.plan_buckets(mesh.shape[ax], bucket_bytes, cost,
-                                           backend=backend))
+                                           backend=backend,
+                                           failures=failures))
             for ax in axes
         }
         return GradSyncPlans(spec, plans)
@@ -139,10 +147,10 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
         size = mesh.shape[ax]
         rs_plans[ax] = tuple(planner.plan_buckets(
             size, shard_bytes, cost, backend=backend,
-            collective="reduce_scatter"))
+            collective="reduce_scatter", failures=failures))
         ag_plans[ax] = tuple(planner.plan_buckets(
             size, shard_bytes, cost, backend=backend,
-            collective="all_gather"))
+            collective="all_gather", failures=failures))
         shard_bytes = [b / size for b in shard_bytes]
     return GradSyncPlans(spec, {}, rs_plans=rs_plans, ag_plans=ag_plans)
 
@@ -179,19 +187,128 @@ def _dispatch_ag(shard, axis, size, plan: planner.Plan):
     return C.all_gather_ring(shard, axis, size)
 
 
-def _sharded_sync_axes(flat, axes, sizes, plans: GradSyncPlans, i):
+# ---------------------------------------------------------------------------
+# online re-plan (DESIGN.md §12): traced strategy codes + SyncController
+# ---------------------------------------------------------------------------
+
+# the planned_sharded strategy menu per (axis, bucket, phase) is exactly
+# {ring pass, single-step all-to-all}; encoding the choice as a traced int32
+# makes the jitted step a *function of the plan*, so a mid-run re-plan swaps
+# schedules by feeding new arrays — never by retracing
+STRAT_RING = 0
+STRAT_ALLTOALL = 1
+
+
+def _plan_code(plan: planner.Plan) -> int:
+    return STRAT_ALLTOALL if plan.strategy == "alltoall" else STRAT_RING
+
+
+def _dispatch_rs_dyn(flat, axis, size, code):
+    """Traced-code twin of :func:`_dispatch_rs` — both branches are traced
+    once, the running plan picks at execution time.  The code array is
+    replicated across devices, so every device takes the same branch."""
+    if size == 1:
+        return flat
+    return lax.cond(code == STRAT_ALLTOALL,
+                    lambda x: C.reduce_scatter_alltoall(x, axis, size),
+                    lambda x: C.reduce_scatter_ring(x, axis, size),
+                    flat)
+
+
+def _dispatch_ag_dyn(shard, axis, size, code):
+    """Traced-code twin of :func:`_dispatch_ag`."""
+    if size == 1:
+        return shard
+    return lax.cond(code == STRAT_ALLTOALL,
+                    lambda x: C.all_gather_alltoall(x, axis, size),
+                    lambda x: C.all_gather_ring(x, axis, size),
+                    shard)
+
+
+def _sharded_sync_axes(flat, axes, sizes, plans: GradSyncPlans, i,
+                       codes=None):
     """RS down the DP axes, AG back up: between the phases every device
     holds only its owned shard of the bucket (ZeRO-style, DESIGN.md §11).
     The ring bodies pad internally; the all-gather returns the padded
-    length, so each level slices back to the length it scattered."""
+    length, so each level slices back to the length it scattered.
+
+    ``codes`` (the :meth:`SyncController.arrays` pytree) switches bucket
+    dispatch to the traced strategy codes — the no-retrace re-plan path."""
     lengths = []
     for ax in axes:
         lengths.append(flat.shape[0])
-        flat = _dispatch_rs(flat, ax, sizes[ax], plans.rs_plans[ax][i])
+        if codes is not None:
+            flat = _dispatch_rs_dyn(flat, ax, sizes[ax], codes[f"rs:{ax}"][i])
+        else:
+            flat = _dispatch_rs(flat, ax, sizes[ax], plans.rs_plans[ax][i])
     for ax, length in zip(reversed(axes), reversed(lengths)):
-        flat = _dispatch_ag(flat, ax, sizes[ax], plans.ag_plans[ax][i])
+        if codes is not None:
+            flat = _dispatch_ag_dyn(flat, ax, sizes[ax], codes[f"ag:{ax}"][i])
+        else:
+            flat = _dispatch_ag(flat, ax, sizes[ax], plans.ag_plans[ax][i])
         flat = flat[:length]
     return flat
+
+
+class SyncController:
+    """Online re-planner for the ``planned_sharded`` gradient sync
+    (DESIGN.md §12).
+
+    Owns the current :class:`GradSyncPlans` and publishes it as a pytree of
+    replicated int32 *strategy-code* arrays (one per DP axis and phase,
+    indexed by bucket).  The jitted train step takes that pytree as a traced
+    argument, so :meth:`replan` — invoked by the trainer when the watchdog
+    or injector reports a :class:`~repro.core.topology.FailureMask` — swaps
+    every (axis, bucket) schedule by re-running the planner under the mask
+    and feeding the new arrays into the *already-compiled* step.  No
+    retrace: the arrays' shapes and dtypes never change.
+
+    ``last_replan_s`` records the wall-clock planner latency of the most
+    recent re-plan (what ``benchmarks/bench_degraded.py`` reports).
+    """
+
+    def __init__(self, abstract_grads, tc: TrainConfig, mesh,
+                 cost: planner.CostParams | None = None,
+                 backend: str = "analytic") -> None:
+        self._grads = abstract_grads
+        self._tc = tc
+        self._mesh = mesh
+        self._cost = cost
+        self._backend = backend
+        self.failures = None
+        self.last_replan_s: float | None = None
+        self.replan_count = 0
+        self.plans = plan_gradient_sync(abstract_grads, tc, mesh, cost,
+                                        backend, sharded=True)
+
+    def arrays(self) -> dict:
+        """The current plan as traced jit inputs: ``{"rs:<axis>"|"ag:<axis>"
+        -> int32[n_buckets]}`` strategy codes, replicated across devices."""
+        enc = {}
+        for phase, plans in (("rs", self.plans.rs_plans),
+                             ("ag", self.plans.ag_plans)):
+            for ax in dp_axes_of(self._mesh):
+                enc[f"{phase}:{ax}"] = jnp.asarray(
+                    [_plan_code(p) for p in plans[ax]], jnp.int32)
+        return enc
+
+    def replan(self, failure_mask=None) -> dict:
+        """Re-plan every (DP axis, bucket) schedule under ``failure_mask``
+        (``None`` or an empty mask restores the healthy plan) and return the
+        new strategy-code arrays.  Raises
+        :class:`~repro.core.wrht.DegradedInfeasibleError` when the mask
+        leaves no feasible schedule — the previous plan stays installed."""
+        if failure_mask is not None and failure_mask.empty:
+            failure_mask = None
+        t0 = time.perf_counter()
+        plans = plan_gradient_sync(self._grads, self._tc, self._mesh,
+                                   self._cost, self._backend, sharded=True,
+                                   failures=failure_mask)
+        self.last_replan_s = time.perf_counter() - t0
+        self.plans = plans
+        self.failures = failure_mask
+        self.replan_count += 1
+        return self.arrays()
 
 
 def _sync_one_axis(flat, axis, size, alg, m):
@@ -210,13 +327,19 @@ def _sync_one_axis(flat, axis, size, alg, m):
 
 
 def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None,
-                   sync_plans: GradSyncPlans | None = None):
+                   sync_plans: GradSyncPlans | None = None,
+                   plan_codes=None):
     """Explicit gradient sync over the manual DP axes.  Returns (mean grads,
     new_ef_state | None).  Must run inside shard_map (manual DP axes).
 
     ``sync_plans`` carries the setup-time bucket partition and per-bucket
     schedule choices for the ``"planned"`` mode; when absent they are
-    derived on the spot (plan-cache-warm, but re-done per trace)."""
+    derived on the spot (plan-cache-warm, but re-done per trace).
+
+    ``plan_codes`` (``"planned_sharded"`` only) is the traced strategy-code
+    pytree of :meth:`SyncController.arrays`: bucket dispatch switches to
+    ``lax.cond`` on the codes so a re-plan swaps schedules without a
+    retrace (DESIGN.md §12)."""
     axes = dp_axes_of(mesh)
     sizes = {a: mesh.shape[a] for a in axes}
     total = math.prod(sizes.values())
@@ -269,7 +392,8 @@ def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None,
                                                  sharded=True)
 
         def bucket_fn(flat, nbytes, i):
-            return _sharded_sync_axes(flat, axes, sizes, plans, i)
+            return _sharded_sync_axes(flat, axes, sizes, plans, i,
+                                      codes=plan_codes)
 
         grads = bucketing.bucketed_apply_indexed(
             grads, bucket_fn, plans.spec, sync_dtype=_dtype(tc.sync_dtype))
@@ -324,6 +448,14 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
 
     auto mode: call under jit with sharded args.  Manual modes: the returned
     function already wraps shard_map over the DP axes; jit it directly.
+
+    For ``"planned_sharded"`` the returned function additionally accepts an
+    optional third argument ``plan_codes`` — the traced strategy-code pytree
+    of :meth:`SyncController.arrays` — and carries the controller as a
+    ``.controller`` attribute.  Feeding ``controller.replan(mask)``'s arrays
+    into the jitted step swaps every (axis, bucket) schedule without a
+    retrace (DESIGN.md §12); omitting the argument keeps the static
+    setup-time plan, so existing callers are unchanged.
     """
     api = mapi.get_api(cfg, compute_dtype=_dtype(tc.compute_dtype), remat=tc.remat)
     lr_fn = make_lr_schedule(tc)
@@ -332,6 +464,7 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     # and plan every bucket's schedule ONCE here — each traced step then
     # just dispatches bucket i to its precomputed plan (DESIGN.md §10)
     sync_plans = None
+    controller = None
     if (tc.sync_algorithm in ("planned", "planned_sharded")
             and mesh is not None and dp_axes_of(mesh)):
         g_dtype = _dtype(tc.grad_accum_dtype if tc.microbatches > 1
@@ -339,21 +472,24 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
         abstract_params = abstract_train_state(cfg, tc)["params"]
         abstract_grads = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct(p.shape, g_dtype), abstract_params)
-        sync_plans = plan_gradient_sync(
-            abstract_grads, tc, mesh,
-            sharded=tc.sync_algorithm == "planned_sharded")
+        if tc.sync_algorithm == "planned_sharded":
+            controller = SyncController(abstract_grads, tc, mesh)
+            sync_plans = controller.plans
+        else:
+            sync_plans = plan_gradient_sync(abstract_grads, tc, mesh)
 
     def loss_fn(params, batch):
         return api.loss(params, batch)
 
-    def step_body(state, batch):
+    def step_body(state, batch, plan_codes=None):
         loss, metrics, grads = _microbatched_grads(
             loss_fn, state["params"], batch, tc.microbatches,
             accum_dtype=_dtype(tc.grad_accum_dtype))
         new_ef = None
         if tc.sync_algorithm in MANUAL_ALGOS:
             grads, new_ef = sync_gradients(grads, tc, mesh, state.get("ef"),
-                                           sync_plans=sync_plans)
+                                           sync_plans=sync_plans,
+                                           plan_codes=plan_codes)
             loss = lax.pmean(loss, dp_axes_of(mesh))
         lr = lr_fn(state["step"])
         params, opt, om = adamw_update(grads, state["opt"], state["params"], lr, tc)
@@ -376,15 +512,31 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     def batch_specs_tree(batch):
         return jax.tree.map(lambda _: batch_spec, batch)
 
-    def wrapped(state, batch):
+    def wrapped(state, batch, plan_codes=None):
+        if plan_codes is None:
+            f = jax.shard_map(
+                step_body,
+                mesh=mesh,
+                in_specs=(state_specs,
+                          jax.tree.map(lambda _: batch_spec, batch)),
+                out_specs=(state_specs, P()),
+                axis_names=set(dp),
+                check_vma=False,
+            )
+            return f(state, batch)
+        # the strategy codes ride in replicated (P()) so every device takes
+        # the same lax.cond branch — a requirement for the collectives inside
         f = jax.shard_map(
             step_body,
             mesh=mesh,
-            in_specs=(state_specs, jax.tree.map(lambda _: batch_spec, batch)),
+            in_specs=(state_specs,
+                      jax.tree.map(lambda _: batch_spec, batch),
+                      jax.tree.map(lambda _: P(), plan_codes)),
             out_specs=(state_specs, P()),
             axis_names=set(dp),
             check_vma=False,
         )
-        return f(state, batch)
+        return f(state, batch, plan_codes)
 
+    wrapped.controller = controller
     return wrapped

@@ -33,6 +33,10 @@ class TrainerOptions:
     max_restarts: int = 3
     watchdog_threshold: float = 3.0
     log_every: int = 10
+    # what a flagged straggler triggers: "log" (record only), "checkpoint"
+    # (force an early checkpoint so the likely restart loses less), or a
+    # callable(StragglerEvent) for custom policies (e.g. re-shard/elastic)
+    straggler_policy: object = "log"
 
 
 @dataclass
@@ -45,10 +49,51 @@ class Trainer:
     injector: FailureInjector | None = None
 
     def __post_init__(self):
+        policy = self.options.straggler_policy
+        if not callable(policy) and policy not in ("log", "checkpoint"):
+            raise ValueError(
+                f"unknown straggler_policy {policy!r} "
+                "(expected 'log', 'checkpoint' or a callable)")
         self.ckpt = Checkpointer(self.options.ckpt_dir, keep_n=self.options.keep_n)
-        self.watchdog = StepWatchdog(self.options.watchdog_threshold)
-        self._step_fn = jax.jit(make_train_step(self.cfg, self.tc, self.mesh))
+        self.watchdog = StepWatchdog(self.options.watchdog_threshold,
+                                     on_straggler=self._on_straggler)
+        raw_step = make_train_step(self.cfg, self.tc, self.mesh)
+        # the online re-plan controller (planned_sharded only): kept off the
+        # jitted callable, which jax.jit would strip (DESIGN.md §12)
+        self.controller = getattr(raw_step, "controller", None)
+        self._step_fn = jax.jit(raw_step)
+        self._plan_codes = (None if self.controller is None
+                            else self.controller.arrays())
+        self._ckpt_requested = False
         self.history: list[dict] = []
+
+    # --------------------------------------------------------- fault hooks
+    def _on_straggler(self, event):
+        policy = self.options.straggler_policy
+        if callable(policy):
+            policy(event)
+            return
+        log.warning("straggler at step %d: %.3fs vs median %.3fs",
+                    event.step, event.duration_s, event.median_s)
+        if policy == "checkpoint":
+            self._ckpt_requested = True
+
+    def replan(self, failure_mask=None):
+        """Swap in degraded (or restored-healthy) gradient-sync schedules
+        for the running jitted step (DESIGN.md §12).  The watchdog/injector
+        path calls this with the reported
+        :class:`~repro.core.topology.FailureMask`; the new plan takes effect
+        on the next step with **no retrace** — the strategy-code arrays are
+        traced inputs of the already-compiled step."""
+        if self.controller is None:
+            raise RuntimeError(
+                "replan() needs the online re-plan controller — only "
+                "sync_algorithm='planned_sharded' builds one")
+        self._plan_codes = self.controller.replan(failure_mask)
+        log.warning("re-planned gradient sync (mask=%s, %.1f ms)",
+                    self.controller.failures,
+                    1e3 * self.controller.last_replan_s)
+        return self._plan_codes
 
     # -------------------------------------------------------------- state
     def init_or_restore(self):
@@ -79,10 +124,16 @@ class Trainer:
         while step < total:
             if self.injector is not None:
                 self.injector.check(step)
+                mask = self.injector.degradation(step)
+                if mask is not None:
+                    self.replan(mask)
             host_batch = self.source.batch(step)
             batch = shard_batch(host_batch, self.mesh)
             self.watchdog.start()
-            state, metrics = self._step_fn(state, batch)
+            if self._plan_codes is not None:
+                state, metrics = self._step_fn(state, batch, self._plan_codes)
+            else:
+                state, metrics = self._step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
             dt = self.watchdog.stop(step)
             step += 1
@@ -91,6 +142,11 @@ class Trainer:
                 m.update(step=step, sec_per_step=dt)
                 self.history.append(m)
                 log.info("step %d loss %.4f (%.2fs)", step, m["loss"], dt)
+            if self._ckpt_requested:
+                self._ckpt_requested = False
+                log.warning("straggler policy: forcing early checkpoint at "
+                            "step %d", step)
+                self.ckpt.save(step, state)
             if step % self.options.ckpt_every == 0 or step == total:
                 self.ckpt.save(step, state)
         self.ckpt.wait()

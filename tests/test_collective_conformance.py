@@ -31,8 +31,9 @@ import pytest
 
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 from repro.core import wrht
-from repro.core.topology import Ring
+from repro.core.topology import FailureMask, Ring
 from repro.core.wavelength import (
+    FailedResourceError,
     InsertionLossError,
     WavelengthConflictError,
     validate_no_conflicts,
@@ -76,27 +77,40 @@ def interpret_schedule(sched: wrht.WRHTSchedule) -> dict:
 
 
 def check_cell(collective: str, n: int, m: int | None, w: int,
-               max_hops: int | None, rwa: str, d: float = 1e6) -> None:
+               max_hops: int | None, rwa: str, d: float = 1e6,
+               failures: FailureMask | None = None) -> None:
     spec = wrht.COLLECTIVES[collective]
+    degraded = failures is not None and not failures.empty
     try:
         sched = wrht.build_collective_schedule(
-            collective, n, w, d, m=m, max_hops=max_hops, rwa=rwa)
+            collective, n, w, d, m=m, max_hops=max_hops, rwa=rwa,
+            failures=failures)
+    except wrht.DegradedInfeasibleError:
+        # the uniform infeasibility signal of degraded building — a valid
+        # outcome under a mask (severed ring, no surviving λ, ...), never
+        # valid on a healthy fabric
+        assert degraded
+        return
     except WavelengthConflictError:
         # only the single-step all-to-all can run out of wavelengths —
         # either at the ⌈n²/8⌉ budget precheck or in First Fit itself
         # (the bound is necessary, not sufficient for a greedy RWA)
-        assert collective == "alltoall"
+        assert collective == "alltoall" and not degraded
         return
     except InsertionLossError:
         assert collective == "alltoall" and max_hops is not None
+        assert not degraded
         assert n // 2 > max_hops
         return
 
-    # ---- structural: RWA + hop budget + wavelength budget ----
+    # ---- structural: RWA + hop budget + wavelength budget + failure mask
     ring = Ring(max(n, 2), w)
     for step in sched.steps:
-        validate_no_conflicts(step.transfers, ring.n, w, max_hops=max_hops)
+        validate_no_conflicts(step.transfers, ring.n, w, max_hops=max_hops,
+                              failures=failures)
         assert step.wavelengths <= w
+    if degraded:
+        assert sched.failures == failures
 
     # ---- payload accounting per the spec ----
     want_bits = d / n if spec.chunked else d
@@ -246,6 +260,90 @@ def test_plan_field_normalization():
 
 
 # ---------------------------------------------------------------------------
+# failure-mask lane: degraded schedules must satisfy the same oracles
+# ---------------------------------------------------------------------------
+# Degraded building only *re-routes* (direction flips, O/E/O relay detours)
+# and *shrinks budgets* — it never changes what data moves where, so every
+# semantic oracle above applies unchanged.  check_cell additionally runs the
+# structural validator WITH the mask, proving no schedule touches a dead
+# arc/λ/transceiver, and accepts DegradedInfeasibleError as the one valid
+# alternative outcome.
+
+def _failure_masks(n: int) -> list[FailureMask]:
+    return [
+        # one dead CW span
+        FailureMask(dead_segments=((0, 1),)),
+        # one dead λ at one node
+        FailureMask(dead_wavelengths=((n // 2, 0),)),
+        # the ISSUE's acceptance cell: ≥1 dead arc AND ≥1 dead λ (plus a
+        # dead transceiver for good measure)
+        FailureMask(dead_segments=((1, n // 3),),
+                    dead_wavelengths=((0, 0),),
+                    dead_transceivers=((n // 2, 1),)),
+        # both fibers cut at one span: the ring degenerates to a line —
+        # still routable (every pair has a one-sided path)
+        FailureMask(dead_segments=((0, 2), (1, 2))),
+        # ring severed at two distinct spans on both lanes: some pairs are
+        # unreachable — builders must raise DegradedInfeasibleError, which
+        # check_cell accepts (and would reject on a healthy fabric)
+        FailureMask(dead_segments=((0, 0), (1, 0), (0, n // 2), (1, n // 2))),
+    ]
+
+
+@pytest.mark.parametrize("coll", ALL_COLLECTIVES)
+def test_conformance_failure_masks(coll):
+    for n in (4, 5, 8, 16):
+        for mask in _failure_masks(n):
+            check_cell(coll, n, None, 8, None, "fast", failures=mask)
+            check_cell(coll, n, None, 8, 3, "fast", failures=mask)
+    # tree fan-outs and the reference RWA under the combined mask
+    mask = _failure_masks(16)[2]
+    if wrht.COLLECTIVES[coll].tree:
+        check_cell(coll, 16, 3, 8, None, "fast", failures=mask)
+    check_cell(coll, 13, None, 4, None, "reference", failures=mask)
+
+
+def test_empty_mask_is_healthy():
+    """FailureMask.empty must normalize to the healthy build bit-for-bit."""
+    healthy = wrht.build_collective_schedule("allreduce", 16, 8, 1e6)
+    masked = wrht.build_collective_schedule("allreduce", 16, 8, 1e6,
+                                            failures=FailureMask())
+    assert masked.failures is None
+    assert wrht.simulate_contributions(masked) == \
+        wrht.simulate_contributions(healthy)
+    assert masked.num_steps == healthy.num_steps
+
+
+def test_validator_rejects_failed_resources():
+    """Negative lane: a healthy schedule run against a mask that kills a
+    resource it uses must trip FailedResourceError — for each of the three
+    resource kinds (arc, λ, transceiver)."""
+    n = w = 8
+    sched = wrht.build_collective_schedule("allreduce", n, w, 1e6)
+    b = sched.steps[0].transfers
+    assert len(b), "first step unexpectedly empty"
+    lane, start, _hops = b.arcs(n)
+    # covered directed span of row 0
+    dead_arc = FailureMask(dead_segments=((int(lane[0]), int(start[0]) % n),))
+    with pytest.raises(FailedResourceError, match="dead fiber span"):
+        validate_no_conflicts(b, n, w, failures=dead_arc)
+    # the λ row 0 adds at its source
+    dead_lam = FailureMask(
+        dead_wavelengths=((int(b.src[0]), int(b.wavelength[0])),))
+    with pytest.raises(FailedResourceError, match="dead wavelength"):
+        validate_no_conflicts(b, n, w, failures=dead_lam)
+    # row 0's transmit-side transceiver
+    dead_trx = FailureMask(dead_transceivers=((int(b.src[0]), int(lane[0])),))
+    with pytest.raises(FailedResourceError, match="dead transceiver"):
+        validate_no_conflicts(b, n, w, failures=dead_trx)
+    # the degraded builder's own output never trips any of these
+    degraded = wrht.build_collective_schedule("allreduce", n, w, 1e6,
+                                              failures=dead_arc)
+    for step in degraded.steps:
+        validate_no_conflicts(step.transfers, n, w, failures=dead_arc)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis sweep (layer 1, randomized) — fast lane + scheduled deep lane
 # ---------------------------------------------------------------------------
 
@@ -271,6 +369,41 @@ if HAVE_HYPOTHESIS:
     @given(**_strategy)
     def test_conformance_hypothesis_deep(coll, n, m, w, max_hops, rwa):
         check_cell(coll, n, m, w, max_hops, rwa)
+
+    # randomized failure masks: raw draws are reduced mod (n, w) inside the
+    # test so the strategy stays independent of the drawn cell size
+    _fail_strategy = dict(
+        coll=st.sampled_from(ALL_COLLECTIVES),
+        n=st.integers(min_value=2, max_value=33),
+        w=st.sampled_from([2, 4, 8, 64]),
+        max_hops=st.one_of(st.none(), st.integers(min_value=2, max_value=8)),
+        segs=st.lists(st.tuples(st.integers(0, 1), st.integers(0, 99)),
+                      max_size=3),
+        lams=st.lists(st.tuples(st.integers(0, 99), st.integers(0, 63)),
+                      max_size=3),
+        trx=st.lists(st.tuples(st.integers(0, 99), st.integers(0, 1)),
+                     max_size=2),
+    )
+
+    def _mask_cell(coll, n, w, max_hops, segs, lams, trx):
+        mask = FailureMask(
+            dead_segments=tuple((l, s % n) for l, s in segs),
+            dead_wavelengths=tuple((v % n, lam % w) for v, lam in lams),
+            dead_transceivers=tuple((v % n, l) for v, l in trx))
+        check_cell(coll, n, None, w, max_hops, "fast", failures=mask)
+
+    @settings(max_examples=25, deadline=None)
+    @given(**_fail_strategy)
+    def test_conformance_failure_hypothesis(coll, n, w, max_hops, segs,
+                                            lams, trx):
+        _mask_cell(coll, n, w, max_hops, segs, lams, trx)
+
+    @pytest.mark.deep
+    @settings(max_examples=DEEP_EXAMPLES, deadline=None)
+    @given(**_fail_strategy)
+    def test_conformance_failure_hypothesis_deep(coll, n, w, max_hops, segs,
+                                                 lams, trx):
+        _mask_cell(coll, n, w, max_hops, segs, lams, trx)
 else:  # pragma: no cover - exercised only without hypothesis installed
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_conformance_hypothesis():
