@@ -1,0 +1,227 @@
+"""Pipelined multi-collective overlap: composed RS/AG interleavings vs the
+serial schedule sequence (DESIGN.md §13, EXPERIMENTS.md §Pipelined).
+
+Written to ``BENCH_pipeline.json`` by ``python -m benchmarks.bench_pipeline``:
+
+* ``overlap`` — one composed pipeline (``compose.build_pipeline_schedule``)
+  of ``depth`` alternating RS/AG ring passes at full payload, event-timed
+  against the sum of its constituents run serially, for ``N = 64..1024`` and
+  ``depth = 1..4``.  Records the fused/serialized slot split (how much of
+  the interleaving the fused-RWA pass actually accepted) and the overlap
+  win ``1 - composed/serial``.  depth=1 is the degenerate case and must
+  report exactly 0 win — the composed path is bit-identical to the plain
+  schedule there.
+* ``step`` — the end-to-end number: a model's gradient buckets synced
+  RS-down/AG-up per bucket (``planned_sharded``, serial) vs the
+  software-pipelined bucket stream (``planned_pipelined``) where bucket
+  k+1's RS rides the same composed schedule as bucket k's AG.  Pipelined
+  totals use the planner's own amortized model (composed total / depth per
+  constituent, 2 constituents per bucket), so the reduction shown is
+  exactly what ``planner.plan_buckets(depth=...)`` trades on.
+* ``planner`` — ``plan_buckets(collective="reduce_scatter", depth=...)``
+  on both backends: per-bucket composed-vs-serial gain and whether the
+  composed plan won (``detail["pipeline"]``), plus planning wall-clock.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the grid for the CI smoke run (the workflow uploads the
+JSON as an artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import compose, planner, step_models as sm, timing, wrht
+from repro.core.topology import PhysicalParams
+
+NS = (64, 256, 1024)
+QUICK_NS = (64,)
+DEPTHS = (1, 2, 3, 4)
+QUICK_DEPTHS = (1, 2)
+W = 64
+D_BITS = sm.PAPER_MODELS_BITS["ResNet50"]
+BUCKET_BITS = 32 * 2**20 * 8            # 32 MB buckets, in bits
+
+
+def _optical() -> sm.OpticalParams:
+    return sm.OpticalParams(wavelengths=W, physical=PhysicalParams())
+
+
+def _serial_total(n: int, d, p, depth: int) -> float:
+    """Sum of the pipeline's constituents each run as its own schedule."""
+    total = 0.0
+    for c in compose.pipeline_collectives("reduce_scatter", depth):
+        t = timing.collective_times(c, n, d, p, timing="event",
+                                    keep_per_step=False)
+        total += float(np.asarray(t.total_s)[0])
+    return total
+
+
+def measure_overlap(ns=NS, depths=DEPTHS) -> list[dict]:
+    p = _optical()
+    d = np.asarray([float(D_BITS)])
+    rows = []
+    for n in ns:
+        for depth in depths:
+            t0 = time.perf_counter()
+            composed = compose.build_pipeline_schedule(
+                "reduce_scatter", n, W, float(D_BITS), depth)
+            build_s = time.perf_counter() - t0
+            t = timing.collective_times("reduce_scatter", n, d, p,
+                                        timing="event", keep_per_step=False,
+                                        depth=depth)
+            composed_s = float(np.asarray(t.total_s)[0])
+            serial_s = _serial_total(n, d, p, depth)
+            rows.append({
+                "n": n, "depth": depth,
+                "composed_s": composed_s, "serial_s": serial_s,
+                "win": 1.0 - composed_s / serial_s,
+                "slots": composed.num_steps,
+                "serial_slots": composed.serial_steps,
+                "fused_slots": composed.fused_steps,
+                "slots_saved": composed.slots_saved,
+                "build_s": build_s,
+            })
+    return rows
+
+
+def _bucket_bits() -> list[float]:
+    """The model's gradient vector cut into 32 MB buckets (last one ragged)."""
+    n_buckets = math.ceil(D_BITS / BUCKET_BITS)
+    full = [float(BUCKET_BITS)] * (n_buckets - 1)
+    return full + [float(D_BITS - BUCKET_BITS * (n_buckets - 1))]
+
+
+def measure_step(ns=NS, depths=DEPTHS) -> list[dict]:
+    p = _optical()
+    rows = []
+    buckets = _bucket_bits()
+    for n in ns:
+        serial_total = 0.0
+        for b in buckets:
+            d = np.asarray([b])
+            for c in ("reduce_scatter", "all_gather"):
+                t = timing.collective_times(c, n, d, p, timing="event",
+                                            keep_per_step=False)
+                serial_total += float(np.asarray(t.total_s)[0])
+        for depth in depths:
+            if depth == 1:
+                pipe_total = serial_total
+            else:
+                pipe_total = 0.0
+                for b in buckets:
+                    d = np.asarray([b])
+                    t = timing.collective_times(
+                        "reduce_scatter", n, d, p, timing="event",
+                        keep_per_step=False, depth=depth)
+                    # each bucket contributes 2 constituents (RS + AG) at
+                    # the amortized composed rate — the planner's cost model
+                    pipe_total += 2.0 * float(np.asarray(t.total_s)[0]) / depth
+            rows.append({
+                "n": n, "depth": depth, "buckets": len(buckets),
+                "serial_step_s": serial_total, "pipelined_step_s": pipe_total,
+                "reduction": 1.0 - pipe_total / serial_total,
+            })
+    return rows
+
+
+def measure_planner(ns=NS, depths=DEPTHS) -> list[dict]:
+    rows = []
+    sizes = [b / 8 for b in _bucket_bits()]    # planner wants bytes
+    for backend in ("analytic", "simulated"):
+        for n in ns:
+            if backend == "simulated" and n > 256:
+                continue
+            for depth in depths:
+                t0 = time.perf_counter()
+                try:
+                    plans = planner.plan_buckets(
+                        n, sizes, backend=backend,
+                        collective="reduce_scatter", depth=depth)
+                except wrht.DegradedInfeasibleError as e:
+                    rows.append({"backend": backend, "n": n, "depth": depth,
+                                 "feasible": False, "reason": str(e)})
+                    continue
+                plan_s = time.perf_counter() - t0
+                pipe = [pl.detail.get("pipeline") for pl in plans]
+                rows.append({
+                    "backend": backend, "n": n, "depth": depth,
+                    "feasible": True, "plan_ms": 1e3 * plan_s,
+                    "composed_wins": sum(1 for q in pipe
+                                         if q and q.get("composed")),
+                    "buckets": len(plans),
+                    "gains": [round(q["gain"], 4) if q and "gain" in q
+                              else None for q in pipe],
+                })
+    return rows
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` CSV harness."""
+    out = []
+    for row in measure_overlap(ns=QUICK_NS, depths=QUICK_DEPTHS):
+        out.append({
+            "name": f"pipeline_overlap_n{row['n']}_d{row['depth']}",
+            "us_per_call": row["composed_s"] * 1e6,
+            "derived": {"win": round(row["win"], 4),
+                        "fused_slots": row["fused_slots"],
+                        "slots_saved": row["slots_saved"]},
+        })
+    for row in measure_step(ns=QUICK_NS, depths=QUICK_DEPTHS):
+        out.append({
+            "name": f"pipeline_step_n{row['n']}_d{row['depth']}",
+            "us_per_call": row["pipelined_step_s"] * 1e6,
+            "derived": {"reduction": round(row["reduction"], 4),
+                        "buckets": row["buckets"]},
+        })
+    return out
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    ns = QUICK_NS if quick else NS
+    depths = QUICK_DEPTHS if quick else DEPTHS
+    payload = {
+        "config": {
+            "wavelengths": W,
+            "d_bits": D_BITS,
+            "bucket_bits": BUCKET_BITS,
+            "timing": "event",
+            "pipeline": "alternating reduce_scatter/all_gather ring passes "
+                        "(compose.pipeline_collectives)",
+            "quick": quick,
+            "note": "overlap rows time ONE composed schedule vs its "
+                    "constituents run back-to-back; step rows amortize the "
+                    "composed total over its constituents (the planner's "
+                    "cost model) across the model's bucket stream, so the "
+                    "reduction is what planned_pipelined is costed to save "
+                    "over planned_sharded.  depth=1 must show win == 0: "
+                    "composition is bit-identical to the plain schedule.",
+        },
+        "overlap": measure_overlap(ns=ns, depths=depths),
+        "step": measure_step(ns=ns, depths=depths),
+        "planner": measure_planner(ns=ns, depths=depths),
+    }
+    out = Path(__file__).resolve().parents[1] / "BENCH_pipeline.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    for row in payload["overlap"]:
+        print(f"  N={row['n']:5d} depth={row['depth']}: "
+              f"composed {row['composed_s'] * 1e3:8.3f} ms vs serial "
+              f"{row['serial_s'] * 1e3:8.3f} ms  (win {row['win']:+.3f}, "
+              f"{row['fused_slots']}/{row['slots']} slots fused)")
+    for row in payload["step"]:
+        print(f"  step N={row['n']:5d} depth={row['depth']}: "
+              f"{row['pipelined_step_s'] * 1e3:8.3f} ms pipelined vs "
+              f"{row['serial_step_s'] * 1e3:8.3f} ms serial "
+              f"({row['reduction']:+.1%})")
+
+
+if __name__ == "__main__":
+    main()

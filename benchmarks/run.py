@@ -24,6 +24,10 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
                      re-plan latency vs injected failure count (full sweep
                      writes BENCH_degraded.json via
                      `python -m benchmarks.bench_degraded`)
+  pipeline           pipelined multi-collective overlap: composed RS/AG
+                     interleavings vs serial, overlap + end-to-end step
+                     reduction (full sweep writes BENCH_pipeline.json via
+                     `python -m benchmarks.bench_pipeline`)
 """
 
 from __future__ import annotations
@@ -37,6 +41,7 @@ def main() -> None:
         bench_collectives,
         bench_degraded,
         bench_insertion_loss,
+        bench_pipeline,
         bench_planner,
         bench_schedule_build,
         bench_sweep,
@@ -59,6 +64,7 @@ def main() -> None:
         "planner_batch": bench_planner,
         "collectives": bench_collectives,
         "degraded": bench_degraded,
+        "pipeline": bench_pipeline,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

@@ -156,7 +156,12 @@ class TrainConfig:
     fsdp: bool = False               # shard params/opt over the data axis
     # --- the paper's technique, first-class ---
     sync_algorithm: str = "auto"     # auto|psum|ring|rd|bt|wrht|hier_faithful|
-                                     # hier_scatter|planned|planned_sharded
+                                     # hier_scatter|planned|planned_sharded|
+                                     # planned_pipelined
+    # planned_pipelined only: buckets in flight between their RS and AG
+    # phases — bucket k+1's reduce-scatter is issued before bucket k's
+    # all-gather so the two ride one composed ring schedule (DESIGN.md §13)
+    pipeline_depth: int = 2
     # wire dtype for explicit gradient sync: f32 default (the XLA *CPU*
     # backend aborts on some bf16 collectives — see EXPERIMENTS §Perf-10);
     # set "bfloat16" on TPU for 2x fewer wire bytes

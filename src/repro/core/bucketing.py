@@ -111,3 +111,43 @@ def bucketed_apply_indexed(tree, apply_fn, spec: BucketSpec, sync_dtype=None):
     out = [apply_fn(b, b.size * b.dtype.itemsize, i)
            for i, b in enumerate(buckets)]
     return unflatten_buckets(out, spec, dtypes=dtypes)
+
+
+def bucketed_apply_pipelined(tree, rs_fn, ag_fn, spec: BucketSpec,
+                             depth: int = 2, sync_dtype=None):
+    """Two-phase bucket sync, software-pipelined over the buckets
+    (DESIGN.md §13): bucket ``i``'s first phase (reduce-scatter) is issued
+    *before* bucket ``i - depth + 1``'s second phase (all-gather) is
+    drained, so up to ``depth`` buckets sit between their phases at any
+    point in the issue order.
+
+    ``rs_fn(flat_bucket, bucket_bytes, i) -> (shard, ctx)`` runs the way
+    down; ``ag_fn(shard, ctx, bucket_bytes, i) -> flat_bucket`` the way
+    back up (``ctx`` is opaque carry, e.g. the pre-scatter lengths).  The
+    emitted HLO interleaves RS(k+1) with AG(k) as independent ops — the
+    issue order the composed ring schedule (``core.compose``) was costed
+    for — while per-bucket numerics are exactly the serial
+    ``ag_fn(*rs_fn(...))`` composition.
+
+    ``depth=1`` degenerates to the serial phase order of
+    :func:`bucketed_apply_indexed`.
+    """
+    if depth < 1:
+        raise ValueError("pipeline depth must be >= 1")
+    leaves = jax.tree.leaves(tree)
+    if tuple(tuple(l.shape) for l in leaves) != spec.leaf_shapes:
+        raise ValueError("tree leaves do not match the precomputed BucketSpec")
+    dtypes = [l.dtype for l in leaves]
+    buckets = flatten_to_buckets(tree, spec, dtype=sync_dtype)
+    nbytes = [b.size * b.dtype.itemsize for b in buckets]
+    out: list = [None] * len(buckets)
+    window: list[tuple[int, object, object]] = []
+    for i, b in enumerate(buckets):
+        shard, ctx = rs_fn(b, nbytes[i], i)
+        window.append((i, shard, ctx))
+        if len(window) >= depth:
+            j, shard, ctx = window.pop(0)
+            out[j] = ag_fn(shard, ctx, nbytes[j], j)
+    for j, shard, ctx in window:
+        out[j] = ag_fn(shard, ctx, nbytes[j], j)
+    return unflatten_buckets(out, spec, dtypes=dtypes)

@@ -46,11 +46,12 @@ import numpy as np
 from . import wrht
 from .topology import FailureMask, Ring
 
-# v3: PlanKey gained the `failures` mask (DESIGN.md §12) — the filename and
-# metadata carry its canonical fingerprint, so a degraded plan can never be
-# served for a healthy ring or vice versa.  v2 artifacts (no mask stamp)
-# are invisible under v3, as v1 (pre-collective) were under v2.
-SCHEMA_VERSION = 3
+# v4: PlanKey gained the `depth` pipeline axis (DESIGN.md §13) — depth>1
+# keys cache the *composed* schedule/profile of the depth-k collective
+# pipeline, so a pipelined plan can never be served for a depth-1 key or
+# vice versa.  v3 artifacts (no depth stamp) are invisible under v4, as v2
+# (no mask stamp) were under v3 and v1 (pre-collective) under v2.
+SCHEMA_VERSION = 4
 
 
 @dataclass(frozen=True)
@@ -66,7 +67,10 @@ class PlanKey:
     :class:`~repro.core.topology.FailureMask` the plan routes around
     (``None`` = healthy ring); the mask is canonical and hashable, so it
     rides in the key directly and its :meth:`fingerprint` stamps the
-    artifact filename.
+    artifact filename.  ``depth`` is the pipeline depth (DESIGN.md §13):
+    ``depth=1`` is the plain collective; ``depth>1`` caches the *composed*
+    schedule of the depth-k pipeline (``collective`` alternating with its
+    partner phase — RS↔AG — via ``compose.build_pipeline_schedule``).
     """
 
     n: int
@@ -77,12 +81,15 @@ class PlanKey:
     rwa: str = "fast"
     collective: str = "allreduce"
     failures: FailureMask | None = None
+    depth: int = 1
 
     def __post_init__(self) -> None:
         # an empty mask IS the healthy ring — normalize so both spellings
         # land on one cache entry and one artifact
         if self.failures is not None and self.failures.empty:
             object.__setattr__(self, "failures", None)
+        if self.depth < 1:
+            raise ValueError("pipeline depth must be >= 1")
 
     def failure_fingerprint(self) -> str:
         return "ok" if self.failures is None else self.failures.fingerprint()
@@ -92,7 +99,7 @@ class PlanKey:
         h = "inf" if self.max_hops is None else str(self.max_hops)
         return (f"{self.collective}-n{self.n}-w{self.w}-m{m}"
                 f"-a2a{int(self.alltoall)}-H{h}-{self.rwa}"
-                f"-F{self.failure_fingerprint()}"
+                f"-F{self.failure_fingerprint()}-D{self.depth}"
                 f".v{SCHEMA_VERSION}.npz")
 
     def meta(self) -> dict:
@@ -104,6 +111,7 @@ class PlanKey:
             "failure_fingerprint": self.failure_fingerprint(),
             "failures": (None if self.failures is None
                          else self.failures.to_lists()),
+            "depth": self.depth,
         }
 
 
@@ -168,24 +176,40 @@ class PlanCache:
     # lookups
     # ------------------------------------------------------------------
 
-    def _build_schedule(self, key: PlanKey) -> wrht.WRHTSchedule:
+    def _build_schedule(self, key: PlanKey):
         # payload-independent structure (the bits_override / payload-class
         # convention): build with d=1 and fully validate, exactly like the
-        # historical simulator._cached_wrht_schedule
+        # historical simulator._cached_wrht_schedule.  depth>1 keys build
+        # the composed pipeline (DESIGN.md §13): constituents are fully
+        # validated, then interleaved with fused RWA; the composed result
+        # is structurally validated (conflict-free fused batches, every
+        # constituent step present in order).
+        if key.depth > 1:
+            from . import compose
+
+            composed = compose.build_pipeline_schedule(
+                key.collective, key.n, key.w, 1.0, key.depth, m=key.m,
+                allow_alltoall=key.alltoall, validate=True, rwa=key.rwa,
+                max_hops=key.max_hops, failures=key.failures,
+            )
+            compose.validate_composed(composed)
+            return composed
         return wrht.build_collective_schedule(
             key.collective, key.n, key.w, 1.0, m=key.m,
             allow_alltoall=key.alltoall, validate=True, rwa=key.rwa,
             max_hops=key.max_hops, failures=key.failures,
         )
 
-    def _schedule_nostat(self, key: PlanKey) -> wrht.WRHTSchedule:
+    def _schedule_nostat(self, key: PlanKey):
         entry = self._touch(key)
         if entry["schedule"] is None:
             entry["schedule"] = self._build_schedule(key)
         return entry["schedule"]
 
-    def schedule(self, key: PlanKey) -> wrht.WRHTSchedule:
-        """The validated schedule for ``key`` (build + store on miss)."""
+    def schedule(self, key: PlanKey):
+        """The validated schedule for ``key`` (build + store on miss):
+        a :class:`~repro.core.wrht.WRHTSchedule`, or a
+        :class:`~repro.core.compose.ComposedSchedule` for depth>1 keys."""
         entry = self._touch(key)
         if entry["schedule"] is not None:
             self.stats.memory_hits += 1
@@ -220,13 +244,24 @@ class PlanCache:
         if prof is not None:
             return prof
         sched = self._schedule_nostat(key)
-        # the builder fully validated the schedule; the collective's payload
-        # accounting (constant full vector, or d/n chunks for the ring
-        # passes and the all-to-all) becomes the profile's payload class
-        divisors = wrht.COLLECTIVES[key.collective].payload_divisors(key.n)
-        prof = timing.ScheduleProfile.from_steps(
-            sched.steps, Ring(max(key.n, 2), key.w), validate=False,
-            classes=(timing.PayloadClass(divisors),))
+        ring = Ring(max(key.n, 2), key.w)
+        if key.depth > 1:
+            # composed pipeline: the fused step list compiles through the
+            # same profile machinery with the union of the constituents'
+            # payload classes (disk round-trip unchanged — the profile
+            # arrays are structure-only)
+            prof = timing.ScheduleProfile.from_composed(
+                sched, ring, validate=False)
+        else:
+            # the builder fully validated the schedule; the collective's
+            # payload accounting (constant full vector, or d/n chunks for
+            # the ring passes and the all-to-all) becomes the profile's
+            # payload class
+            divisors = wrht.COLLECTIVES[key.collective].payload_divisors(
+                key.n)
+            prof = timing.ScheduleProfile.from_steps(
+                sched.steps, ring, validate=False,
+                classes=(timing.PayloadClass(divisors),))
         self.put_profile(key, prof)
         return prof
 

@@ -214,6 +214,7 @@ def plan_bucket(
     optical: "object | None" = None,
     collective: str = "allreduce",
     failures: "object | None" = None,
+    depth: int = 1,
 ) -> Plan:
     """Return the minimum-cost schedule for one bucket on one device axis.
 
@@ -249,11 +250,15 @@ def plan_bucket(
     because its closed forms have no route notion; use the simulated
     backend when dead arcs/transceivers matter.
 
+    ``depth`` costs the depth-k composed pipeline against the serial
+    baseline (DESIGN.md §13) — see :func:`plan_buckets`.
+
     This is the one-bucket view of :func:`plan_buckets` — a single
     candidate-scan implementation serves both (DESIGN.md §10).
     """
     return plan_buckets(axis_size, [bytes_], params, m_candidates, allow,
-                        max_hops, backend, optical, collective, failures)[0]
+                        max_hops, backend, optical, collective, failures,
+                        depth)[0]
 
 
 def plan_buckets(
@@ -267,6 +272,7 @@ def plan_buckets(
     optical: "object | None" = None,
     collective: str = "allreduce",
     failures: "object | None" = None,
+    depth: int = 1,
 ) -> list[Plan]:
     """Plan a whole list of gradient-bucket sizes in one batched call.
 
@@ -288,10 +294,20 @@ def plan_buckets(
     The training stack calls this once at setup with every bucket size of
     the gradient partition (``repro.train.train_step.plan_gradient_sync``);
     warm calls hit the plan cache and skip both build and compile.
+
+    ``depth>1`` additionally costs the depth-k *composed pipeline*
+    (DESIGN.md §13: ``collective`` alternating with its partner phase —
+    RS↔AG — interleaved on one ring with fused RWA) against the serial
+    baseline (the sum of the constituents' serial best costs).  Buckets
+    where the composition wins get the amortized per-phase composed cost
+    and ``detail["pipeline"]["composed"]=True``; buckets where it does not
+    keep their serial plan, with the comparison recorded honestly.
     """
     if collective not in DEFAULT_STRATEGIES:
         raise ValueError(f"unknown collective {collective!r} "
                          f"(expected one of {sorted(DEFAULT_STRATEGIES)})")
+    if depth < 1:
+        raise ValueError("pipeline depth must be >= 1")
     p = params or CostParams.tpu_v5e()
     if failures is not None and failures.empty:
         failures = None
@@ -306,43 +322,49 @@ def plan_buckets(
     if allow is None:
         allow = DEFAULT_STRATEGIES[collective]
     if collective != "allreduce":
-        return _plan_buckets_collective(axis_size, b, p, m_candidates, allow,
-                                        max_hops, backend, optical, collective,
-                                        failures)
-    if backend == "simulated":
-        return _plan_buckets_simulated(axis_size, b, p, m_candidates, allow,
-                                       max_hops, optical, failures)
-    if backend != "analytic":
+        plans = _plan_buckets_collective(axis_size, b, p, m_candidates, allow,
+                                         max_hops, backend, optical,
+                                         collective, failures)
+    elif backend == "simulated":
+        plans = _plan_buckets_simulated(axis_size, b, p, m_candidates, allow,
+                                        max_hops, optical, failures)
+    elif backend != "analytic":
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'analytic' or 'simulated')")
-    best, consider = _bucket_argmin(b.size)
+    else:
+        best, consider = _bucket_argmin(b.size)
 
-    # candidate enumeration order matches plan_bucket exactly, so the
-    # strict-< update reproduces its first-argmin tie-breaking
-    if "flat" in allow:
-        consider(_t_flat_ring_arr(axis_size, b, p),
-                 lambda i, c: Plan("flat", c))
-    if "rd" in allow and axis_size & (axis_size - 1) == 0:
-        consider(_t_rd_arr(axis_size, b, p), lambda i, c: Plan("rd", c))
-    if "wrht_tree" in allow:
-        fan_out_cap = None if max_hops is None else 2 * max_hops + 1
-        for m in m_candidates:
-            if m < 2 or m > axis_size:
-                continue
-            if fan_out_cap is not None and m > fan_out_cap:
-                continue
-            for a2a in (True, False):
-                consider(
-                    _t_wrht_tree_arr(axis_size, b, p, m, a2a),
-                    lambda i, c, m=m, a2a=a2a: Plan("wrht_tree", c, m=m,
-                                                    alltoall=a2a))
-    if "hier_scatter" in allow:
-        for factors in _factorizations(axis_size):
-            consider(_t_hier_scatter_arr(factors, b, p),
-                     lambda i, c, f=factors: Plan("hier_scatter", c,
-                                                  factors=f))
-    assert all(pl is not None for pl in best)
-    return best
+        # candidate enumeration order matches plan_bucket exactly, so the
+        # strict-< update reproduces its first-argmin tie-breaking
+        if "flat" in allow:
+            consider(_t_flat_ring_arr(axis_size, b, p),
+                     lambda i, c: Plan("flat", c))
+        if "rd" in allow and axis_size & (axis_size - 1) == 0:
+            consider(_t_rd_arr(axis_size, b, p), lambda i, c: Plan("rd", c))
+        if "wrht_tree" in allow:
+            fan_out_cap = None if max_hops is None else 2 * max_hops + 1
+            for m in m_candidates:
+                if m < 2 or m > axis_size:
+                    continue
+                if fan_out_cap is not None and m > fan_out_cap:
+                    continue
+                for a2a in (True, False):
+                    consider(
+                        _t_wrht_tree_arr(axis_size, b, p, m, a2a),
+                        lambda i, c, m=m, a2a=a2a: Plan("wrht_tree", c, m=m,
+                                                        alltoall=a2a))
+        if "hier_scatter" in allow:
+            for factors in _factorizations(axis_size):
+                consider(_t_hier_scatter_arr(factors, b, p),
+                         lambda i, c, f=factors: Plan("hier_scatter", c,
+                                                      factors=f))
+        assert all(pl is not None for pl in best)
+        plans = best
+    if depth > 1 and axis_size > 1:
+        plans = _cost_pipelined(axis_size, b, p, params, plans, depth,
+                                m_candidates, max_hops, backend, optical,
+                                collective, failures)
+    return plans
 
 
 def _bucket_argmin(n_buckets: int):
@@ -361,6 +383,108 @@ def _bucket_argmin(n_buckets: int):
                 best[i] = make_plan(int(i), float(cost[i]))
 
     return best, consider
+
+
+def _cost_pipelined(
+    axis_size: int,
+    b: np.ndarray,
+    p: CostParams,
+    params: CostParams | None,
+    plans: list[Plan],
+    depth: int,
+    m_candidates: tuple[int, ...],
+    max_hops: int | None,
+    backend: str,
+    optical,
+    collective: str,
+    failures,
+) -> list[Plan]:
+    """Cost the depth-k composed pipeline against the serial baseline
+    (DESIGN.md §13) and adopt it per bucket where it wins.
+
+    Serial baseline: the sum of each constituent phase's serial best cost
+    (the partner phase is planned through the same backend).  Composed
+    cost: the fused timeline's total — exact via the flit-level engine on
+    the composed profile for the simulated backend; closed-form for the
+    analytic backend (``depth`` concurrent ring passes fuse in groups of
+    ``w = links // 2`` — each pass occupies one wavelength per fused slot —
+    so the pipeline costs ``⌈depth / w⌉`` serial passes; tree collectives
+    have no analytic overlap model and keep their serial plans).  The
+    adopted ``cost_s`` is the amortized per-phase share
+    ``composed_total / depth``; either way ``detail["pipeline"]`` records
+    the comparison.
+    """
+    from dataclasses import replace as _replace
+
+    from . import compose
+
+    colls = compose.pipeline_collectives(collective, depth)
+    serial = np.asarray([pl.cost_s for pl in plans], dtype=np.float64)
+    by_coll = {colls[0]: serial}
+    for c in dict.fromkeys(colls[1:]):
+        if c in by_coll:
+            continue
+        # the ORIGINAL params go back in — plan_buckets re-applies the
+        # analytic mask shrink itself, so passing the shrunk `p` would
+        # double-count the λ loss
+        by_coll[c] = np.asarray(
+            [pl.cost_s for pl in plan_buckets(
+                axis_size, b, params, m_candidates, None, max_hops, backend,
+                optical, c, failures)], dtype=np.float64)
+    serial_sum = np.sum([by_coll[c] for c in colls], axis=0)
+
+    composed_total = None
+    reason = None
+    ring_pass_only = all(c in ("reduce_scatter", "all_gather")
+                         for c in colls)
+    if backend == "simulated":
+        from . import step_models, timing, wrht
+        from .wavelength import InsertionLossError, WavelengthConflictError
+
+        opt = optical or step_models.OpticalParams.from_cost(
+            p.alpha_s, p.link_bw_Bps, p.links
+        )
+        if max_hops is None and opt.physical is not None:
+            max_hops = opt.physical.max_hops
+        try:
+            composed_total = timing.collective_times(
+                collective, axis_size, b * 8, opt, opt.timing,
+                max_hops=max_hops, keep_per_step=False, failures=failures,
+                depth=depth).total_s
+        except (InsertionLossError, WavelengthConflictError,
+                wrht.DegradedInfeasibleError) as e:
+            reason = f"composed pipeline infeasible: {e}"
+    elif ring_pass_only:
+        w = max(1, p.links // 2)
+        composed_total = (math.ceil(depth / w)
+                          * _t_ring_pass_arr(axis_size, b, p))
+    else:
+        reason = ("analytic backend has no overlap model for "
+                  f"constituents {sorted(set(colls))}")
+
+    out = []
+    for i, pl in enumerate(plans):
+        info = {
+            "depth": depth,
+            "constituents": list(colls),
+            "serial_s": float(serial_sum[i]),
+            "composed_s": (None if composed_total is None
+                           else float(composed_total[i])),
+        }
+        if reason is not None:
+            info["reason"] = reason
+        detail = dict(pl.detail)
+        if composed_total is not None and composed_total[i] < serial_sum[i]:
+            info["composed"] = True
+            info["gain"] = 1.0 - float(composed_total[i]) / float(serial_sum[i])
+            detail["pipeline"] = info
+            out.append(_replace(pl, cost_s=float(composed_total[i]) / depth,
+                                detail=detail))
+        else:
+            info["composed"] = False
+            detail["pipeline"] = info
+            out.append(_replace(pl, detail=detail))
+    return out
 
 
 def _plan_buckets_simulated(

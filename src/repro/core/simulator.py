@@ -168,7 +168,16 @@ def simulate_steps_event(
     if overlap:
         # the barrier execution is always admissible, so the makespan is
         # capped by the lock-step total; min() also pins the `event <=
-        # lockstep` invariant exactly under FP accumulation-order noise
+        # lockstep` invariant exactly under FP accumulation-order noise.
+        # Clamp audit for composed schedules (DESIGN.md §13): `ser` sums
+        # the maxes of the steps as GIVEN — for a ComposedSchedule that is
+        # the FUSED timeline (both collectives' transfers inside one
+        # step), so the cap is the composition's own barrier execution,
+        # not the serial sum of the constituents' lockstep totals.  The
+        # cross-schedule credit (B's reconfiguration under A's
+        # communication) lives inside each fused step and survives the
+        # clamp; tests/test_compose.py pins the three engines' agreement
+        # on the serial path and `overlap <= event == lockstep` composed.
         lockstep_total = ser + len(steps) * ring.reconfig_delay_s
         return SimResult(
             algorithm=name, n=ring.n, d_bits=d_bits, steps=len(steps),
@@ -474,3 +483,35 @@ def run_collective(
     bits = d_bits / n if spec.chunked else d_bits
     return _simulate(name, sched.steps, ring, d_bits, timing,
                      validate=False, bits_override=bits)
+
+
+def simulate_composed(
+    composed,
+    d_bits: float,
+    p: step_models.OpticalParams | None = None,
+    timing: str | None = None,
+    validate: bool = False,
+) -> SimResult:
+    """Per-point timing of a :class:`~repro.core.compose.ComposedSchedule`
+    (DESIGN.md §13) — the scalar counterpart of
+    :meth:`~repro.core.timing.ScheduleProfile.from_composed`.
+
+    The fused timeline runs through the unchanged engines with
+    ``bits_override=None``: composed steps mix payload classes (an RS
+    chunk under a broadcast full vector), so every transfer times at its
+    own build-time bits — the constituents must therefore have been built
+    at this ``d_bits``.  With ``timing="overlap"`` the per-node readiness
+    recurrence grants the SWOT-style credit across constituents: one
+    schedule's reconfiguration hides under the other's communication
+    inside each fused step (see the clamp-audit note in
+    :func:`simulate_steps_event`).
+    """
+    p = p or step_models.OpticalParams()
+    timing = timing or p.timing
+    ring = Ring(max(composed.n, 2), composed.w,
+                bandwidth_bps=p.bandwidth_bps,
+                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical,
+                failures=composed.failures)
+    name = "composed:" + "+".join(s.collective for s in composed.schedules)
+    return _simulate(name, composed.as_steps(), ring, d_bits, timing,
+                     validate=validate, bits_override=None)

@@ -260,6 +260,49 @@ class ScheduleProfile:
         self.scatter_dst = None
         return self
 
+    @classmethod
+    def from_composed(
+        cls,
+        composed,
+        ring: Ring,
+        classes: "tuple[PayloadClass, ...] | None" = None,
+        d_ref: float = 1.0,
+        validate: bool = False,
+        seg_cache: dict | None = None,
+    ) -> "ScheduleProfile":
+        """Compile a :class:`~repro.core.compose.ComposedSchedule`
+        (DESIGN.md §13) through the same machinery as :meth:`from_steps`.
+
+        The fused timeline becomes the step list — so the event engine's
+        barrier recurrence and the overlap engine's per-node readiness
+        recurrence apply unchanged, and the SWOT-style credit (schedule
+        B's reconfiguration hiding under schedule A's communication) falls
+        out of the recurrence because both schedules' transfers share each
+        fused step.  ``classes`` defaults to the union of the
+        constituents' payload classes (deduplicated, order-preserving);
+        all constituents must have been built at the same payload
+        reference ``d_ref`` so the exact-bits class matching of
+        :meth:`from_steps` resolves (the plan cache's d-independent
+        ``d=1`` builds satisfy this by construction).
+
+        Single-part slots reuse the constituent's original ``Step``
+        objects, so the identity-keyed segment dedup still collapses a
+        ring pass's shared batch — and a depth-1 composition compiles to a
+        profile bit-identical to the uncomposed schedule's
+        (``tests/test_compose.py``).
+        """
+        if classes is None:
+            seen: list[PayloadClass] = []
+            for s in composed.schedules:
+                c = PayloadClass(
+                    wrht.COLLECTIVES[s.collective].payload_divisors(s.n))
+                if all(c.divisors != o.divisors for o in seen):
+                    seen.append(c)
+            classes = tuple(seen)
+        return cls.from_steps(composed.as_steps(), ring, classes=classes,
+                              d_ref=d_ref, validate=validate,
+                              seg_cache=seg_cache)
+
     def _ensure_scatters(self) -> None:
         if self.scatter_src is not None:
             return
@@ -427,6 +470,16 @@ class ScheduleProfile:
                 t_prev = t
             ser += rx_max
         reconfig = np.full(D, self.num_steps * a)
+        # Clamp audit (DESIGN.md §13): the cap is the lockstep total of
+        # THIS step sequence — for a composed schedule that is the fused
+        # timeline's barrier execution (Σ fused-step maxes + S·a), which is
+        # always an admissible execution of the composition, NOT the sum of
+        # the constituents' per-schedule lockstep totals.  Cross-schedule
+        # overlap (B's reconfiguration hiding under A's communication)
+        # lives inside each fused step and is therefore never clamped
+        # away; by induction per-node readiness can only exceed the
+        # barrier clock through FP accumulation noise, which is all the
+        # min() removes (regression: tests/test_compose.py).
         event_total = np.minimum(ready.max(axis=0), ser + self.num_steps * a)
         return BatchedTimes(
             n=self.n, steps=self.num_steps,
@@ -540,17 +593,18 @@ def _ring_of(n: int, p: step_models.OpticalParams) -> Ring:
 def _collective_profile(
     collective: str, n: int, p: step_models.OpticalParams, m: int | None,
     allow_alltoall: bool = True, max_hops: int | None = None,
-    failures: FailureMask | None = None,
+    failures: FailureMask | None = None, depth: int = 1,
 ) -> ScheduleProfile:
     """Any scheduled collective's profile via the two-tier plan cache
     (DESIGN.md §10, §11).
 
     The cache key is the d-independent structure ``(collective, n, w, m,
-    alltoall, max_hops, rwa)`` — deliberately *not* the whole
+    alltoall, max_hops, rwa, depth)`` — deliberately *not* the whole
     ``OpticalParams``: bandwidth/reconfiguration only enter at evaluation
     time, so every parameter flavour shares one compiled profile.  ``(m,
     alltoall)`` are normalized per collective so keys never fragment on
-    axes the collective does not have.
+    axes the collective does not have.  ``depth>1`` yields the composed
+    pipeline's profile (DESIGN.md §13).
     """
     from . import plan_cache
 
@@ -561,7 +615,7 @@ def _collective_profile(
     hops = ring.max_hops if max_hops is None else max_hops
     return plan_cache.get_default().profile(plan_cache.PlanKey(
         n=n, w=p.wavelengths, m=m, alltoall=allow_alltoall, max_hops=hops,
-        collective=collective, failures=failures))
+        collective=collective, failures=failures, depth=depth))
 
 
 def _wrht_profile(
@@ -633,12 +687,19 @@ def collective_times(
     timing: str = "lockstep", m: int | None = None,
     allow_alltoall: bool = True, max_hops: int | None = None,
     keep_per_step: bool = True, failures: FailureMask | None = None,
+    depth: int = 1,
 ) -> BatchedTimes:
     """Batched timing of any scheduled collective over a payload grid
     (DESIGN.md §11): the profile comes from the plan cache (one compile per
     d-independent structure), the grid evaluates through the same three
     engines as all-reduce, and every number is bit-identical to the
     per-point :func:`repro.core.simulator.run_collective`.
+
+    ``depth>1`` times the composed depth-k pipeline of the collective
+    (alternating with its partner phase — RS↔AG — DESIGN.md §13); the
+    total then covers all ``depth`` concurrent phases at payload ``d``
+    *each*, to be compared against the sum of the constituents' serial
+    totals.
 
     Infeasible collectives raise like the builders do — a single-step
     all-to-all beyond the wavelength or hop budget is an error here, not a
@@ -648,9 +709,10 @@ def collective_times(
     p = p or step_models.OpticalParams()
     ring = _ring_of(n, p)
     prof = _collective_profile(collective, n, p, m, allow_alltoall, max_hops,
-                               failures)
+                               failures, depth=depth)
+    label = collective if depth == 1 else f"{collective}:pipe{depth}"
     return _with_meta(prof.evaluate(ring, d_bits, timing, keep_per_step),
-                      collective)
+                      label)
 
 
 def bt_times(n: int, d_bits, p: step_models.OpticalParams,

@@ -28,6 +28,15 @@ Gradient-sync modes (``TrainConfig.sync_algorithm``):
                 all-reduce's per-step full vector.  Both phases are planned
                 per bucket through ``planner.plan_buckets(collective=...)``
                 (ring pass vs the single-step all-to-all finisher).
+  planned_pipelined
+                planned_sharded with the bucket loop software-pipelined
+                (DESIGN.md §13): bucket k+1's reduce-scatter is issued
+                before bucket k's all-gather is drained
+                (``bucketing.bucketed_apply_pipelined``), so the two ride
+                one composed ring schedule (``core.compose``) — the planner
+                costs the interleaving via ``plan_buckets(depth=...)`` and
+                the RS+AG pair fuses onto disjoint wavelengths.  Per-bucket
+                numerics are identical to planned_sharded.
 
 ``compress_pod_axis`` swaps the pod level for int8+error-feedback recursive
 doubling (cross-pod links are the scarce resource at 512+ chips).
@@ -52,7 +61,12 @@ from repro.models import api as mapi
 from repro.optim import adamw_init, adamw_update, make_lr_schedule
 
 MANUAL_ALGOS = ("psum", "ring", "rd", "bt", "wrht", "hier_faithful",
-                "hier_scatter", "planned", "planned_sharded")
+                "hier_scatter", "planned", "planned_sharded",
+                "planned_pipelined")
+
+# modes that plan per-(axis, bucket) RS/AG schedules at setup and support
+# the no-retrace online re-plan path (SyncController)
+SHARDED_ALGOS = ("planned_sharded", "planned_pipelined")
 
 
 def _dtype(name: str):
@@ -107,7 +121,8 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
                        cost: planner.CostParams | None = None,
                        backend: str = "analytic",
                        sharded: bool = False,
-                       failures=None) -> GradSyncPlans:
+                       failures=None,
+                       depth: int = 1) -> GradSyncPlans:
     """Partition the gradient pytree into size-capped buckets and plan every
     bucket's schedule for every DP axis in one batched planner call.
 
@@ -128,6 +143,12 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
     ring (:class:`~repro.core.topology.FailureMask`, DESIGN.md §12) — the
     online re-plan path (:class:`SyncController`) calls back in here with
     the mask the watchdog/injector reported.
+
+    ``depth > 1`` (``"planned_pipelined"``) costs each reduce-scatter plan
+    against its composed RS+AG interleaving (``core.compose``, DESIGN.md
+    §13): winning buckets carry ``detail["pipeline"]`` with the measured
+    composed-vs-serial gain, and their ``cost_s`` is the amortized
+    per-constituent share of the composed total.
     """
     spec = bucketing.plan_buckets(grads, tc.bucket_bytes)
     itemsize = jnp.dtype(_dtype(tc.sync_dtype)).itemsize
@@ -147,7 +168,7 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
         size = mesh.shape[ax]
         rs_plans[ax] = tuple(planner.plan_buckets(
             size, shard_bytes, cost, backend=backend,
-            collective="reduce_scatter", failures=failures))
+            collective="reduce_scatter", failures=failures, depth=depth))
         ag_plans[ax] = tuple(planner.plan_buckets(
             size, shard_bytes, cost, backend=backend,
             collective="all_gather", failures=failures))
@@ -225,15 +246,12 @@ def _dispatch_ag_dyn(shard, axis, size, code):
                     shard)
 
 
-def _sharded_sync_axes(flat, axes, sizes, plans: GradSyncPlans, i,
-                       codes=None):
-    """RS down the DP axes, AG back up: between the phases every device
-    holds only its owned shard of the bucket (ZeRO-style, DESIGN.md §11).
-    The ring bodies pad internally; the all-gather returns the padded
-    length, so each level slices back to the length it scattered.
-
-    ``codes`` (the :meth:`SyncController.arrays` pytree) switches bucket
-    dispatch to the traced strategy codes — the no-retrace re-plan path."""
+def _sharded_rs_axes(flat, axes, sizes, plans: GradSyncPlans, i,
+                     codes=None):
+    """The way down of the sharded sync (DESIGN.md §11): reduce-scatter
+    bucket ``i`` over every DP axis, innermost first.  Returns the owned
+    shard plus the pre-scatter lengths the all-gather needs to slice
+    padding back off."""
     lengths = []
     for ax in axes:
         lengths.append(flat.shape[0])
@@ -241,6 +259,14 @@ def _sharded_sync_axes(flat, axes, sizes, plans: GradSyncPlans, i,
             flat = _dispatch_rs_dyn(flat, ax, sizes[ax], codes[f"rs:{ax}"][i])
         else:
             flat = _dispatch_rs(flat, ax, sizes[ax], plans.rs_plans[ax][i])
+    return flat, lengths
+
+
+def _sharded_ag_axes(flat, lengths, axes, sizes, plans: GradSyncPlans, i,
+                     codes=None):
+    """The way back up: all-gather bucket ``i``'s shard over the DP axes in
+    reverse, slicing each level back to the length it scattered (the ring
+    bodies pad internally)."""
     for ax, length in zip(reversed(axes), reversed(lengths)):
         if codes is not None:
             flat = _dispatch_ag_dyn(flat, ax, sizes[ax], codes[f"ag:{ax}"][i])
@@ -250,9 +276,24 @@ def _sharded_sync_axes(flat, axes, sizes, plans: GradSyncPlans, i,
     return flat
 
 
+def _sharded_sync_axes(flat, axes, sizes, plans: GradSyncPlans, i,
+                       codes=None):
+    """RS down the DP axes, AG back up: between the phases every device
+    holds only its owned shard of the bucket (ZeRO-style, DESIGN.md §11).
+
+    ``codes`` (the :meth:`SyncController.arrays` pytree) switches bucket
+    dispatch to the traced strategy codes — the no-retrace re-plan path.
+
+    ``"planned_pipelined"`` runs the same two halves but staggered across
+    buckets (:func:`bucketing.bucketed_apply_pipelined`), so per-bucket
+    numerics are identical between the two modes."""
+    flat, lengths = _sharded_rs_axes(flat, axes, sizes, plans, i, codes=codes)
+    return _sharded_ag_axes(flat, lengths, axes, sizes, plans, i, codes=codes)
+
+
 class SyncController:
-    """Online re-planner for the ``planned_sharded`` gradient sync
-    (DESIGN.md §12).
+    """Online re-planner for the ``planned_sharded`` / ``planned_pipelined``
+    gradient sync (DESIGN.md §12).
 
     Owns the current :class:`GradSyncPlans` and publishes it as a pytree of
     replicated int32 *strategy-code* arrays (one per DP axis and phase,
@@ -275,11 +316,16 @@ class SyncController:
         self._mesh = mesh
         self._cost = cost
         self._backend = backend
+        # planned_pipelined plans each bucket against its composed RS+AG
+        # interleaving (DESIGN.md §13); planned_sharded costs serially
+        self.depth = (tc.pipeline_depth
+                      if tc.sync_algorithm == "planned_pipelined" else 1)
         self.failures = None
         self.last_replan_s: float | None = None
         self.replan_count = 0
         self.plans = plan_gradient_sync(abstract_grads, tc, mesh, cost,
-                                        backend, sharded=True)
+                                        backend, sharded=True,
+                                        depth=self.depth)
 
     def arrays(self) -> dict:
         """The current plan as traced jit inputs: ``{"rs:<axis>"|"ag:<axis>"
@@ -303,7 +349,7 @@ class SyncController:
         t0 = time.perf_counter()
         plans = plan_gradient_sync(self._grads, self._tc, self._mesh,
                                    self._cost, self._backend, sharded=True,
-                                   failures=failure_mask)
+                                   failures=failure_mask, depth=self.depth)
         self.last_replan_s = time.perf_counter() - t0
         self.plans = plans
         self.failures = failure_mask
@@ -336,7 +382,8 @@ def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None,
     schedule choices for the ``"planned"`` mode; when absent they are
     derived on the spot (plan-cache-warm, but re-done per trace).
 
-    ``plan_codes`` (``"planned_sharded"`` only) is the traced strategy-code
+    ``plan_codes`` (the sharded modes, :data:`SHARDED_ALGOS`) is the traced
+    strategy-code
     pytree of :meth:`SyncController.arrays`: bucket dispatch switches to
     ``lax.cond`` on the codes so a re-plan swaps schedules without a
     retrace (DESIGN.md §12)."""
@@ -400,6 +447,24 @@ def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None,
         grads = jax.tree.map(lambda g: g / total, grads)
         return grads, new_ef
 
+    elif alg == "planned_pipelined":
+        plans = sync_plans or plan_gradient_sync(
+            grads, tc, mesh, sharded=True, depth=tc.pipeline_depth)
+
+        def rs_fn(flat, nbytes, i):
+            return _sharded_rs_axes(flat, axes, sizes, plans, i,
+                                    codes=plan_codes)
+
+        def ag_fn(shard, lengths, nbytes, i):
+            return _sharded_ag_axes(shard, lengths, axes, sizes, plans, i,
+                                    codes=plan_codes)
+
+        grads = bucketing.bucketed_apply_pipelined(
+            grads, rs_fn, ag_fn, plans.spec, depth=tc.pipeline_depth,
+            sync_dtype=_dtype(tc.sync_dtype))
+        grads = jax.tree.map(lambda g: g / total, grads)
+        return grads, new_ef
+
     else:
         def bucket_fn(flat, nbytes):
             for ax in axes:
@@ -449,7 +514,8 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     auto mode: call under jit with sharded args.  Manual modes: the returned
     function already wraps shard_map over the DP axes; jit it directly.
 
-    For ``"planned_sharded"`` the returned function additionally accepts an
+    For the sharded modes (``"planned_sharded"`` / ``"planned_pipelined"``)
+    the returned function additionally accepts an
     optional third argument ``plan_codes`` — the traced strategy-code pytree
     of :meth:`SyncController.arrays` — and carries the controller as a
     ``.controller`` attribute.  Feeding ``controller.replan(mask)``'s arrays
@@ -465,14 +531,14 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     # just dispatches bucket i to its precomputed plan (DESIGN.md §10)
     sync_plans = None
     controller = None
-    if (tc.sync_algorithm in ("planned", "planned_sharded")
+    if (tc.sync_algorithm in ("planned",) + SHARDED_ALGOS
             and mesh is not None and dp_axes_of(mesh)):
         g_dtype = _dtype(tc.grad_accum_dtype if tc.microbatches > 1
                          else tc.param_dtype)
         abstract_params = abstract_train_state(cfg, tc)["params"]
         abstract_grads = jax.tree.map(
             lambda p: jax.ShapeDtypeStruct(p.shape, g_dtype), abstract_params)
-        if tc.sync_algorithm == "planned_sharded":
+        if tc.sync_algorithm in SHARDED_ALGOS:
             controller = SyncController(abstract_grads, tc, mesh)
             sync_plans = controller.plans
         else:

@@ -87,8 +87,9 @@ class Trainer:
         traced inputs of the already-compiled step."""
         if self.controller is None:
             raise RuntimeError(
-                "replan() needs the online re-plan controller — only "
-                "sync_algorithm='planned_sharded' builds one")
+                "replan() needs the online re-plan controller — only the "
+                "sharded modes (sync_algorithm='planned_sharded' or "
+                "'planned_pipelined') build one")
         self._plan_codes = self.controller.replan(failure_mask)
         log.warning("re-planned gradient sync (mask=%s, %.1f ms)",
                     self.controller.failures,

@@ -30,7 +30,7 @@ import numpy as np
 import pytest
 
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
-from repro.core import wrht
+from repro.core import compose, wrht
 from repro.core.topology import FailureMask, Ring
 from repro.core.wavelength import (
     FailedResourceError,
@@ -79,7 +79,6 @@ def interpret_schedule(sched: wrht.WRHTSchedule) -> dict:
 def check_cell(collective: str, n: int, m: int | None, w: int,
                max_hops: int | None, rwa: str, d: float = 1e6,
                failures: FailureMask | None = None) -> None:
-    spec = wrht.COLLECTIVES[collective]
     degraded = failures is not None and not failures.empty
     try:
         sched = wrht.build_collective_schedule(
@@ -102,6 +101,19 @@ def check_cell(collective: str, n: int, m: int | None, w: int,
         assert not degraded
         assert n // 2 > max_hops
         return
+    check_schedule(sched, collective, n, w, max_hops=max_hops, d=d,
+                   failures=failures)
+
+
+def check_schedule(sched: wrht.WRHTSchedule, collective: str, n: int, w: int,
+                   max_hops: int | None = None, d: float = 1e6,
+                   failures: FailureMask | None = None) -> None:
+    """Layers 1+2 against an already-built schedule — factored out of
+    :func:`check_cell` so composed constituent views
+    (:meth:`~repro.core.compose.ComposedSchedule.constituent_view`) run
+    through the *identical* oracle machinery as plain schedules."""
+    spec = wrht.COLLECTIVES[collective]
+    degraded = failures is not None and not failures.empty
 
     # ---- structural: RWA + hop budget + wavelength budget + failure mask
     ring = Ring(max(n, 2), w)
@@ -344,6 +356,78 @@ def test_validator_rejects_failed_resources():
 
 
 # ---------------------------------------------------------------------------
+# composed lane: interleaved schedules still satisfy every constituent oracle
+# ---------------------------------------------------------------------------
+# The composer (DESIGN.md §13) re-assigns wavelengths on fused slots but must
+# never change what data moves where: each constituent view of a composed
+# pipeline is run through the *same* check_schedule machinery as a plain
+# build — structural RWA under the mask, payload accounting, the naive oracle
+# AND the vectorized differential, per collective.
+
+def check_composed_cell(start: str, n: int, w: int, depth: int,
+                        max_hops: int | None = None, d: float = 1e6,
+                        failures: FailureMask | None = None,
+                        offsets: tuple | None = None) -> None:
+    degraded = failures is not None and not failures.empty
+    colls = compose.pipeline_collectives(start, depth)
+    try:
+        composed = compose.build_pipeline_schedule(
+            start, n, w, d, depth, max_hops=max_hops, failures=failures,
+            offsets=offsets)
+    except wrht.DegradedInfeasibleError:
+        assert degraded
+        return
+    except WavelengthConflictError:
+        assert "alltoall" in colls and not degraded
+        return
+    except InsertionLossError:
+        assert "alltoall" in colls and max_hops is not None
+        assert not degraded
+        return
+    compose.validate_composed(composed)
+    assert composed.depth == depth
+    assert composed.num_steps <= composed.serial_steps
+    for j, coll in enumerate(colls):
+        check_schedule(composed.constituent_view(j), coll, n, w,
+                       max_hops=max_hops, d=d, failures=failures)
+
+
+@pytest.mark.parametrize("start", ALL_COLLECTIVES)
+def test_composed_conformance_sweep(start):
+    for n in (2, 3, 5, 8, 16):
+        for w in (1, 2, 8, 64):
+            for depth in (1, 2, 3, 4):
+                check_composed_cell(start, n, w, depth)
+    # staggered starts (the bucket pipeline's ramp-up shape)
+    check_composed_cell(start, 8, 8, 3, offsets=(0, 1, 2))
+    # hop-budgeted fusion
+    check_composed_cell(start, 16, 8, 2, max_hops=3)
+
+
+def test_composed_heterogeneous_mix_conformance():
+    """A mix the partner map never produces — a reduce-scatter with a
+    broadcast prefetch riding the same ring — still satisfies both
+    constituent oracles after interleaving."""
+    n, w, d = 13, 8, 1e6
+    rs = wrht.build_collective_schedule("reduce_scatter", n, w, d)
+    bc = wrht.build_collective_schedule("broadcast", n, w, d)
+    composed = compose.compose_schedules([rs, bc])
+    compose.validate_composed(composed)
+    check_schedule(composed.constituent_view(0), "reduce_scatter", n, w, d=d)
+    check_schedule(composed.constituent_view(1), "broadcast", n, w, d=d)
+
+
+@pytest.mark.parametrize("start", ("reduce_scatter", "all_gather",
+                                   "broadcast"))
+def test_composed_conformance_failure_masks(start):
+    for n in (4, 8, 16):
+        for mask in _failure_masks(n):
+            check_composed_cell(start, n, 8, 2, failures=mask)
+    check_composed_cell(start, 16, 8, 3,
+                        failures=_failure_masks(16)[2])
+
+
+# ---------------------------------------------------------------------------
 # hypothesis sweep (layer 1, randomized) — fast lane + scheduled deep lane
 # ---------------------------------------------------------------------------
 
@@ -404,6 +488,32 @@ if HAVE_HYPOTHESIS:
     def test_conformance_failure_hypothesis_deep(coll, n, w, max_hops, segs,
                                                  lams, trx):
         _mask_cell(coll, n, w, max_hops, segs, lams, trx)
+
+    # randomized composed pipelines: (start, n, w, depth, stagger) cells,
+    # each constituent view re-checked by its own oracle after interleaving
+    _composed_strategy = dict(
+        start=st.sampled_from(ALL_COLLECTIVES),
+        n=st.integers(min_value=2, max_value=17),
+        w=st.sampled_from([1, 2, 4, 8, 64]),
+        depth=st.integers(min_value=1, max_value=4),
+        stagger=st.booleans(),
+    )
+
+    def _composed_cell(start, n, w, depth, stagger):
+        offsets = tuple(range(depth)) if stagger else None
+        check_composed_cell(start, n, w, depth, offsets=offsets)
+
+    @settings(max_examples=25, deadline=None)
+    @given(**_composed_strategy)
+    def test_composed_conformance_hypothesis(start, n, w, depth, stagger):
+        _composed_cell(start, n, w, depth, stagger)
+
+    @pytest.mark.deep
+    @settings(max_examples=DEEP_EXAMPLES, deadline=None)
+    @given(**_composed_strategy)
+    def test_composed_conformance_hypothesis_deep(start, n, w, depth,
+                                                  stagger):
+        _composed_cell(start, n, w, depth, stagger)
 else:  # pragma: no cover - exercised only without hypothesis installed
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_conformance_hypothesis():

@@ -1,0 +1,345 @@
+"""Composed-schedule differential-timing harness (DESIGN.md §13).
+
+Three pillars, mirroring the composer's contract:
+
+1. **Degeneracy** — a depth-1 composition is the uncomposed schedule:
+   bit-identical compiled profile (identity-keyed segment dedup preserved),
+   bit-identical totals through every engine.
+2. **Differential timing** — a composed pipeline never times worse than its
+   constituents run serially, on any engine; a λ-infeasible interleaving
+   (w=1) serializes completely and then times *exactly* like the serial
+   sequence on the barrier engines — the three-engine agreement regression
+   for the overlap clamp audit (see the comment blocks in
+   ``timing.ScheduleProfile.evaluate`` / ``simulator.simulate_steps_event``).
+3. **Fused RWA** — every fused slot's union batch is conflict-free under
+   the composed budget and failure mask, and the serialization fallback
+   only triggers when the fused assignment genuinely cannot exist.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import compose, simulator, step_models as sm, timing, wrht
+from repro.core.timing import PayloadClass
+from repro.core.topology import FailureMask, Ring
+from repro.core.wavelength import (
+    FailedResourceError,
+    WavelengthConflictError,
+    first_fit_assign,
+    validate_no_conflicts,
+)
+
+D = 1e6
+MODES = ("lockstep", "event", "overlap")
+
+
+def _params(w: int) -> sm.OpticalParams:
+    return sm.OpticalParams(wavelengths=w)
+
+
+def _profiles_equal(a, b) -> bool:
+    meta_a, arr_a = timing.profile_to_arrays(a)
+    meta_b, arr_b = timing.profile_to_arrays(b)
+    return meta_a == meta_b and all(
+        np.array_equal(arr_a[k], arr_b[k]) for k in arr_a)
+
+
+def _ring(n: int, w: int, p: sm.OpticalParams) -> Ring:
+    return Ring(max(n, 2), w, bandwidth_bps=p.bandwidth_bps,
+                reconfig_delay_s=p.reconfig_delay_s, physical=p.physical)
+
+
+# ---------------------------------------------------------------------------
+# degeneracy: depth-1 composition == the plain schedule, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("coll", ("reduce_scatter", "all_gather",
+                                  "broadcast"))
+def test_depth1_composition_bit_identical(coll):
+    n, w = 16, 8
+    p = _params(w)
+    ring = _ring(n, w, p)
+    sched = wrht.build_collective_schedule(coll, n, w, 1.0)
+    composed = compose.compose_schedules([sched])
+    assert composed.depth == 1 and composed.fused_steps == 0
+    assert composed.num_steps == sched.num_steps
+    # single-part slots hand back the constituent's original Step objects
+    assert all(a is b for a, b in zip(composed.as_steps(), sched.steps))
+
+    classes = (PayloadClass(wrht.COLLECTIVES[coll].payload_divisors(n)),)
+    plain = timing.ScheduleProfile.from_steps(sched.steps, ring,
+                                              classes=classes,
+                                              validate=False)
+    comp = timing.ScheduleProfile.from_composed(composed, ring)
+    assert _profiles_equal(plain, comp)
+    d = np.asarray([1e4, D, 2.56e8])
+    for mode in MODES:
+        np.testing.assert_array_equal(comp.evaluate(ring, d, mode).total_s,
+                                      plain.evaluate(ring, d, mode).total_s)
+
+
+def test_depth1_collective_times_unchanged():
+    """``collective_times(depth=1)`` must take the plain (uncomposed) path
+    and agree bit-for-bit with the default call."""
+    p = _params(8)
+    d = np.asarray([D])
+    for mode in MODES:
+        a = timing.collective_times("reduce_scatter", 16, d, p, timing=mode)
+        b = timing.collective_times("reduce_scatter", 16, d, p, timing=mode,
+                                    depth=1)
+        np.testing.assert_array_equal(a.total_s, b.total_s)
+
+
+# ---------------------------------------------------------------------------
+# differential timing: composed <= serial sum, on every engine
+# ---------------------------------------------------------------------------
+
+def _check_composed_le_serial(start: str, n: int, w: int, depth: int) -> None:
+    p = _params(w)
+    d = np.asarray([D])
+    for mode in MODES:
+        composed = float(np.asarray(timing.collective_times(
+            start, n, d, p, timing=mode, keep_per_step=False,
+            depth=depth).total_s)[0])
+        serial = sum(
+            float(np.asarray(timing.collective_times(
+                c, n, d, p, timing=mode, keep_per_step=False).total_s)[0])
+            for c in compose.pipeline_collectives(start, depth))
+        assert composed <= serial * (1 + 1e-9) + 1e-12, (
+            start, n, w, depth, mode, composed, serial)
+
+
+@pytest.mark.parametrize("start", ("reduce_scatter", "all_gather",
+                                   "broadcast"))
+def test_composed_never_worse_than_serial_sweep(start):
+    for n in (2, 5, 16):
+        for w in (1, 2, 8):
+            for depth in (1, 2, 3):
+                _check_composed_le_serial(start, n, w, depth)
+
+
+def test_overlap_gain_rs_ag_depth2():
+    """The acceptance cell: RS+AG ring passes ride disjoint wavelengths, so
+    the depth-2 composed pipeline must show a *strict, large* win over the
+    serial pair — this is the measured end-to-end reduction the
+    ``planned_pipelined`` mode trades on (BENCH_pipeline.json)."""
+    n, w = 64, 8
+    p = _params(w)
+    d = np.asarray([D])
+    composed_sched = compose.build_pipeline_schedule(
+        "reduce_scatter", n, w, D, 2)
+    # every slot fused: the RS pass and the AG pass co-exist at 2 λs
+    assert composed_sched.fused_steps == composed_sched.num_steps == n - 1
+    assert composed_sched.slots_saved == n - 1
+    for mode in MODES:
+        composed = float(np.asarray(timing.collective_times(
+            "reduce_scatter", n, d, p, timing=mode, keep_per_step=False,
+            depth=2).total_s)[0])
+        serial = sum(
+            float(np.asarray(timing.collective_times(
+                c, n, d, p, timing=mode, keep_per_step=False).total_s)[0])
+            for c in ("reduce_scatter", "all_gather"))
+        assert composed <= 0.6 * serial, (mode, composed, serial)
+
+
+# ---------------------------------------------------------------------------
+# serialization fallback: λ-infeasible interleavings wait — and then the
+# composed timeline times exactly like the serial sequence (clamp audit)
+# ---------------------------------------------------------------------------
+
+def test_infeasible_interleaving_serializes_at_w1():
+    n, w = 16, 1
+    composed = compose.build_pipeline_schedule("reduce_scatter", n, w, D, 2)
+    # nothing fused: both ring passes want the single wavelength
+    assert composed.fused_steps == 0
+    assert composed.num_steps == composed.serial_steps
+    assert composed.slots_saved == 0
+    compose.validate_composed(composed)
+    # the serialization was forced: the union batch genuinely cannot exist
+    rs, ag = composed.schedules
+    cat, _ = wrht._concat_batches([rs.steps[0].transfers,
+                                   ag.steps[0].transfers])
+    with pytest.raises(WavelengthConflictError):
+        first_fit_assign(cat, n, w)
+
+
+def test_serialized_composition_times_like_serial_three_engines():
+    """Clamp-audit regression (simulate_steps_event / evaluate comment
+    blocks): a fully-serialized composition must cost exactly the sum of
+    its constituents on the barrier engines (lockstep, event) — the
+    overlap engine may only ever *save* time across the seam."""
+    n, w = 16, 1
+    p = _params(w)
+    d = np.asarray([1e4, D])
+    composed = {}
+    serial = {}
+    for mode in MODES:
+        composed[mode] = np.asarray(timing.collective_times(
+            "reduce_scatter", n, d, p, timing=mode, keep_per_step=False,
+            depth=2).total_s)
+        serial[mode] = sum(
+            np.asarray(timing.collective_times(
+                c, n, d, p, timing=mode, keep_per_step=False).total_s)
+            for c in ("reduce_scatter", "all_gather"))
+    np.testing.assert_array_equal(composed["lockstep"], serial["lockstep"])
+    np.testing.assert_array_equal(composed["event"], serial["event"])
+    assert (composed["overlap"] <= serial["overlap"] * (1 + 1e-12)).all()
+    # engine ordering holds on the composed path too
+    assert (composed["overlap"] <= composed["event"] * (1 + 1e-12)).all()
+    assert (composed["event"] <= composed["lockstep"] * (1 + 1e-12)).all()
+
+
+def test_scalar_and_batched_composed_engines_agree():
+    """``simulator.simulate_composed`` (per-point, build-time bits) and
+    ``ScheduleProfile.from_composed`` (compiled grid) are the same number
+    on every engine — the composed twin of the repo's standing
+    scalar-vs-batched differential."""
+    n, w = 16, 8
+    p = _params(w)
+    ring = _ring(n, w, p)
+    composed = compose.build_pipeline_schedule("reduce_scatter", n, w, D, 2)
+    prof = timing.ScheduleProfile.from_composed(composed, ring, d_ref=D)
+    d = np.asarray([D])
+    for mode in MODES:
+        batched = float(np.asarray(prof.evaluate(ring, d, mode).total_s)[0])
+        scalar = simulator.simulate_composed(composed, D, p,
+                                             timing=mode).total_s
+        assert batched == scalar, (mode, batched, scalar)
+
+
+# ---------------------------------------------------------------------------
+# fused RWA: conflict-freedom, staggered starts, failure masks
+# ---------------------------------------------------------------------------
+
+def test_fused_batches_are_conflict_free():
+    n, w = 16, 8
+    composed = compose.build_pipeline_schedule("reduce_scatter", n, w, D, 3)
+    assert composed.fused_steps > 0
+    for cs in composed.steps:
+        validate_no_conflicts(cs.transfers, n, w,
+                              max_hops=composed.max_hops)
+        if cs.fused:
+            # the union genuinely shares the slot: rows from >= 2 schedules
+            assert len({part.constituent for part in cs.parts}) >= 2
+
+
+def test_staggered_offsets_ramp_up():
+    n, w, lag = 8, 8, 3
+    rs = wrht.build_collective_schedule("reduce_scatter", n, w, D)
+    ag = wrht.build_collective_schedule("all_gather", n, w, D)
+    composed = compose.compose_schedules([rs, ag], offsets=(0, lag))
+    compose.validate_composed(composed)
+    # constituent 1 must not appear in the first `lag` emitted slots
+    for cs in composed.steps[:lag]:
+        assert {part.constituent for part in cs.parts} == {0}
+    assert composed.num_steps < rs.num_steps + ag.num_steps
+
+
+def test_composition_under_failure_mask():
+    mask = FailureMask(dead_segments=((0, 1),))
+    n, w = 16, 8
+    composed = compose.build_pipeline_schedule("reduce_scatter", n, w, D, 2,
+                                               failures=mask)
+    assert composed.failures == mask
+    compose.validate_composed(composed)
+    for cs in composed.steps:
+        if cs.fused:
+            validate_no_conflicts(cs.transfers, n, w,
+                                  max_hops=composed.max_hops, failures=mask)
+    # degraded composition still beats (or ties) the degraded serial pair
+    p = _params(w)
+    d = np.asarray([D])
+    for mode in MODES:
+        composed_t = float(np.asarray(timing.collective_times(
+            "reduce_scatter", n, d, p, timing=mode, keep_per_step=False,
+            depth=2, failures=mask).total_s)[0])
+        serial_t = sum(
+            float(np.asarray(timing.collective_times(
+                c, n, d, p, timing=mode, keep_per_step=False,
+                failures=mask).total_s)[0])
+            for c in ("reduce_scatter", "all_gather"))
+        assert composed_t <= serial_t * (1 + 1e-9)
+
+
+def test_mixed_masks_rejected():
+    n, w = 8, 8
+    mask = FailureMask(dead_segments=((0, 1),))
+    rs = wrht.build_collective_schedule("reduce_scatter", n, w, D,
+                                        failures=mask)
+    ag = wrht.build_collective_schedule("all_gather", n, w, D)
+    with pytest.raises(ValueError, match="failure mask"):
+        compose.compose_schedules([rs, ag])
+
+
+def test_validator_rejects_fused_batch_using_dead_resource():
+    """Negative lane: a healthy fused batch checked against a mask that
+    kills a resource it uses must trip FailedResourceError — the
+    differential guard that validate_composed actually checks the mask."""
+    n, w = 16, 8
+    composed = compose.build_pipeline_schedule("reduce_scatter", n, w, D, 2)
+    fused = next(cs.transfers for cs in composed.steps if cs.fused)
+    lane, start, _hops = fused.arcs(n)
+    killer = FailureMask(
+        dead_segments=((int(lane[0]), int(start[0]) % n),))
+    with pytest.raises(FailedResourceError, match="dead fiber span"):
+        validate_no_conflicts(fused, n, w, failures=killer)
+
+
+# ---------------------------------------------------------------------------
+# composer API edges
+# ---------------------------------------------------------------------------
+
+def test_compose_api_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        compose.compose_schedules([])
+    a = wrht.build_collective_schedule("reduce_scatter", 8, 8, D)
+    b = wrht.build_collective_schedule("all_gather", 16, 8, D)
+    with pytest.raises(ValueError, match="share one ring"):
+        compose.compose_schedules([a, b])
+    with pytest.raises(ValueError, match="depth"):
+        compose.build_pipeline_schedule("reduce_scatter", 8, 8, D, 0)
+    with pytest.raises(ValueError, match="offsets"):
+        compose.compose_schedules([a], offsets=(0, 1))
+
+
+def test_pipeline_collectives_alternation():
+    assert compose.pipeline_collectives("reduce_scatter", 4) == (
+        "reduce_scatter", "all_gather", "reduce_scatter", "all_gather")
+    assert compose.pipeline_collectives("all_gather", 3) == (
+        "all_gather", "reduce_scatter", "all_gather")
+    # partnerless collectives pipeline against themselves
+    assert compose.pipeline_collectives("broadcast", 2) == (
+        "broadcast", "broadcast")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep — fast lane + scheduled deep lane
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    import os
+
+    DEEP_EXAMPLES = int(os.environ.get("REPRO_DEEP_EXAMPLES", "300"))
+
+    _strategy = dict(
+        start=st.sampled_from(["reduce_scatter", "all_gather", "broadcast"]),
+        n=st.integers(min_value=2, max_value=17),
+        w=st.sampled_from([1, 2, 4, 8]),
+        depth=st.integers(min_value=1, max_value=3),
+    )
+
+    @settings(max_examples=15, deadline=None)
+    @given(**_strategy)
+    def test_composed_le_serial_hypothesis(start, n, w, depth):
+        _check_composed_le_serial(start, n, w, depth)
+
+    @pytest.mark.deep
+    @settings(max_examples=DEEP_EXAMPLES, deadline=None)
+    @given(**_strategy)
+    def test_composed_le_serial_hypothesis_deep(start, n, w, depth):
+        _check_composed_le_serial(start, n, w, depth)
+else:  # pragma: no cover - exercised only without hypothesis installed
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_composed_le_serial_hypothesis():
+        pass

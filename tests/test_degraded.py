@@ -90,8 +90,8 @@ def test_plan_cache_isolation(tmp_path):
     k_bad = PlanKey(8, 8, failures=MASK)
     assert k_ok != k_bad
     assert k_ok.filename() != k_bad.filename()
-    assert "-Fok." in k_ok.filename()
-    assert f"-F{MASK.fingerprint()}." in k_bad.filename()
+    assert "-Fok-" in k_ok.filename()
+    assert f"-F{MASK.fingerprint()}-" in k_bad.filename()
 
     s_ok, s_bad = cache.schedule(k_ok), cache.schedule(k_bad)
     assert s_ok.failures is None

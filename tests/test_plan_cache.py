@@ -7,9 +7,10 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import plan_cache, simulator, step_models as sm, timing, wrht
+from repro.core import compose, plan_cache, simulator, step_models as sm, \
+    timing, wrht
 from repro.core.plan_cache import PlanCache, PlanKey
-from repro.core.topology import Ring
+from repro.core.topology import FailureMask, Ring
 
 KEY = PlanKey(n=64, w=8, m=4, alltoall=True, max_hops=None)
 
@@ -236,6 +237,103 @@ def test_pre_bump_disk_entries_miss_cleanly(tmp_path, monkeypatch):
     assert (tmp_path / KEY.filename()).exists()
     # and a pre-bump file renamed over the new name is rejected by its
     # metadata stamp, not just its filename
+    os.replace(tmp_path / old_name, tmp_path / KEY.filename())
+    stale = PlanCache(disk_dir=tmp_path)
+    stale.profile(KEY)
+    assert (stale.stats.disk_hits, stale.stats.misses) == (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# the `depth` key field (DESIGN.md §13, schema v4): pipelined plans are
+# distinct cache citizens — never served for depth-1 keys, degraded composed
+# never served for healthy, pre-bump artifacts invisible
+# ---------------------------------------------------------------------------
+
+def test_depth_keys_never_mix():
+    cache = PlanCache()
+    k1 = PlanKey(n=16, w=8, collective="reduce_scatter")
+    k2 = PlanKey(n=16, w=8, collective="reduce_scatter", depth=2)
+    s1 = cache.schedule(k1)
+    s2 = cache.schedule(k2)
+    assert cache.stats.misses == 2 and cache.stats.memory_hits == 0
+    # a depth-2 key materializes the composed pipeline, a depth-1 key the
+    # plain schedule — and each repeat lookup hits its own entry only
+    assert isinstance(s2, compose.ComposedSchedule) and s2.depth == 2
+    assert not isinstance(s1, compose.ComposedSchedule)
+    assert tuple(s.collective for s in s2.schedules) == \
+        ("reduce_scatter", "all_gather")
+    assert cache.schedule(k1) is s1 and cache.schedule(k2) is s2
+    assert cache.stats.memory_hits == 2
+    # distinct disk identities, both stamped with their depth
+    assert k1.filename() != k2.filename()
+    assert "-D1." in k1.filename() and "-D2." in k2.filename()
+    assert k1.filename().endswith(f".v{plan_cache.SCHEMA_VERSION}.npz")
+    assert k1.meta()["depth"] == 1 and k2.meta()["depth"] == 2
+    with pytest.raises(ValueError, match="depth"):
+        PlanKey(n=16, w=8, depth=0)
+
+
+def test_depth_profile_disk_round_trip(tmp_path):
+    key = PlanKey(n=16, w=8, collective="reduce_scatter", depth=2)
+    warm = PlanCache(disk_dir=tmp_path)
+    built = warm.profile(key)
+    assert warm.stats.disk_writes == 1
+    cold = PlanCache(disk_dir=tmp_path)
+    loaded = cold.profile(key)
+    assert (cold.stats.disk_hits, cold.stats.misses) == (1, 0)
+    assert _profiles_equal(built, loaded)
+    # the fusion is visible in the compiled structure: fewer slots than the
+    # serial RS+AG pair (15 composed vs 15+15 serial at n=16)
+    serial_steps = sum(
+        PlanCache().schedule(
+            PlanKey(n=16, w=8, collective=c)).num_steps
+        for c in ("reduce_scatter", "all_gather"))
+    assert built.num_steps < serial_steps
+    ring = Ring(16, 8)
+    d = np.asarray([1e5, 1e9])
+    for mode in ("lockstep", "event", "overlap"):
+        np.testing.assert_array_equal(
+            loaded.evaluate(ring, d, mode).total_s,
+            built.evaluate(ring, d, mode).total_s)
+
+
+def test_degraded_depth_keys_isolated(tmp_path):
+    """A degraded composed plan must never be served for the healthy key
+    (and vice versa) — in memory or from disk."""
+    mask = FailureMask(dead_segments=((0, 1),))
+    healthy = PlanKey(n=16, w=8, collective="reduce_scatter", depth=2)
+    degraded = PlanKey(n=16, w=8, collective="reduce_scatter", depth=2,
+                       failures=mask)
+    assert healthy.filename() != degraded.filename()
+    cache = PlanCache(disk_dir=tmp_path)
+    cache.profile(healthy)
+    cache.profile(degraded)
+    assert cache.stats.misses == 2 and cache.stats.disk_writes == 2
+    sh = cache.schedule(healthy)
+    sd = cache.schedule(degraded)
+    assert sh.failures is None and sd.failures == mask
+    assert cache.schedule(healthy) is sh
+    assert cache.schedule(degraded) is sd
+    # cold process: each artifact round-trips under its own key only
+    cold = PlanCache(disk_dir=tmp_path)
+    cold.profile(healthy)
+    cold.profile(degraded)
+    assert cold.stats.disk_hits == 2 and cold.stats.misses == 0
+
+
+def test_pre_depth_artifacts_invisible(tmp_path, monkeypatch):
+    """v3-era artifacts (no depth axis) miss cleanly under v4 — by filename
+    AND by metadata stamp if renamed over the new name."""
+    monkeypatch.setattr(plan_cache, "SCHEMA_VERSION",
+                        plan_cache.SCHEMA_VERSION - 1)
+    old = PlanCache(disk_dir=tmp_path)
+    old.profile(KEY)
+    old_name = KEY.filename()
+    monkeypatch.undo()
+
+    bumped = PlanCache(disk_dir=tmp_path)
+    bumped.profile(KEY)
+    assert (bumped.stats.disk_hits, bumped.stats.misses) == (0, 1)
     os.replace(tmp_path / old_name, tmp_path / KEY.filename())
     stale = PlanCache(disk_dir=tmp_path)
     stale.profile(KEY)
