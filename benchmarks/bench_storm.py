@@ -1,0 +1,266 @@
+"""Failure-storm survival: escalating masks against the composed pipeline
+(DESIGN.md §14, EXPERIMENTS.md §Storms).
+
+Written to ``BENCH_storm.json`` by ``python -m benchmarks.bench_storm``:
+
+* ``storm`` — a nested ladder of failure masks (``storm_masks``: fleet-wide
+  λ kills shrinking the pool one wavelength at a time, then a single-lane
+  span cut, then its both-lane twin turning the ring into a line, then the
+  second-to-last λ forcing full serialization, finally a severed ring)
+  applied to the depth-2 ``planned_pipelined`` composed schedule
+  (``compose.build_pipeline_schedule``).  Per stage: the event-timed
+  composed sync total, its ratio vs the healthy stage, and the composer's
+  fusion bookkeeping (``fused_steps`` / ``slots_saved`` /
+  ``fusion_efficiency``) showing the serialization fallback engaging as
+  the λ pool shrinks.  Because each stage's mask *covers* the previous
+  one, the degraded plan space shrinks monotonically and the ratio must be
+  non-decreasing — the graceful-degradation invariant CI asserts (no cliff
+  before the severed stage, which must raise the uniform
+  ``DegradedInfeasibleError`` and is recorded as ``feasible: false``,
+  never skipped).
+* ``flapping`` — the closed loop under transient faults: a flapping λ
+  (``FlapSchedule.periodic``) driven through ``FaultManager`` with the
+  hysteresis ``ReplanPolicy`` vs the naive one-replan-per-transition count
+  (``FaultTimeline.transitions``), plus a slow flapper that the cooldown
+  coalesces.  Replan counts must never exceed the naive count, and on the
+  fast flapper must come out strictly below it.
+* ``roundtrip`` — healthy→degraded→healed plan-swap latency through
+  ``SyncController.replan``: the degrade leg re-runs the planner, the heal
+  leg must be a memo hit (``last_replan_cached``) at near-zero latency.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the grid for the CI smoke run (the workflow uploads the
+JSON as an artifact and asserts monotonicity + bounded flapping replans).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core import compose, step_models as sm, timing, wrht
+from repro.core.simulator import observe_faults
+from repro.core.topology import (FailureMask, FaultTimeline, FlapSchedule,
+                                 PhysicalParams)
+from repro.runtime.fault_tolerance import FaultManager, ReplanPolicy
+from repro.train import train_step as TS
+
+NS = (64, 256)
+QUICK_NS = (64,)
+W = 8                                     # scarce pool — λ kills must bite
+DEPTH = 2
+D_BITS = sm.PAPER_MODELS_BITS["ResNet50"]
+N_LAMBDA_STAGES = 6                       # λ kills before the span cuts
+
+
+def storm_masks(n: int) -> list[FailureMask]:
+    """The escalation ladder: a list of *nested* masks (each covers the
+    previous), from healthy to a severed ring.
+
+    Stages 1..6 kill one more wavelength fleet-wide each (the pool shrinks
+    ``w`` → ``w-6``); stage 7 cuts one CW span (reroutes); stage 8 cuts its
+    CCW twin (both lanes dead — the ring becomes a line); stage 9 kills the
+    second-to-last λ (pool = 1, so the depth-2 composition has no disjoint
+    wavelengths left and must fully serialize); stage 10 cuts both lanes of
+    a second span, severing the ring (``DegradedInfeasibleError``).
+    Nesting makes the degraded-time ratio provably monotone: every later
+    stage's plan is also a valid plan for every earlier stage.
+    """
+    masks = [FailureMask()]
+
+    def fleet(k: int) -> tuple[tuple[int, int], ...]:
+        return tuple((node, lam) for lam in range(k) for node in range(n))
+
+    for k in range(1, N_LAMBDA_STAGES + 1):
+        masks.append(FailureMask(dead_wavelengths=fleet(k)))
+    far, near = n // 2, n // 4
+    masks.append(FailureMask(dead_wavelengths=fleet(N_LAMBDA_STAGES),
+                             dead_segments=((0, far),)))
+    masks.append(FailureMask(dead_wavelengths=fleet(N_LAMBDA_STAGES),
+                             dead_segments=((0, far), (1, far))))
+    masks.append(FailureMask(dead_wavelengths=fleet(N_LAMBDA_STAGES + 1),
+                             dead_segments=((0, far), (1, far))))
+    masks.append(FailureMask(
+        dead_wavelengths=fleet(N_LAMBDA_STAGES + 1),
+        dead_segments=((0, far), (1, far), (0, near), (1, near))))
+    assert all(b.covers(a) for a, b in zip(masks, masks[1:]))
+    return masks
+
+
+def _optical() -> sm.OpticalParams:
+    return sm.OpticalParams(wavelengths=W, physical=PhysicalParams())
+
+
+def measure_storm(ns=NS, depth: int = DEPTH) -> list[dict]:
+    p = _optical()
+    d = np.asarray([float(D_BITS)])
+    rows = []
+    for n in ns:
+        base = None
+        for k, mask in enumerate(storm_masks(n)):
+            failures = None if mask.empty else mask
+            row = {"n": n, "intensity": k, "mask": mask.fingerprint(),
+                   "dead_lambdas": len(mask.dead_wavelengths),
+                   "dead_segments": len(mask.dead_segments)}
+            try:
+                t = timing.collective_times(
+                    "reduce_scatter", n, d, p, timing="event",
+                    keep_per_step=False, failures=failures, depth=depth)
+                composed = compose.build_pipeline_schedule(
+                    "reduce_scatter", n, W, float(D_BITS), depth,
+                    failures=failures)
+            except wrht.DegradedInfeasibleError as e:
+                row.update(feasible=False, error="DegradedInfeasibleError",
+                           reason=str(e))
+                rows.append(row)
+                continue
+            total = float(np.asarray(t.total_s)[0])
+            if k == 0:
+                base = total
+            row.update(feasible=True, total_s=total, ratio=total / base,
+                       slots=composed.num_steps,
+                       fused_steps=composed.fused_steps,
+                       slots_saved=composed.slots_saved,
+                       fusion_efficiency=composed.fusion_efficiency)
+            rows.append(row)
+    return rows
+
+
+def measure_flapping(steps: int = 200) -> list[dict]:
+    """Replan counts under transient faults: hysteresis vs naive."""
+    rows = []
+    cases = [
+        ("fast_flap", FlapSchedule.periodic("wavelength", (0, 3), 2, 2),
+         ReplanPolicy(confirm_k=3, recover_k=3, cooldown_steps=8)),
+        ("slow_flap", FlapSchedule.periodic("wavelength", (0, 3), 30, 30),
+         ReplanPolicy(confirm_k=3, recover_k=3, cooldown_steps=60)),
+        ("permanent", FlapSchedule.permanent("wavelength", (0, 3), at=20),
+         ReplanPolicy()),
+    ]
+    for name, flap, policy in cases:
+        tl = FaultTimeline((flap,))
+        mgr = FaultManager(lambda s, tl=tl: observe_faults(tl, s), policy)
+        mgr.attach(lambda mask: None)     # count proposals, no planner here
+        for s in range(steps):
+            mgr.on_step(s)
+        naive = tl.transitions(0, steps - 1)
+        rows.append({
+            "case": name, "steps": steps,
+            "transitions": naive,
+            "replans_naive": naive,
+            "replans_hysteresis": mgr.replan_count,
+            "policy": {"confirm_k": policy.confirm_k,
+                       "recover_k": policy.recover_k,
+                       "cooldown_steps": policy.cooldown_steps},
+        })
+    return rows
+
+
+class _AxisMesh:
+    axis_names = ("data",)
+
+    def __init__(self, n: int) -> None:
+        self.shape = {"data": n}
+
+
+def _abstract_grads():
+    return {k: jax.ShapeDtypeStruct((n,), jnp.float32)
+            for k, n in (("qkv", 1 << 16), ("mlp", 1 << 20),
+                         ("emb", 1 << 22))}
+
+
+def measure_roundtrip(ns=NS, repeats: int = 3) -> list[dict]:
+    """Healthy→degraded→healed plan-swap latency through the controller."""
+    tc = TrainConfig(sync_algorithm="planned_pipelined", bucket_bytes=1 << 22)
+    mask = FailureMask(dead_wavelengths=((0, 0), (0, 1)))
+    rows = []
+    for n in ns:
+        ctrl = TS.SyncController(_abstract_grads(), tc, _AxisMesh(n))
+        degrade_ms, heal_ms = [], []
+        heal_cached = True
+        for _ in range(repeats):
+            ctrl._plan_memo.pop(ctrl._memo_key(mask), None)  # fresh degrade
+            t0 = time.perf_counter()
+            ctrl.replan(mask)
+            degrade_ms.append(1e3 * (time.perf_counter() - t0))
+            t0 = time.perf_counter()
+            ctrl.replan(None)
+            heal_ms.append(1e3 * (time.perf_counter() - t0))
+            heal_cached = heal_cached and ctrl.last_replan_cached
+        rows.append({"n": n, "degrade_ms": min(degrade_ms),
+                     "heal_ms": min(heal_ms),
+                     "roundtrip_ms": min(degrade_ms) + min(heal_ms),
+                     "heal_cached": heal_cached})
+    return rows
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` CSV harness."""
+    out = []
+    for row in measure_storm(ns=QUICK_NS):
+        if row["feasible"]:
+            out.append({
+                "name": f"storm_n{row['n']}_k{row['intensity']}",
+                "us_per_call": row["total_s"] * 1e6,
+                "derived": {"ratio": row["ratio"],
+                            "fusion_efficiency": row["fusion_efficiency"]},
+            })
+    for row in measure_flapping(steps=100):
+        out.append({
+            "name": f"storm_flap_{row['case']}",
+            "us_per_call": 0.0,
+            "derived": {"replans_hysteresis": row["replans_hysteresis"],
+                        "replans_naive": row["replans_naive"]},
+        })
+    return out
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    ns = QUICK_NS if quick else NS
+    payload = {
+        "config": {
+            "wavelengths": W, "d_bits": D_BITS, "depth": DEPTH,
+            "timing": "event", "quick": quick,
+            "ladder": "nested masks: λs stacked on node 0, then span cuts "
+                      "(single-lane -> both-lane line topology -> severed)",
+            "note": "storm stages are nested (each mask covers the last), "
+                    "so the degraded-time ratio is monotone by construction "
+                    "up to the DegradedInfeasibleError cliff; infeasible "
+                    "stages are recorded, not skipped",
+        },
+        "storm": measure_storm(ns=ns),
+        "flapping": measure_flapping(steps=100 if quick else 200),
+        "roundtrip": measure_roundtrip(ns=ns, repeats=1 if quick else 3),
+    }
+    out = Path(__file__).resolve().parents[1] / "BENCH_storm.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    for row in payload["storm"]:
+        if row["feasible"]:
+            print(f"  N={row['n']:4d} k={row['intensity']}: "
+                  f"{row['total_s'] * 1e3:8.3f} ms  x{row['ratio']:.3f}  "
+                  f"(fused {row['fused_steps']}, "
+                  f"eff {row['fusion_efficiency']:.2f})")
+        else:
+            print(f"  N={row['n']:4d} k={row['intensity']}: infeasible "
+                  f"({row['error']})")
+    for row in payload["flapping"]:
+        print(f"  flap {row['case']:10s}: {row['replans_hysteresis']} "
+              f"replans vs {row['replans_naive']} naive "
+              f"({row['transitions']} transitions)")
+    for row in payload["roundtrip"]:
+        print(f"  roundtrip N={row['n']:4d}: degrade "
+              f"{row['degrade_ms']:.2f} ms + heal {row['heal_ms']:.2f} ms "
+              f"(cached={row['heal_cached']})")
+
+
+if __name__ == "__main__":
+    main()

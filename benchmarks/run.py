@@ -28,6 +28,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
                      interleavings vs serial, overlap + end-to-end step
                      reduction (full sweep writes BENCH_pipeline.json via
                      `python -m benchmarks.bench_pipeline`)
+  storm              failure-storm survival: escalating nested masks vs the
+                     composed pipeline (monotone degradation to the
+                     infeasibility cliff) + hysteresis-vs-naive replan
+                     counts (full sweep writes BENCH_storm.json via
+                     `python -m benchmarks.bench_storm`)
 """
 
 from __future__ import annotations
@@ -44,6 +49,7 @@ def main() -> None:
         bench_pipeline,
         bench_planner,
         bench_schedule_build,
+        bench_storm,
         bench_sweep,
         fig4_optical,
         fig5_electrical,
@@ -65,6 +71,7 @@ def main() -> None:
         "collectives": bench_collectives,
         "degraded": bench_degraded,
         "pipeline": bench_pipeline,
+        "storm": bench_storm,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

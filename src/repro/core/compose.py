@@ -117,6 +117,21 @@ class ComposedSchedule:
         """Reconfigurations the fusion removed vs serial execution."""
         return self.serial_steps - self.num_steps
 
+    @property
+    def fusion_efficiency(self) -> float:
+        """Fraction of the theoretically removable slots the greedy fusion
+        actually removed, in ``[0, 1]``.  A depth-``k`` composition can at
+        best shrink ``serial_steps`` down to the longest constituent, so the
+        denominator is ``serial_steps - max_j len(schedules[j].steps)``;
+        ``1.0`` means perfect interleaving, ``0.0`` full serialization —
+        the storm harness (DESIGN.md §14) watches this decay as a shrinking
+        λ pool forces the fallback."""
+        longest = max(len(s.steps) for s in self.schedules)
+        removable = self.serial_steps - longest
+        if removable <= 0:
+            return 1.0
+        return self.slots_saved / removable
+
     # -- constituent views ------------------------------------------------
 
     def part_step(self, slot: int, part: ComposedPart) -> wrht.Step:

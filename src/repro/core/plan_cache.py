@@ -134,6 +134,21 @@ class CacheStats:
     def lookups(self) -> int:
         return self.hits + self.misses
 
+    def snapshot(self) -> "CacheStats":
+        """Frozen copy of the current counters — pair with :meth:`delta` to
+        measure one operation's cache traffic (the recovery-replan tests
+        assert a shrinking mask is a pure hit, DESIGN.md §14)."""
+        return CacheStats(self.memory_hits, self.disk_hits, self.misses,
+                          self.evictions, self.disk_writes)
+
+    def delta(self, since: "CacheStats") -> "CacheStats":
+        """Counter increments since ``since`` (an earlier :meth:`snapshot`)."""
+        return CacheStats(self.memory_hits - since.memory_hits,
+                          self.disk_hits - since.disk_hits,
+                          self.misses - since.misses,
+                          self.evictions - since.evictions,
+                          self.disk_writes - since.disk_writes)
+
 
 class PlanCache:
     """Two-tier (memory LRU + optional disk) cache of WRHT plans."""

@@ -312,6 +312,14 @@ def plan_buckets(
     if failures is not None and failures.empty:
         failures = None
     if failures is not None and backend == "analytic":
+        if failures.disconnects(axis_size):
+            # a severed ring has no feasible schedule regardless of backend:
+            # raise the uniform infeasibility signal HERE so the analytic
+            # path agrees with the simulated one at the cliff (DESIGN.md §14)
+            from .wrht import DegradedInfeasibleError
+            raise DegradedInfeasibleError(
+                f"failure mask severs the N={axis_size} ring "
+                f"({failures!r}): no strategy can reach every node")
         # the closed forms have no route notion — the mask enters only as a
         # conservative channel shrink (worst per-node λ loss halves `links`
         # symmetrically, matching wrht.effective_wavelengths)

@@ -35,7 +35,8 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from . import step_models, wrht
-from .topology import CCW, CW, FailureMask, Ring, TransferBatch
+from .topology import (CCW, CW, FailureMask, FaultTimeline,
+                       ResourceObservation, Ring, TransferBatch)
 from .wavelength import InsertionLossError, validate_no_conflicts
 
 
@@ -192,6 +193,74 @@ def simulate_steps_event(
         serialization_s=ser, reconfig_s=len(steps) * ring.reconfig_delay_s,
         max_wavelengths=maxw, per_step_s=per_step, timing="event",
     )
+
+
+# ---------------------------------------------------------------------------
+# Per-resource health telemetry: the observation source of the closed
+# fault-management loop (DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+def _schedule_touches(steps: list[wrht.Step], n: int, kind: str,
+                      ident: tuple[int, int]) -> bool:
+    """Does any transfer of the schedule exercise the resource?
+
+    ``segment (lane, seg)``: some lightpath covers the directed span.
+    ``wavelength (node, λ)``: some transfer adds or drops λ at the node.
+    ``transceiver (node, lane)``: some transfer starts or ends at the node
+    on that fiber (pass-through traffic exercises neither λ banks nor
+    transceivers — the exact semantics the :class:`FailureMask` classes
+    enforce).
+    """
+    a, b = ident
+    for step in steps:
+        batch = step.transfers
+        if len(batch) == 0:
+            continue
+        lane, start, hops = batch.arcs(n)
+        if kind == "segment":
+            off = (b - start) % n
+            if bool(((lane == a) & (off < hops)).any()):
+                return True
+        elif kind == "wavelength":
+            at_node = (batch.src == a) | (batch.dst == a)
+            if bool((at_node & (batch.wavelength == b)).any()):
+                return True
+        else:  # transceiver
+            at_node = (batch.src == a) | (batch.dst == a)
+            if bool((at_node & (lane == b)).any()):
+                return True
+    return False
+
+
+def observe_faults(
+    timeline: FaultTimeline, step: int,
+    steps: "list[wrht.Step] | None" = None, n: int | None = None,
+) -> list[ResourceObservation]:
+    """Per-resource health telemetry for one training step.
+
+    Emits one :class:`~repro.core.topology.ResourceObservation` per
+    resource the ``timeline`` tracks — ``ok=False`` while the resource's
+    :class:`~repro.core.topology.FlapSchedule` says it is down (a per-λ /
+    per-span error or timeout event), ``ok=True`` otherwise.  This is the
+    raw signal the :class:`~repro.runtime.fault_tolerance.HealthMonitor`
+    smooths with confirm/cooldown hysteresis (DESIGN.md §14); the monitor,
+    not this probe, decides what becomes a :class:`FailureMask`.
+
+    With ``steps``/``n`` given, observations are restricted to resources
+    the schedule actually exercises — a dead λ nobody adds or drops
+    produces no error event, so detection latency genuinely depends on
+    traffic, exactly like hardware monitoring.
+    """
+    if steps is not None and n is None:
+        raise ValueError("observe_faults(steps=...) needs the ring size n")
+    out = []
+    for f in timeline.flaps:
+        if steps is not None and not _schedule_touches(steps, n, f.kind,
+                                                       f.ident):
+            continue
+        out.append(ResourceObservation(step, f.kind, f.ident,
+                                       ok=not f.is_down(step)))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -139,6 +139,223 @@ class FailureMask:
             counts[node] = counts.get(node, 0) + 1
         return max(counts.values(), default=0)
 
+    def union(self, other: "FailureMask") -> "FailureMask":
+        """The mask with every failure of both operands — cumulative
+        degradation (DESIGN.md §14).  Canonicalization makes the result
+        order-independent: ``a.union(b) == b.union(a)``."""
+        return FailureMask(
+            dead_segments=self.dead_segments + other.dead_segments,
+            dead_wavelengths=self.dead_wavelengths + other.dead_wavelengths,
+            dead_transceivers=(self.dead_transceivers
+                               + other.dead_transceivers),
+        )
+
+    def covers(self, other: "FailureMask") -> bool:
+        """True iff every failure of ``other`` is also in this mask — the
+        nesting relation the storm harness escalates along."""
+        return (set(other.dead_segments) <= set(self.dead_segments)
+                and set(other.dead_wavelengths) <= set(self.dead_wavelengths)
+                and (set(other.dead_transceivers)
+                     <= set(self.dead_transceivers)))
+
+    def disconnects(self, n: int) -> bool:
+        """True iff the mask provably severs the ring for all-pairs traffic
+        (DESIGN.md §14) — either some node lost its transceivers on *both*
+        fibers (it can no longer receive at all), or the segment cuts leave
+        the unit-step routing graph not strongly connected.
+
+        Every lightpath — including the degraded builders' O/E/O detours —
+        decomposes into unit segments, and a cut span blocks any lightpath
+        covering it regardless of wavelengths or transceivers, so failing
+        this check is a *sound* infeasibility certificate: the analytic
+        planner uses it to raise the uniform
+        :class:`~repro.core.wrht.DegradedInfeasibleError` instead of
+        costing a fabric no schedule can use.  (Transceiver and λ failures
+        other than the total-node case are deliberately NOT folded into the
+        graph: pass-through traffic needs neither, so doing so would flag
+        feasible rings.)
+        """
+        tdead = {}
+        for node, lane in self.dead_transceivers:
+            tdead.setdefault(node % n, set()).add(lane)
+        if any(len(lanes) == 2 for lanes in tdead.values()):
+            return True
+        if not self.dead_segments:
+            return False
+        dead = self.segment_dead(n)
+        cw_ok, ccw_ok = ~dead[0], ~dead[1]
+        if cw_ok.all() or ccw_ok.all():
+            return False  # one intact fiber ring reaches everyone
+        # strong connectivity of the 2n-edge unit-step graph: node u reaches
+        # u+1 over CW segment u, and u-1 over CCW segment u-1.  The ring is
+        # usable iff node 0 reaches everyone and everyone reaches node 0.
+        for forward in (True, False):
+            seen = np.zeros(n, dtype=bool)
+            seen[0] = True
+            frontier = [0]
+            while frontier:
+                u = frontier.pop()
+                cw_next = (u + 1) % n if forward else (u - 1) % n
+                cw_seg = u if forward else cw_next
+                if cw_ok[cw_seg] and not seen[cw_next]:
+                    seen[cw_next] = True
+                    frontier.append(cw_next)
+                ccw_next = (u - 1) % n if forward else (u + 1) % n
+                ccw_seg = ccw_next if forward else u
+                if ccw_ok[ccw_seg] and not seen[ccw_next]:
+                    seen[ccw_next] = True
+                    frontier.append(ccw_next)
+            if not seen.all():
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Transient (flapping) faults: per-resource up/down schedules over training
+# steps, the ground truth the closed fault-management loop observes
+# (DESIGN.md §14).
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("segment", "wavelength", "transceiver")
+
+
+@dataclass(frozen=True)
+class ResourceObservation:
+    """One per-resource health sample: per-λ/per-span error or ok telemetry
+    the simulator emits and the :class:`~repro.runtime.fault_tolerance.
+    HealthMonitor` consumes (DESIGN.md §14).  ``ident`` follows the
+    :class:`FailureMask` conventions for the kind: ``(lane, segment)`` /
+    ``(node, λ)`` / ``(node, lane)``."""
+
+    step: int
+    kind: str
+    ident: tuple[int, int]
+    ok: bool
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown resource kind {self.kind!r} "
+                             f"(expected one of {FAULT_KINDS})")
+        object.__setattr__(self, "ident",
+                           (int(self.ident[0]), int(self.ident[1])))
+
+
+@dataclass(frozen=True)
+class FlapSchedule:
+    """Up/down timetable of ONE optical resource.
+
+    Two specification forms, combinable (a step is down if either says so):
+
+    * ``down_intervals`` — explicit half-open ``[lo, hi)`` step intervals
+      (a permanent fault is ``(t, FOREVER)``, see :meth:`permanent`);
+    * ``up_steps``/``down_steps``/``phase`` — periodic flapping: starting
+      at ``phase`` the resource repeats ``up_steps`` healthy steps followed
+      by ``down_steps`` dead ones (the flapping-λ model of DESIGN.md §14).
+
+    ``kind``/``ident`` follow the :class:`FailureMask` conventions
+    (``segment`` → ``(lane, segment)``, ``wavelength`` → ``(node, λ)``,
+    ``transceiver`` → ``(node, lane)``).
+    """
+
+    kind: str
+    ident: tuple[int, int]
+    down_intervals: tuple[tuple[int, int], ...] = ()
+    up_steps: int = 0
+    down_steps: int = 0
+    phase: int = 0
+
+    FOREVER = 1 << 62
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown resource kind {self.kind!r} "
+                             f"(expected one of {FAULT_KINDS})")
+        object.__setattr__(self, "ident",
+                           (int(self.ident[0]), int(self.ident[1])))
+        object.__setattr__(
+            self, "down_intervals",
+            tuple(sorted((int(lo), int(hi))
+                         for lo, hi in self.down_intervals)))
+        for lo, hi in self.down_intervals:
+            if hi <= lo:
+                raise ValueError(f"empty down interval [{lo}, {hi})")
+        if (self.up_steps > 0) != (self.down_steps > 0):
+            raise ValueError("periodic flapping needs both up_steps and "
+                             "down_steps > 0 (or neither)")
+        if not self.down_intervals and not self.up_steps:
+            raise ValueError("flap schedule is never down — specify "
+                             "down_intervals or up_steps/down_steps")
+
+    @classmethod
+    def permanent(cls, kind: str, ident, at: int = 0) -> "FlapSchedule":
+        """A hard fault: down from step ``at`` onwards, never healing."""
+        return cls(kind, tuple(ident), down_intervals=((at, cls.FOREVER),))
+
+    @classmethod
+    def periodic(cls, kind: str, ident, up_steps: int, down_steps: int,
+                 phase: int = 0) -> "FlapSchedule":
+        """A flapping fault: ``up_steps`` healthy / ``down_steps`` dead,
+        repeating from ``phase``."""
+        return cls(kind, tuple(ident), up_steps=up_steps,
+                   down_steps=down_steps, phase=phase)
+
+    def is_down(self, step: int) -> bool:
+        for lo, hi in self.down_intervals:
+            if lo <= step < hi:
+                return True
+        if self.up_steps:
+            period = self.up_steps + self.down_steps
+            return (step - self.phase) % period >= self.up_steps
+        return False
+
+    def transitions(self, lo: int, hi: int) -> int:
+        """Number of up↔down edges of this resource in steps ``(lo, hi]``."""
+        return sum(self.is_down(t) != self.is_down(t - 1)
+                   for t in range(lo + 1, hi + 1))
+
+
+@dataclass(frozen=True)
+class FaultTimeline:
+    """The ground-truth fault state of a ring over training steps: a set of
+    per-resource :class:`FlapSchedule` timetables (DESIGN.md §14).
+
+    ``mask_at(step)`` materializes the instantaneous
+    :class:`FailureMask`; the closed-loop tests compare the
+    :class:`~repro.runtime.fault_tolerance.FaultManager`'s bounded replan
+    count against :meth:`transitions` — the replans a naive
+    one-per-transition policy would perform.
+    """
+
+    flaps: tuple[FlapSchedule, ...]
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "flaps", tuple(self.flaps))
+        seen = set()
+        for f in self.flaps:
+            if not isinstance(f, FlapSchedule):
+                raise TypeError(f"FaultTimeline entries must be "
+                                f"FlapSchedule, got {type(f).__name__}")
+            if (f.kind, f.ident) in seen:
+                raise ValueError(f"duplicate flap schedule for "
+                                 f"{(f.kind, f.ident)}")
+            seen.add((f.kind, f.ident))
+
+    def mask_at(self, step: int) -> FailureMask:
+        """The instantaneous failure mask at ``step`` (empty = healthy)."""
+        segs, lams, txs = [], [], []
+        for f in self.flaps:
+            if f.is_down(step):
+                {"segment": segs, "wavelength": lams,
+                 "transceiver": txs}[f.kind].append(f.ident)
+        return FailureMask(dead_segments=tuple(segs),
+                           dead_wavelengths=tuple(lams),
+                           dead_transceivers=tuple(txs))
+
+    def transitions(self, lo: int, hi: int) -> int:
+        """Total per-resource up↔down edges in steps ``(lo, hi]`` — the
+        replan count of a naive one-replan-per-transition policy."""
+        return sum(f.transitions(lo, hi) for f in self.flaps)
+
 
 @dataclass(frozen=True)
 class PhysicalParams:

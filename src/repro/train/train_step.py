@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import math
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
 
@@ -306,7 +307,16 @@ class SyncController:
 
     ``last_replan_s`` records the wall-clock planner latency of the most
     recent re-plan (what ``benchmarks/bench_degraded.py`` reports).
+
+    Plans are memoized per mask fingerprint (a small LRU over
+    :class:`GradSyncPlans`), so a *recovery* replan — the fault-management
+    loop shrinking the mask back toward healthy (DESIGN.md §14) — reuses
+    the already-computed plan instead of re-running the planner:
+    ``last_replan_cached`` reports whether the most recent :meth:`replan`
+    was such a hit.
     """
+
+    MEMO_CAP = 8
 
     def __init__(self, abstract_grads, tc: TrainConfig, mesh,
                  cost: planner.CostParams | None = None,
@@ -322,10 +332,18 @@ class SyncController:
                       if tc.sync_algorithm == "planned_pipelined" else 1)
         self.failures = None
         self.last_replan_s: float | None = None
+        self.last_replan_cached = False
         self.replan_count = 0
         self.plans = plan_gradient_sync(abstract_grads, tc, mesh, cost,
                                         backend, sharded=True,
                                         depth=self.depth)
+        # seed the memo with the healthy plan: recovery back to the empty
+        # mask is always a hit (DESIGN.md §14)
+        self._plan_memo = OrderedDict({self._memo_key(None): self.plans})
+
+    @staticmethod
+    def _memo_key(failure_mask) -> str:
+        return "healthy" if failure_mask is None else failure_mask.fingerprint()
 
     def arrays(self) -> dict:
         """The current plan as traced jit inputs: ``{"rs:<axis>"|"ag:<axis>"
@@ -346,10 +364,21 @@ class SyncController:
         leaves no feasible schedule — the previous plan stays installed."""
         if failure_mask is not None and failure_mask.empty:
             failure_mask = None
+        key = self._memo_key(failure_mask)
         t0 = time.perf_counter()
-        plans = plan_gradient_sync(self._grads, self._tc, self._mesh,
-                                   self._cost, self._backend, sharded=True,
-                                   failures=failure_mask, depth=self.depth)
+        if key in self._plan_memo:
+            plans = self._plan_memo[key]
+            self._plan_memo.move_to_end(key)
+            self.last_replan_cached = True
+        else:
+            plans = plan_gradient_sync(self._grads, self._tc, self._mesh,
+                                       self._cost, self._backend,
+                                       sharded=True, failures=failure_mask,
+                                       depth=self.depth)
+            self._plan_memo[key] = plans
+            while len(self._plan_memo) > self.MEMO_CAP:
+                self._plan_memo.popitem(last=False)
+            self.last_replan_cached = False
         self.last_replan_s = time.perf_counter() - t0
         self.plans = plans
         self.failures = failure_mask

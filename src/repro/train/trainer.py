@@ -19,7 +19,8 @@ import jax
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import shard_batch
-from repro.runtime.fault_tolerance import FailureInjector, InjectedFailure, StepWatchdog
+from repro.runtime.fault_tolerance import (
+    FailureInjector, FaultManager, InjectedFailure, StepWatchdog)
 from .train_step import make_train_state, make_train_step
 
 log = logging.getLogger("repro.trainer")
@@ -47,6 +48,10 @@ class Trainer:
     mesh: object | None = None
     options: TrainerOptions = field(default_factory=TrainerOptions)
     injector: FailureInjector | None = None
+    # the closed-loop fault-management path (DESIGN.md §14): detector-driven
+    # masks into replan(); the injector's degrade_at stays as the manual
+    # escape hatch for deterministic tests
+    fault_manager: FaultManager | None = None
 
     def __post_init__(self):
         policy = self.options.straggler_policy
@@ -66,9 +71,15 @@ class Trainer:
                             else self.controller.arrays())
         self._ckpt_requested = False
         self.history: list[dict] = []
+        if self.fault_manager is not None:
+            self.fault_manager.attach(self.replan)
 
     # --------------------------------------------------------- fault hooks
     def _on_straggler(self, event):
+        if self.fault_manager is not None:
+            # stragglers are a pre-failure symptom — feed the detector
+            # (DESIGN.md §14) before applying the local policy
+            self.fault_manager.observe_straggler(event)
         policy = self.options.straggler_policy
         if callable(policy):
             policy(event)
@@ -123,6 +134,11 @@ class Trainer:
         state = self.init_or_restore()
         step = int(jax.device_get(state["step"]))
         while step < total:
+            if self.fault_manager is not None:
+                # primary replan path: telemetry -> hysteresis -> mask
+                # (DESIGN.md §14); infeasible proposals keep the previous
+                # plan per the manager's ReplanPolicy
+                self.fault_manager.on_step(step)
             if self.injector is not None:
                 self.injector.check(step)
                 mask = self.injector.degradation(step)

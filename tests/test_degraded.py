@@ -166,6 +166,66 @@ def test_injector_degradation_one_shot_and_reset():
         inj.check(5)
 
 
+def test_injector_rejects_non_mask_at_construction():
+    """The degrade_at satellite: a wrong value type fails at construction
+    with a pointed error, not steps later inside Trainer.replan."""
+    with pytest.raises(TypeError, match=r"degrade_at\[3\].*FailureMask"):
+        FailureInjector(degrade_at={3: {"dead_segments": [(0, 1)]}})
+    with pytest.raises(TypeError, match="got NoneType"):
+        FailureInjector(degrade_at={0: None})
+    FailureInjector(degrade_at={3: MASK})   # the real thing still works
+
+
+def test_watchdog_deque_window_and_warmup():
+    """The O(window) list.pop(0) is gone: the history is a bounded deque,
+    and the warmup (previously hard-coded at 4) is a constructor arg."""
+    ticks = iter(float(i) for i in range(10**6)).__next__
+
+    wd = StepWatchdog(threshold=3.0, window=4, warmup=1,
+                      clock=lambda: ticks())
+    assert wd._times.maxlen == 4
+    # warmup=1: the second step can already be flagged
+    wd.start(); wd.stop(0)                        # dt = 1.0 (recorded)
+    wd.start()
+    for _ in range(8):                            # burn 8 ticks -> dt = 9.0
+        ticks()
+    wd.stop(1)
+    assert [e.step for e in wd.events] == [1]
+    # the window really bounds the median history
+    for s in range(2, 12):
+        wd.start(); wd.stop(s)
+    assert len(wd._times) == 4
+
+    # default warmup matches the historical 4-sample behaviour
+    assert StepWatchdog().warmup == 4
+    with pytest.raises(ValueError, match="warmup"):
+        StepWatchdog(warmup=0)
+
+
+def test_sync_controller_cumulative_and_recovery_memo():
+    """Cumulative degradation (mask union) then recovery: fresh masks
+    re-plan, previously-seen masks — including the healthy one — are memo
+    hits (``last_replan_cached``), so the heal leg costs ~nothing."""
+    tc = TrainConfig(sync_algorithm="planned_sharded", bucket_bytes=1 << 10)
+    ctrl = TS.SyncController(_abstract_grads(), tc, _StubMesh())
+    healthy = ctrl.arrays()
+
+    ctrl.replan(MASK)
+    assert not ctrl.last_replan_cached          # fresh degraded plan
+    bigger = MASK.union(FailureMask(dead_wavelengths=((2, 1),)))
+    assert bigger.covers(MASK)
+    ctrl.replan(bigger)
+    assert not ctrl.last_replan_cached          # union is a new mask
+    ctrl.replan(MASK)                           # storm recedes partially
+    assert ctrl.last_replan_cached
+    restored = ctrl.replan(FailureMask())       # full recovery
+    assert ctrl.last_replan_cached and ctrl.failures is None
+    for k in healthy:
+        np.testing.assert_array_equal(np.asarray(restored[k]),
+                                      np.asarray(healthy[k]))
+    assert ctrl.replan_count == 4
+
+
 def _smoke_trainer(tmp_path, **opt_kwargs):
     cfg = registry.get("qwen2-1.5b", smoke=True)
     tc = TrainConfig(lr=1e-3, total_steps=12, warmup_steps=2, remat="none")
@@ -320,9 +380,23 @@ degraded = ctrl.replan(mask)
 got1 = step(tree, degraded)          # swapped plan, same compiled step
 assert TRACES == 1, TRACES           # <- the no-retrace acceptance criterion
 assert ctrl.last_replan_s is not None
+
+# cumulative degradation: the storm worsens (mask union), then recedes back
+# to healthy — the heal leg is a plan-memo hit and STILL no retrace
+worse = mask.union(FailureMask(dead_wavelengths=((2, 1),)))
+assert worse.covers(mask)
+got2 = step(tree, ctrl.replan(worse))
+assert not ctrl.last_replan_cached   # fresh degraded plan
+healed = ctrl.replan(None)
+assert ctrl.last_replan_cached       # recovery = zero planner work
+got3 = step(tree, healed)
+assert TRACES == 1, TRACES           # one compile across the whole storm
+for k in healthy:
+    np.testing.assert_array_equal(np.asarray(healed[k]),
+                                  np.asarray(healthy[k]))
 for k, v in tree.items():
     want = np.asarray(v).mean(axis=0)
-    for got in (got0, got1):
+    for got in (got0, got1, got2, got3):
         assert np.abs(np.asarray(got[k]) - want[None]).max() < 1e-5, k
 print('NO_RETRACE_OK', ctrl.replan_count, '%.3fms' % (1e3 * ctrl.last_replan_s))
 """
@@ -374,3 +448,52 @@ print("TRAINER_REPLAN_OK", tr.controller.replan_count)
 
 def test_trainer_replans_midrun_multidevice(subproc):
     assert "TRAINER_REPLAN_OK" in subproc(TRAINER_REPLAN, timeout=900)
+
+
+# trainer-level E2E of the CLOSED loop (DESIGN.md §14): no injected mask —
+# the FaultManager observes a transient fault through the simulator probe,
+# confirms it, replans, then heals back to the healthy plan via a memo hit.
+TRAINER_FAULT_LOOP = """
+import jax, numpy as np
+from jax.sharding import AxisType
+from repro.configs import registry
+from repro.configs.base import TrainConfig
+from repro.core.simulator import observe_faults
+from repro.core.topology import FaultTimeline, FlapSchedule
+from repro.data.pipeline import SyntheticLM
+from repro.runtime.fault_tolerance import FaultManager, ReplanPolicy
+from repro.train import Trainer, TrainerOptions
+from repro.parallel import context as pctx
+
+cfg = registry.get("qwen2-1.5b", smoke=True)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,)*3)
+# λ 0 at node 2 dies during steps [2, 5), then heals
+timeline = FaultTimeline((FlapSchedule("wavelength", (2, 0),
+                                       down_intervals=((2, 5),)),))
+mgr = FaultManager(lambda s: observe_faults(timeline, s),
+                   ReplanPolicy(confirm_k=2, recover_k=2, cooldown_steps=2))
+with jax.set_mesh(mesh):
+    pctx.set_mesh(mesh)
+    tc = TrainConfig(lr=1e-3, total_steps=10, warmup_steps=2, remat="none",
+                     sync_algorithm="planned_sharded", bucket_bytes=1 << 20)
+    src = SyntheticLM(cfg.vocab_size, 16, 8)
+    tr = Trainer(cfg, tc, src, mesh=mesh,
+                 options=TrainerOptions(ckpt_dir="ckpt_loop", ckpt_every=100,
+                                        log_every=100),
+                 fault_manager=mgr)
+    assert tr.controller is not None
+    state = tr.run(10)
+# degrade once (confirmed at step 3), heal once (readmitted after cooldown)
+assert mgr.replan_count == 2, mgr.history
+assert mgr.current_mask is None           # fully healed
+assert tr.controller.failures is None
+assert tr.controller.last_replan_cached   # the heal leg was a memo hit
+assert [h["applied"] for h in mgr.history] == [True, True]
+assert np.isfinite(np.asarray(jax.tree.leaves(state["params"])[0])).all()
+print("FAULT_LOOP_OK", mgr.replan_count)
+"""
+
+
+def test_trainer_closed_fault_loop_multidevice(subproc):
+    assert "FAULT_LOOP_OK" in subproc(TRAINER_FAULT_LOOP, timeout=900)

@@ -1,0 +1,413 @@
+"""Closed-loop fault management (DESIGN.md §14): flapping-fault model,
+telemetry probe, hysteresis HealthMonitor, FaultManager replan loop, and the
+severed-ring certificate the analytic planner raises on.
+
+The headline property (ISSUE 8's acceptance criterion): under an injected
+flapping-λ trace the hysteresis ``ReplanPolicy`` performs provably fewer
+replans than one-per-transition, and recovery replans are memo/plan-cache
+hits.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import plan_cache, planner, simulator, wrht
+from repro.core.plan_cache import PlanCache
+from repro.core.topology import (FailureMask, FaultTimeline, FlapSchedule,
+                                 ResourceObservation)
+from repro.runtime.fault_tolerance import (FaultManager, HealthMonitor,
+                                           ReplanPolicy)
+
+# ---------------------------------------------------------------------------
+# flapping-fault model
+# ---------------------------------------------------------------------------
+
+
+def test_flap_schedule_permanent_and_periodic():
+    perm = FlapSchedule.permanent("wavelength", (0, 3), at=10)
+    assert not perm.is_down(9)
+    assert perm.is_down(10) and perm.is_down(10**9)
+    assert perm.transitions(0, 100) == 1
+
+    flap = FlapSchedule.periodic("segment", (0, 5), up_steps=2, down_steps=3,
+                                 phase=1)
+    # phase 1: steps 1,2 up; 3,4,5 down; 6,7 up; ...
+    assert [flap.is_down(s) for s in range(1, 8)] == [
+        False, False, True, True, True, False, False]
+    # one down edge + one up edge per 5-step period
+    assert flap.transitions(0, 50) == 20
+
+
+def test_flap_schedule_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FlapSchedule.permanent("fiber", (0, 0))
+    with pytest.raises(ValueError, match="empty down interval"):
+        FlapSchedule("wavelength", (0, 0), down_intervals=((5, 5),))
+    with pytest.raises(ValueError, match="both up_steps and"):
+        FlapSchedule("wavelength", (0, 0), up_steps=3)
+    with pytest.raises(ValueError, match="never down"):
+        FlapSchedule("wavelength", (0, 0))
+
+
+def test_fault_timeline_mask_and_transitions():
+    tl = FaultTimeline((
+        FlapSchedule.permanent("wavelength", (0, 3), at=5),
+        FlapSchedule.periodic("segment", (0, 2), up_steps=4, down_steps=4),
+    ))
+    assert tl.mask_at(0) == FailureMask(dead_segments=())  # seg up at phase 0
+    assert tl.mask_at(6) == FailureMask(dead_wavelengths=((0, 3),),
+                                        dead_segments=((0, 2),))
+    assert tl.transitions(0, 16) == 1 + 4  # one permanent edge + 4 flaps
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultTimeline((FlapSchedule.permanent("wavelength", (0, 3)),
+                       FlapSchedule.permanent("wavelength", (0, 3), at=9)))
+    with pytest.raises(TypeError, match="FlapSchedule"):
+        FaultTimeline((FailureMask(),))
+
+
+# ---------------------------------------------------------------------------
+# simulator telemetry probe
+# ---------------------------------------------------------------------------
+
+
+def test_observe_faults_tracks_timeline():
+    tl = FaultTimeline((FlapSchedule.permanent("wavelength", (2, 1), at=4),
+                        FlapSchedule.periodic("segment", (1, 0), 2, 2)))
+    obs = simulator.observe_faults(tl, 1)
+    assert {(o.kind, o.ident, o.ok) for o in obs} == {
+        ("wavelength", (2, 1), True), ("segment", (1, 0), True)}
+    obs = simulator.observe_faults(tl, 5)   # λ down; seg down ((5-0)%4=1>=2? no
+    by_key = {(o.kind, o.ident): o.ok for o in obs}
+    assert by_key[("wavelength", (2, 1))] is False
+    assert all(o.step == 5 for o in obs)
+
+
+def test_observe_faults_traffic_restriction():
+    tl = FaultTimeline((FlapSchedule.permanent("segment", (0, 0)),
+                        FlapSchedule.permanent("wavelength", (7, 0))))
+    n = 8
+    steps = wrht.build_collective_schedule("reduce_scatter", n, 8, 1e6).steps
+    obs = simulator.observe_faults(tl, 0, steps=steps, n=n)
+    kinds = {(o.kind, o.ident) for o in obs}
+    # the ring pass crosses every CW segment and adds/drops at every node,
+    # so both resources are exercised and observed
+    assert ("segment", (0, 0)) in kinds
+    with pytest.raises(ValueError, match="n"):
+        simulator.observe_faults(tl, 0, steps=steps)
+
+
+# ---------------------------------------------------------------------------
+# hysteresis state machine
+# ---------------------------------------------------------------------------
+
+
+def _obs(step, ok, kind="wavelength", ident=(0, 3)):
+    return ResourceObservation(step=step, kind=kind, ident=ident, ok=ok)
+
+
+def test_monitor_confirm_before_demote():
+    mon = HealthMonitor(ReplanPolicy(confirm_k=3))
+    mon.observe(_obs(0, False))
+    mon.observe(_obs(1, False))
+    assert mon.mask.empty and mon.state("wavelength", (0, 3)) == "suspect"
+    mon.observe(_obs(2, True))     # transient glitch absorbed
+    assert mon.state("wavelength", (0, 3)) == "up"
+    for s in range(3, 6):
+        mon.observe(_obs(s, False))
+    assert mon.mask == FailureMask(dead_wavelengths=((0, 3),))
+    assert mon.demotions == 1
+
+
+def test_monitor_cooldown_before_readmit():
+    mon = HealthMonitor(ReplanPolicy(confirm_k=1, recover_k=2,
+                                     cooldown_steps=10))
+    mon.observe(_obs(0, False))            # demoted at step 0
+    assert not mon.mask.empty
+    mon.observe(_obs(1, True))
+    mon.observe(_obs(2, True))             # recover_k met but cooldown not
+    assert not mon.mask.empty
+    mon.observe(_obs(5, False))            # flap during recovery: back down
+    mon.observe(_obs(11, True))
+    mon.observe(_obs(12, True))            # cooldown (since step 0) elapsed
+    assert mon.mask.empty
+    assert mon.readmissions == 1
+
+
+def test_replan_policy_validation():
+    with pytest.raises(ValueError, match="confirm_k"):
+        ReplanPolicy(confirm_k=0)
+    with pytest.raises(ValueError, match="cooldown"):
+        ReplanPolicy(cooldown_steps=-1)
+    with pytest.raises(ValueError, match="on_infeasible"):
+        ReplanPolicy(on_infeasible="panic")
+
+
+# ---------------------------------------------------------------------------
+# FaultManager: the closed loop
+# ---------------------------------------------------------------------------
+
+
+def _manager_for(timeline, policy, sink=None):
+    mgr = FaultManager(lambda s: simulator.observe_faults(timeline, s),
+                       policy)
+    mgr.attach(sink if sink is not None else (lambda mask: None))
+    return mgr
+
+
+def test_fast_flap_provably_fewer_replans_than_transitions():
+    """The acceptance criterion: a λ flapping faster than the confirm
+    window causes ZERO replans, vs one per transition for a naive policy."""
+    tl = FaultTimeline((FlapSchedule.periodic("wavelength", (0, 3), 2, 2),))
+    mgr = _manager_for(tl, ReplanPolicy(confirm_k=3))
+    for s in range(80):
+        mgr.on_step(s)
+    naive = tl.transitions(0, 79)
+    assert naive >= 20
+    assert mgr.replan_count < naive        # provably fewer ...
+    assert mgr.replan_count == 0           # ... in fact none at all
+
+
+def test_slow_flap_coalesced_by_cooldown():
+    """A slow flapper clears the confirm window, but cooldown holds the
+    resource out across heal/fail cycles: strictly fewer replans than the
+    naive one-per-transition count, never more."""
+    tl = FaultTimeline((FlapSchedule.periodic("wavelength", (0, 3), 30, 30),))
+    mgr = _manager_for(tl, ReplanPolicy(confirm_k=3, recover_k=3,
+                                        cooldown_steps=60))
+    for s in range(200):
+        mgr.on_step(s)
+    naive = tl.transitions(0, 199)
+    assert 0 < mgr.replan_count < naive
+
+
+def test_permanent_fault_full_roundtrip():
+    """Degrade exactly once at confirmation, heal exactly once after
+    recovery: masks arrive at the replan sink in order."""
+    tl = FaultTimeline((FlapSchedule("wavelength", (0, 3),
+                                     down_intervals=((5, 20),)),))
+    seen = []
+    mgr = _manager_for(tl, ReplanPolicy(), sink=seen.append)
+    for s in range(40):
+        mgr.on_step(s)
+    assert mgr.replan_count == 2
+    assert seen[0] == FailureMask(dead_wavelengths=((0, 3),))
+    assert seen[1].empty
+    assert mgr.current_mask is None        # healed == healthy
+    assert [h["applied"] for h in mgr.history] == [True, True]
+
+
+def test_rate_limit_defers_then_applies():
+    tl = FaultTimeline((FlapSchedule.permanent("wavelength", (0, 3), at=0),
+                        FlapSchedule.permanent("segment", (0, 1), at=4)))
+    seen = []
+    mgr = _manager_for(tl, ReplanPolicy(confirm_k=1, min_replan_interval=10),
+                       sink=seen.append)
+    for s in range(20):
+        mgr.on_step(s)
+    # λ confirmed at step 0, segment at step 4 — the second proposal is
+    # deferred until the rate limit clears at step 10, then applied once
+    assert mgr.replan_count == 2
+    assert mgr.history[1]["step"] == 10
+    assert seen[1] == FailureMask(dead_wavelengths=((0, 3),),
+                                  dead_segments=((0, 1),))
+
+
+def test_infeasible_keep_vs_raise():
+    tl = FaultTimeline((FlapSchedule.permanent("wavelength", (0, 3)),))
+
+    def refusing_sink(mask):
+        raise wrht.DegradedInfeasibleError("storm took the last lambda")
+
+    mgr = _manager_for(tl, ReplanPolicy(confirm_k=1), sink=refusing_sink)
+    mgr.on_step(0)                         # swallowed, loop keeps running
+    assert mgr.infeasible_count == 1 and mgr.replan_count == 0
+    assert mgr.current_mask is None
+    assert mgr.history[0]["applied"] is False
+
+    mgr2 = _manager_for(tl, ReplanPolicy(confirm_k=1, on_infeasible="raise"),
+                        sink=refusing_sink)
+    with pytest.raises(wrht.DegradedInfeasibleError):
+        mgr2.on_step(0)
+
+
+def test_on_step_before_attach_raises():
+    tl = FaultTimeline((FlapSchedule.permanent("wavelength", (0, 3)),))
+    mgr = FaultManager(lambda s: simulator.observe_faults(tl, s),
+                       ReplanPolicy(confirm_k=1))
+    with pytest.raises(RuntimeError, match="attach"):
+        mgr.on_step(0)
+
+
+# ---------------------------------------------------------------------------
+# mask algebra + the severed-ring certificate
+# ---------------------------------------------------------------------------
+
+
+def test_mask_union_and_covers():
+    a = FailureMask(dead_segments=((0, 1),))
+    b = FailureMask(dead_wavelengths=((2, 0),), dead_segments=((0, 1),))
+    u = a.union(b)
+    assert u == b.union(a)                 # canonical, order-free
+    assert u.covers(a) and u.covers(b) and not a.covers(b)
+    assert FailureMask().union(a) == a
+
+
+def test_disconnects_certificate():
+    n = 8
+    # single-lane cuts: the other fiber still reaches everyone
+    assert not FailureMask(dead_segments=((0, 0), (0, 4))).disconnects(n)
+    # both lanes of ONE span: a line topology, still connected
+    assert not FailureMask(dead_segments=((0, 4), (1, 4))).disconnects(n)
+    # both lanes of TWO spans: severed
+    assert FailureMask(
+        dead_segments=((0, 0), (1, 0), (0, 4), (1, 4))).disconnects(n)
+    # an entire dead CW fiber is fine while the CCW ring is intact
+    assert not FailureMask(
+        dead_segments=tuple((0, s) for s in range(n))).disconnects(n)
+    # a node with both transceivers dead can never receive
+    assert FailureMask(
+        dead_transceivers=((3, 0), (3, 1))).disconnects(n)
+    assert not FailureMask(dead_transceivers=((3, 0),)).disconnects(n)
+    # λ failures alone never sever (pass-through needs no add/drop)
+    assert not FailureMask(
+        dead_wavelengths=tuple((0, l) for l in range(64))).disconnects(n)
+
+
+def test_analytic_planner_raises_on_severed_ring():
+    """The analytic backend used to cost a fabric no schedule can use; the
+    certificate makes both backends agree at the cliff (DESIGN.md §14)."""
+    severed = FailureMask(dead_segments=((0, 0), (1, 0), (0, 2), (1, 2)))
+    for collective in ("allreduce", "reduce_scatter"):
+        with pytest.raises(wrht.DegradedInfeasibleError, match="severs"):
+            planner.plan_buckets(8, [1 << 20], backend="analytic",
+                                 collective=collective, failures=severed)
+
+
+def test_recovery_replan_hits_plan_cache():
+    """Shrinking the mask back to a previously-seen state is pure cache
+    traffic on the simulated backend: zero misses, zero new compiles."""
+    plan_cache.set_default(PlanCache())
+    try:
+        sizes = [1 << 18, 1 << 22]
+        mask = FailureMask(dead_segments=((0, 1),),
+                           dead_wavelengths=((2, 0),))
+        cache = plan_cache.get_default()
+        healthy = planner.plan_buckets(8, sizes, backend="simulated",
+                                       collective="reduce_scatter")
+        cold = cache.stats.snapshot()
+        assert cold.misses >= 1               # the healthy plan was compiled
+        planner.plan_buckets(8, sizes, backend="simulated",
+                             collective="reduce_scatter", failures=mask)
+        before = cache.stats.snapshot()
+        restored = planner.plan_buckets(8, sizes, backend="simulated",
+                                        collective="reduce_scatter")
+        d = cache.stats.delta(before)
+        # every cacheable candidate is a memory hit; nothing is re-compiled
+        # or re-written (misses may re-probe candidates that raised as
+        # infeasible during the cold pass — those are never cached)
+        assert d.hits >= 1 and d.misses < cold.misses, vars(d)
+        assert d.disk_writes == 0 and d.evictions == 0, vars(d)
+        assert [p.strategy for p in restored] == [p.strategy for p in healthy]
+    finally:
+        plan_cache.set_default(None)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep — fast lane + scheduled deep lane
+# ---------------------------------------------------------------------------
+
+
+def _check_bounded_replans(up, down, phase, confirm_k, cooldown, steps):
+    flap = FlapSchedule.periodic("wavelength", (0, 3), up, down, phase=phase)
+    tl = FaultTimeline((flap,))
+    mgr = _manager_for(tl, ReplanPolicy(confirm_k=confirm_k,
+                                        recover_k=confirm_k,
+                                        cooldown_steps=cooldown))
+    for s in range(steps):
+        mgr.on_step(s)
+    naive = tl.transitions(0, steps - 1)
+    # the hysteresis NEVER replans more than one-per-transition, and the
+    # final mask is consistent with the monitor state
+    assert mgr.replan_count <= max(naive, 1)
+    if down < confirm_k:
+        assert mgr.replan_count == 0       # too fast to ever confirm
+    last = mgr.current_mask
+    assert last is None or last == FailureMask(dead_wavelengths=((0, 3),))
+
+
+def _check_storm_masks_nested_monotone(n, stages):
+    """Every stage of a random nested mask ladder covers the last, and the
+    severed certificate is monotone along it (once disconnected, always
+    disconnected)."""
+    import random as _random
+    rng = _random.Random(stages * 1000 + n)
+    mask = FailureMask()
+    was_disconnected = False
+    for _ in range(stages):
+        kind = rng.choice(["segment", "wavelength", "transceiver"])
+        if kind == "segment":
+            extra = FailureMask(dead_segments=(
+                (rng.randrange(2), rng.randrange(n)),))
+        elif kind == "wavelength":
+            extra = FailureMask(dead_wavelengths=(
+                (rng.randrange(n), rng.randrange(8)),))
+        else:
+            extra = FailureMask(dead_transceivers=(
+                (rng.randrange(n), rng.randrange(2)),))
+        bigger = mask.union(extra)
+        assert bigger.covers(mask)
+        disconnected = bigger.disconnects(n)
+        assert disconnected or not was_disconnected, (
+            "severed ring healed by adding failures")
+        was_disconnected = disconnected
+        mask = bigger
+
+
+if HAVE_HYPOTHESIS:
+    import os
+
+    DEEP_EXAMPLES = int(os.environ.get("REPRO_DEEP_EXAMPLES", "300"))
+
+    _flap_strategy = dict(
+        up=st.integers(min_value=1, max_value=6),
+        down=st.integers(min_value=1, max_value=6),
+        phase=st.integers(min_value=0, max_value=5),
+        confirm_k=st.integers(min_value=1, max_value=4),
+        cooldown=st.integers(min_value=0, max_value=12),
+        steps=st.integers(min_value=10, max_value=120),
+    )
+    _storm_strategy = dict(
+        n=st.integers(min_value=4, max_value=16),
+        stages=st.integers(min_value=1, max_value=12),
+    )
+
+    @settings(max_examples=20, deadline=None)
+    @given(**_flap_strategy)
+    def test_flap_bounded_replans_hypothesis(up, down, phase, confirm_k,
+                                             cooldown, steps):
+        _check_bounded_replans(up, down, phase, confirm_k, cooldown, steps)
+
+    @pytest.mark.deep
+    @settings(max_examples=DEEP_EXAMPLES, deadline=None)
+    @given(**_flap_strategy)
+    def test_flap_bounded_replans_hypothesis_deep(up, down, phase, confirm_k,
+                                                  cooldown, steps):
+        _check_bounded_replans(up, down, phase, confirm_k, cooldown, steps)
+
+    @settings(max_examples=20, deadline=None)
+    @given(**_storm_strategy)
+    def test_storm_masks_nested_hypothesis(n, stages):
+        _check_storm_masks_nested_monotone(n, stages)
+
+    @pytest.mark.deep
+    @settings(max_examples=DEEP_EXAMPLES, deadline=None)
+    @given(**_storm_strategy)
+    def test_storm_masks_nested_hypothesis_deep(n, stages):
+        _check_storm_masks_nested_monotone(n, stages)
+else:  # pragma: no cover - exercised only without hypothesis installed
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_flap_bounded_replans_hypothesis():
+        pass
