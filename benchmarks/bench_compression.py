@@ -1,0 +1,283 @@
+"""Compression-aware crossovers: how bits-per-element moves the planning
+frontiers (DESIGN.md §15, EXPERIMENTS.md §Compression).
+
+Four measurements, written to ``BENCH_compression.json`` by
+``python -m benchmarks.bench_compression``:
+
+* ``rs_ag_vs_ar`` — the RS+AG-vs-AR crossover re-measured at equal wire
+  width on both sides (fp32 / int8 / int4).  Compression does NOT move this
+  frontier down: shrinking the β-term by ``bits/32`` on both curves leaves
+  the step-bound region in charge up to ~``32/bits``× larger *logical*
+  payloads, so the same-width int8 crossover sits ≈4× above the fp32 one.
+  The honest table (``compressed_vs_ar``) includes the cells where int8
+  *loses* outright — small buckets where the quantize overhead exceeds the
+  β saving.
+* ``compressed_frontier`` — the frontier the trainer actually rides:
+  int8/int4 RS+AG *plus the quantize/dequant overhead* against the fp32
+  monolithic all-reduce.  This crossover moves down (≈25 MB vs ≈63 MB at
+  N=256), which is what ``sync_algorithm="planned_sharded_compressed"``
+  exploits per bucket.
+* ``electrical_vs_optical`` — paper Fig. 5 re-measured at int8/int4 with
+  both link technologies compressing equally: shrinking the β-term leaves
+  the latency terms in charge, and the (N-1)-hop electrical ring carries
+  far more per-hop latency than WRHT's ~2·log_m(N) reconfigurations — so
+  WRHT's relative reduction *grows* as the width shrinks (0.57 → 0.84 →
+  0.91 vs E-Ring on ResNet50 at N=256).
+* ``tuner_decline`` — the per-bucket width sweep itself
+  (``planner.plan_buckets(bits_candidates=...)``) across bucket sizes: the
+  smallest buckets decline compression (detail["bits"] == 32) and the
+  decline→compress boundary is bisected to the byte.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the grid for the CI smoke run (the workflow asserts the
+frontier moved below the fp32 crossover at N=256 and uploads the JSON).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import planner, step_models as sm, timing
+
+NS = (64, 256, 1024)
+QUICK_NS = (64, 256)
+BITS_GRID = (32, 8, 4)
+D_GRID = tuple(float(2 ** e) for e in range(13, 34))   # 8 Kb .. 8 Gb
+RESNET50 = sm.PAPER_MODELS_BITS["ResNet50"]
+
+
+def _quant_overhead_s(d_bits, cp: planner.CostParams):
+    """The planner's quantize/dequant compute term on a *logical* fp32
+    payload of ``d_bits`` bits (2 passes: quantize out, dequantize in)."""
+    b = np.atleast_1d(np.asarray(d_bits, dtype=np.float64)) / 8.0
+    return 2.0 * cp.quant_alpha_s + 2.0 * b / cp.quant_Bps
+
+
+def _rs_ag(n, d, p, bits):
+    d = np.atleast_1d(np.asarray(d, dtype=np.float64))
+    rs = timing.collective_times("reduce_scatter", n, d, p,
+                                 keep_per_step=False, bits=bits).total_s
+    ag = timing.collective_times("all_gather", n, d, p,
+                                 keep_per_step=False, bits=bits).total_s
+    return rs + ag
+
+
+def _ar(n, d, p, bits):
+    d = np.atleast_1d(np.asarray(d, dtype=np.float64))
+    return timing.collective_times("allreduce", n, d, p,
+                                   keep_per_step=False, bits=bits).total_s
+
+
+def _bisect_crossover(f_lhs, f_rhs, d_grid):
+    """Smallest d where f_lhs(d) <= f_rhs(d), refined by bisection; None if
+    one side wins everywhere on the grid."""
+    d = np.asarray(d_grid)
+    wins = f_lhs(d) <= f_rhs(d)
+    if wins.all() or not wins.any():
+        return None, bool(wins.all())
+    i = int(np.argmax(wins))
+    lo, hi = float(d[i - 1]), float(d[i])
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if f_lhs(np.array([mid]))[0] <= f_rhs(np.array([mid]))[0]:
+            hi = mid
+        else:
+            lo = mid
+    return hi, None
+
+
+def measure_rs_ag_vs_ar(ns=NS, p: sm.OpticalParams | None = None,
+                        cp: planner.CostParams | None = None) -> list[dict]:
+    """Same-width RS+AG-vs-AR crossovers plus the honest compressed-vs-fp32
+    cells (including where int8 loses)."""
+    p = p or sm.OpticalParams()
+    cp = cp or planner.CostParams.optical()
+    rows = []
+    for n in ns:
+        for bits in BITS_GRID:
+            cx, always = _bisect_crossover(
+                lambda d: _rs_ag(n, d, p, bits),
+                lambda d: _ar(n, d, p, bits), D_GRID)
+            rows.append({
+                "n": n, "bits": bits, "kind": "same_width",
+                "crossover_d_bits": cx,
+                "crossover_mbytes": None if cx is None else cx / 8 / 1e6,
+                "rs_ag_always_wins": always,
+            })
+        # honest head-to-head at fixed logical payloads: compressed AR with
+        # its overhead vs fp32 AR — int8 must LOSE on small buckets
+        for d in (2.0 ** 16, 2.0 ** 23, 2.0 ** 30):
+            t32 = float(_ar(n, d, p, 32)[0])
+            for bits in (8, 4):
+                tb = float(_ar(n, d, p, bits)[0]
+                           + _quant_overhead_s(d, cp)[0])
+                rows.append({
+                    "n": n, "bits": bits, "kind": "compressed_vs_ar",
+                    "d_bits": d, "fp32_s": t32, "compressed_s": tb,
+                    "compressed_wins": tb < t32,
+                })
+    return rows
+
+
+def measure_compressed_frontier(ns=NS, p: sm.OpticalParams | None = None,
+                                cp: planner.CostParams | None = None
+                                ) -> list[dict]:
+    """Per (n, width): where compressed RS+AG (overhead included) crosses
+    below the *fp32* monolithic all-reduce — the deployable frontier."""
+    p = p or sm.OpticalParams()
+    cp = cp or planner.CostParams.optical()
+    rows = []
+    for n in ns:
+        fp32_cx, fp32_always = _bisect_crossover(
+            lambda d: _rs_ag(n, d, p, 32), lambda d: _ar(n, d, p, 32),
+            D_GRID)
+        row = {"n": n, "fp32_crossover_d_bits": fp32_cx,
+               "fp32_rs_ag_always_wins": fp32_always, "widths": {}}
+        for bits in (8, 4):
+            cx, always = _bisect_crossover(
+                lambda d: _rs_ag(n, d, p, bits) + _quant_overhead_s(d, cp),
+                lambda d: _ar(n, d, p, 32), D_GRID)
+            row["widths"][str(bits)] = {
+                "crossover_d_bits": cx,
+                "crossover_mbytes": None if cx is None else cx / 8 / 1e6,
+                "rs_ag_always_wins": always,
+                "moved_below_fp32": (cx is not None and fp32_cx is not None
+                                     and cx < fp32_cx),
+            }
+        rows.append(row)
+    return rows
+
+
+def measure_electrical_vs_optical(ns=NS, p: sm.OpticalParams | None = None
+                                  ) -> list[dict]:
+    """Fig. 5 at compressed wire widths: both technologies quantize, so the
+    electrical side's wire bits shrink by the same bits/32 factor."""
+    p = p or sm.OpticalParams()
+    e = sm.ElectricalParams()
+    rows = []
+    for n in ns:
+        for bits in BITS_GRID:
+            factor = bits / 32.0
+            for model, d in sm.PAPER_MODELS_BITS.items():
+                wrht_t = float(_ar(n, d, p, bits)[0])
+                ering_t = sm.t_ring_electrical(n, d * factor, e)
+                rd_t = sm.t_rd_electrical(n, d * factor, e)
+                rows.append({
+                    "n": n, "bits": bits, "model": model,
+                    "wrht_s": wrht_t, "e_ring_s": ering_t, "rd_s": rd_t,
+                    "wrht_vs_ering_reduction": 1 - wrht_t / ering_t,
+                    "wrht_vs_rd_reduction": 1 - wrht_t / rd_t,
+                })
+    return rows
+
+
+def measure_tuner_decline(ns=NS, cp: planner.CostParams | None = None
+                          ) -> list[dict]:
+    """The per-bucket sweep across bucket sizes: which width each bucket
+    picks, plus the bisected decline→compress boundary in bytes."""
+    cp = cp or planner.CostParams.optical()
+    sizes = [float(2 ** e) for e in range(12, 27, 2)]     # 4 KB .. 64 MB
+    rows = []
+    for n in ns:
+        plans = planner.plan_buckets(n, sizes, cp,
+                                     bits_candidates=BITS_GRID)
+        per_bucket = [{"bytes": int(b), "bits": pl.detail["bits"],
+                       "strategy": pl.strategy,
+                       "cost_us": pl.cost_s * 1e6,
+                       "quant_us": pl.detail.get("quant_s", 0.0) * 1e6}
+                      for b, pl in zip(sizes, plans)]
+        declined = [r for r in per_bucket if r["bits"] == 32]
+        compressed = [r for r in per_bucket if r["bits"] < 32]
+        boundary = None
+        if declined and compressed:
+            lo = float(max(r["bytes"] for r in declined))
+            hi = float(min(r["bytes"] for r in compressed))
+            if lo < hi:
+                for _ in range(40):
+                    mid = 0.5 * (lo + hi)
+                    pl = planner.plan_buckets(n, [mid], cp,
+                                              bits_candidates=BITS_GRID)[0]
+                    if pl.detail["bits"] < 32:
+                        hi = mid
+                    else:
+                        lo = mid
+                boundary = hi
+        rows.append({"n": n, "buckets": per_bucket,
+                     "decline_boundary_bytes": boundary,
+                     "any_declined": bool(declined),
+                     "any_compressed": bool(compressed)})
+    return rows
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` CSV harness."""
+    p = sm.OpticalParams()
+    cp = planner.CostParams.optical()
+    out = []
+    for row in measure_compressed_frontier(ns=QUICK_NS, p=p, cp=cp):
+        for bits, cell in row["widths"].items():
+            out.append({
+                "name": f"compressed_frontier_n{row['n']}_b{bits}",
+                "us_per_call": 0.0,
+                "derived": {"crossover_d_bits": cell["crossover_d_bits"],
+                            "fp32_d_bits": row["fp32_crossover_d_bits"],
+                            "moved_below_fp32": cell["moved_below_fp32"]},
+            })
+    for row in measure_tuner_decline(ns=(QUICK_NS[-1],), cp=cp):
+        out.append({
+            "name": f"tuner_decline_n{row['n']}",
+            "us_per_call": 0.0,
+            "derived": {"boundary_bytes": row["decline_boundary_bytes"],
+                        "bits": [b["bits"] for b in row["buckets"]]},
+        })
+    return out
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    ns = QUICK_NS if quick else NS
+    p = sm.OpticalParams()
+    cp = planner.CostParams.optical()
+    payload = {
+        "config": {
+            "wavelengths": p.wavelengths,
+            "bandwidth_bps": p.bandwidth_bps,
+            "bits_grid": list(BITS_GRID),
+            "quant_alpha_s": cp.quant_alpha_s,
+            "quant_Bps": cp.quant_Bps,
+            "quick": quick,
+            "note": "d_bits are LOGICAL fp32 payload bits throughout; "
+                    "compressed wire bytes shrink by bits/32 and the "
+                    "quantize overhead is added where marked "
+                    "(DESIGN.md §15)",
+        },
+        "rs_ag_vs_ar": measure_rs_ag_vs_ar(ns=ns, p=p, cp=cp),
+        "compressed_frontier": measure_compressed_frontier(ns=ns, p=p,
+                                                           cp=cp),
+        "electrical_vs_optical": measure_electrical_vs_optical(ns=ns, p=p),
+        "tuner_decline": measure_tuner_decline(ns=ns, cp=cp),
+    }
+    out = Path(__file__).resolve().parents[1] / "BENCH_compression.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    for row in payload["compressed_frontier"]:
+        fp32 = row["fp32_crossover_d_bits"]
+        print(f"  N={row['n']:5d}: fp32 RS+AG-vs-AR crossover at "
+              + (f"{fp32 / 8 / 1e6:.2f} MB" if fp32 else "none"))
+        for bits, cell in row["widths"].items():
+            cx = cell["crossover_d_bits"]
+            print(f"           int{bits} frontier at "
+                  + (f"{cx / 8 / 1e6:.2f} MB" if cx else "none")
+                  + f" (moved_below_fp32={cell['moved_below_fp32']})")
+    for row in payload["tuner_decline"]:
+        b = row["decline_boundary_bytes"]
+        print(f"  N={row['n']:5d}: tuner decline boundary at "
+              + (f"{b / 1024:.1f} KB" if b else "none"))
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,12 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
                      infeasibility cliff) + hysteresis-vs-naive replan
                      counts (full sweep writes BENCH_storm.json via
                      `python -m benchmarks.bench_storm`)
+  compression        bits-per-element planning frontiers: same-width and
+                     overhead-included RS+AG-vs-AR crossovers at int8/int4,
+                     Fig. 5 at compressed widths, and the per-bucket tuner
+                     decline boundary (full sweep writes
+                     BENCH_compression.json via
+                     `python -m benchmarks.bench_compression`)
 """
 
 from __future__ import annotations
@@ -44,6 +50,7 @@ import sys
 def main() -> None:
     from . import (
         bench_collectives,
+        bench_compression,
         bench_degraded,
         bench_insertion_loss,
         bench_pipeline,
@@ -72,6 +79,7 @@ def main() -> None:
         "degraded": bench_degraded,
         "pipeline": bench_pipeline,
         "storm": bench_storm,
+        "compression": bench_compression,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

@@ -157,7 +157,8 @@ class TrainConfig:
     # --- the paper's technique, first-class ---
     sync_algorithm: str = "auto"     # auto|psum|ring|rd|bt|wrht|hier_faithful|
                                      # hier_scatter|planned|planned_sharded|
-                                     # planned_pipelined
+                                     # planned_pipelined|planned_compressed|
+                                     # planned_sharded_compressed
     # planned_pipelined only: buckets in flight between their RS and AG
     # phases — bucket k+1's reduce-scatter is issued before bucket k's
     # all-gather so the two ride one composed ring schedule (DESIGN.md §13)
@@ -169,6 +170,15 @@ class TrainConfig:
     sync_m: int = 17                 # WRHT branching (2w+1 analogue)
     bucket_bytes: int = 32 * 2**20
     compress_pod_axis: bool = False  # int8+EF on the pod axis
+    # planned_compressed / planned_sharded_compressed only: the per-bucket
+    # wire-width sweep the planner runs at setup (DESIGN.md §15).  Each
+    # bucket independently picks the cheapest width — small latency-bound
+    # buckets decline compression (stay 32) because the quantize/dequant
+    # overhead exceeds the β saving; the chosen widths are then frozen for
+    # the run so an online re-plan never retraces.
+    compress_bits: tuple[int, ...] = (32, 8, 4)
+    compress_block: int = 1024       # per-block scale granularity (EF quant)
+    compress_fused_kernel: bool = False  # fused pallas quantize+bucketize
 
 
 def smoke_variant(cfg: ModelConfig, **over) -> ModelConfig:

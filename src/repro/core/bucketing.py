@@ -113,6 +113,43 @@ def bucketed_apply_indexed(tree, apply_fn, spec: BucketSpec, sync_dtype=None):
     return unflatten_buckets(out, spec, dtypes=dtypes)
 
 
+def bucketed_apply_compressed(tree, ef_tree, apply_fn, spec: BucketSpec, *,
+                              bits, block: int = 1024, fused: bool = False,
+                              sync_dtype=None):
+    """Error-feedback-compressed bucket sync (DESIGN.md §15): per bucket,
+    quantize ``grad + residual`` to ``bits[i]`` with per-``block`` scales,
+    hand the *dequantized* value to ``apply_fn(flat, bucket_bytes, i)`` (the
+    planned collective), and keep the quantization error as the new
+    residual.  ``bits[i] >= 32`` is an exact pass-through — the per-bucket
+    planner sweep uses it to decline compression on latency-bound buckets.
+
+    ``ef_tree`` must share ``tree``'s structure (the EF residual state the
+    trainer carries in the train-state pytree).  ``fused=True`` routes the
+    quantize through the pallas ``ef_quantize_bucketize`` kernel.
+
+    Returns ``(new_tree, new_ef_tree)``.
+    """
+    from . import compression
+    leaves = jax.tree.leaves(tree)
+    if tuple(tuple(l.shape) for l in leaves) != spec.leaf_shapes:
+        raise ValueError("tree leaves do not match the precomputed BucketSpec")
+    if len(bits) != len(spec.bucket_sizes):
+        raise ValueError(
+            f"bits has {len(bits)} entries for {len(spec.bucket_sizes)} buckets")
+    dtypes = [l.dtype for l in leaves]
+    ef_dtypes = [l.dtype for l in jax.tree.leaves(ef_tree)]
+    buckets = flatten_to_buckets(tree, spec, dtype=sync_dtype)
+    ef_buckets = flatten_to_buckets(ef_tree, spec)
+    out, new_ef = [], []
+    for i, (b, e) in enumerate(zip(buckets, ef_buckets)):
+        deq, res = compression.ef_compress_blocks(
+            b, e.astype(b.dtype), bits=bits[i], block=block, fused=fused)
+        out.append(apply_fn(deq, deq.size * deq.dtype.itemsize, i))
+        new_ef.append(res)
+    return (unflatten_buckets(out, spec, dtypes=dtypes),
+            unflatten_buckets(new_ef, spec, dtypes=ef_dtypes))
+
+
 def bucketed_apply_pipelined(tree, rs_fn, ag_fn, spec: BucketSpec,
                              depth: int = 2, sync_dtype=None):
     """Two-phase bucket sync, software-pipelined over the buckets

@@ -46,12 +46,13 @@ import numpy as np
 from . import wrht
 from .topology import FailureMask, Ring
 
-# v4: PlanKey gained the `depth` pipeline axis (DESIGN.md §13) — depth>1
-# keys cache the *composed* schedule/profile of the depth-k collective
-# pipeline, so a pipelined plan can never be served for a depth-1 key or
-# vice versa.  v3 artifacts (no depth stamp) are invisible under v4, as v2
-# (no mask stamp) were under v3 and v1 (pre-collective) under v2.
-SCHEMA_VERSION = 4
+# v5: PlanKey gained the `bits` wire-width axis (DESIGN.md §15) — a
+# compressed plan's profile carries width-scaled payload classes, so an
+# int8 profile can never be served for an fp32 key or vice versa.  v4
+# artifacts (no bits stamp) are invisible under v5, as v3 (no depth stamp)
+# were under v4, v2 (no mask stamp) under v3 and v1 (pre-collective)
+# under v2.
+SCHEMA_VERSION = 5
 
 
 @dataclass(frozen=True)
@@ -71,6 +72,10 @@ class PlanKey:
     ``depth=1`` is the plain collective; ``depth>1`` caches the *composed*
     schedule of the depth-k pipeline (``collective`` alternating with its
     partner phase — RS↔AG — via ``compose.build_pipeline_schedule``).
+    ``bits`` is the wire width per element (DESIGN.md §15): the schedule
+    *structure* is width-independent, but the cached profile's payload
+    classes are width-scaled, so compressed and full-precision plans never
+    share an entry or an artifact.
     """
 
     n: int
@@ -82,6 +87,7 @@ class PlanKey:
     collective: str = "allreduce"
     failures: FailureMask | None = None
     depth: int = 1
+    bits: int = 32
 
     def __post_init__(self) -> None:
         # an empty mask IS the healthy ring — normalize so both spellings
@@ -90,6 +96,8 @@ class PlanKey:
             object.__setattr__(self, "failures", None)
         if self.depth < 1:
             raise ValueError("pipeline depth must be >= 1")
+        if self.bits < 1 or self.bits > 32:
+            raise ValueError("wire width must satisfy 1 <= bits <= 32")
 
     def failure_fingerprint(self) -> str:
         return "ok" if self.failures is None else self.failures.fingerprint()
@@ -100,7 +108,7 @@ class PlanKey:
         return (f"{self.collective}-n{self.n}-w{self.w}-m{m}"
                 f"-a2a{int(self.alltoall)}-H{h}-{self.rwa}"
                 f"-F{self.failure_fingerprint()}-D{self.depth}"
-                f".v{SCHEMA_VERSION}.npz")
+                f"-B{self.bits}.v{SCHEMA_VERSION}.npz")
 
     def meta(self) -> dict:
         return {
@@ -112,6 +120,7 @@ class PlanKey:
             "failures": (None if self.failures is None
                          else self.failures.to_lists()),
             "depth": self.depth,
+            "bits": self.bits,
         }
 
 
@@ -266,17 +275,17 @@ class PlanCache:
             # payload classes (disk round-trip unchanged — the profile
             # arrays are structure-only)
             prof = timing.ScheduleProfile.from_composed(
-                sched, ring, validate=False)
+                sched, ring, validate=False, width_bits=key.bits)
         else:
             # the builder fully validated the schedule; the collective's
             # payload accounting (constant full vector, or d/n chunks for
             # the ring passes and the all-to-all) becomes the profile's
-            # payload class
+            # payload class, width-scaled by the key's wire bits
             divisors = wrht.COLLECTIVES[key.collective].payload_divisors(
                 key.n)
             prof = timing.ScheduleProfile.from_steps(
                 sched.steps, ring, validate=False,
-                classes=(timing.PayloadClass(divisors),))
+                classes=(timing.PayloadClass(divisors, key.bits),))
         self.put_profile(key, prof)
         return prof
 

@@ -25,7 +25,7 @@ bucket from the cached plan.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -43,6 +43,13 @@ class CostParams:
     alpha_s: float = DEFAULT_ALPHA_S
     link_bw_Bps: float = DEFAULT_LINK_GBPS * BYTES_PER_GB
     links: int = DEFAULT_LINKS
+    # per-bucket compression compute (DESIGN.md §15): one quantize before the
+    # wire + one dequantize after, each a fixed kernel launch plus a linear
+    # pass over the *logical* fp32 bytes.  ~4e11 B/s is a VPU-bound
+    # streaming pass; the planner uses these to decline compression on
+    # buckets too small for the β-term savings to cover the overhead.
+    quant_alpha_s: float = 2e-6
+    quant_Bps: float = 4e11
 
     @staticmethod
     def tpu_v5e() -> "CostParams":
@@ -139,6 +146,23 @@ def _t_bcast_tree_arr(s: int, b: np.ndarray, p: CostParams,
     return levels * (p.alpha_s + serial * b / p.link_bw_Bps)
 
 
+def _t_quant_arr(b: np.ndarray, p: CostParams, bits: int) -> np.ndarray:
+    """Per-bucket quantize+dequantize compute overhead (DESIGN.md §15).
+
+    Strategy-independent — a compressed bucket pays it whatever schedule
+    moves the wire bits — so it adds *after* the per-width strategy argmin
+    without disturbing tie-breaking.  Zero at full width."""
+    if bits >= 32:
+        return np.zeros(b.size)
+    return np.full(b.size, 2 * p.quant_alpha_s) + 2 * b / p.quant_Bps
+
+
+def _wire_bytes(b: np.ndarray, bits: int) -> np.ndarray:
+    """Logical fp32 bytes → wire bytes at ``bits`` per element (exact: the
+    supported widths are power-of-two fractions of 32)."""
+    return b if bits == 32 else b * (bits / 32.0)
+
+
 def _alltoall_feasible(s: int, p: CostParams, max_hops: int | None) -> bool:
     """Single-step all-to-all feasibility under the analytic model: the
     wavelength budget is ``links // 2`` (the exact inverse of
@@ -215,6 +239,8 @@ def plan_bucket(
     collective: str = "allreduce",
     failures: "object | None" = None,
     depth: int = 1,
+    bits: int = 32,
+    bits_candidates: "tuple[int, ...] | None" = None,
 ) -> Plan:
     """Return the minimum-cost schedule for one bucket on one device axis.
 
@@ -253,12 +279,15 @@ def plan_bucket(
     ``depth`` costs the depth-k composed pipeline against the serial
     baseline (DESIGN.md §13) — see :func:`plan_buckets`.
 
+    ``bits``/``bits_candidates`` make the wire width a plan axis
+    (DESIGN.md §15) — see :func:`plan_buckets`.
+
     This is the one-bucket view of :func:`plan_buckets` — a single
     candidate-scan implementation serves both (DESIGN.md §10).
     """
     return plan_buckets(axis_size, [bytes_], params, m_candidates, allow,
                         max_hops, backend, optical, collective, failures,
-                        depth)[0]
+                        depth, bits, bits_candidates)[0]
 
 
 def plan_buckets(
@@ -273,6 +302,8 @@ def plan_buckets(
     collective: str = "allreduce",
     failures: "object | None" = None,
     depth: int = 1,
+    bits: int = 32,
+    bits_candidates: "tuple[int, ...] | None" = None,
 ) -> list[Plan]:
     """Plan a whole list of gradient-bucket sizes in one batched call.
 
@@ -302,12 +333,49 @@ def plan_buckets(
     where the composition wins get the amortized per-phase composed cost
     and ``detail["pipeline"]["composed"]=True``; buckets where it does not
     keep their serial plan, with the comparison recorded honestly.
+
+    ``bits`` plans at a fixed wire width (DESIGN.md §15): every strategy's
+    β-term shrinks by exactly ``bits/32`` and a strategy-independent
+    per-bucket quantize+dequantize compute term is added, recorded in
+    ``detail["quant_s"]``.  ``bits_candidates`` (e.g. ``(32, 8, 4)``)
+    instead *sweeps* the width per bucket: each width plans independently
+    and the per-bucket winner is returned with ``detail["bits"]`` (the
+    chosen width — 32 means the tuner declined compression for that
+    bucket) and ``detail["compression"]`` (every width's best cost, so the
+    decline is auditable).
     """
     if collective not in DEFAULT_STRATEGIES:
         raise ValueError(f"unknown collective {collective!r} "
                          f"(expected one of {sorted(DEFAULT_STRATEGIES)})")
     if depth < 1:
         raise ValueError("pipeline depth must be >= 1")
+    if bits_candidates is not None:
+        widths = tuple(dict.fromkeys(int(w) for w in bits_candidates))
+        if not widths:
+            raise ValueError("bits_candidates must name at least one width")
+        per_width = {
+            wd: plan_buckets(axis_size, byte_sizes, params, m_candidates,
+                             allow, max_hops, backend, optical, collective,
+                             failures, depth, wd)
+            for wd in widths
+        }
+        merged: list[Plan] = []
+        for i in range(len(per_width[widths[0]])):
+            # first-argmin over widths in candidate order (strict <), like
+            # the strategy scan's tie-breaking
+            best_wd = widths[0]
+            best_pl = per_width[best_wd][i]
+            for wd in widths[1:]:
+                if per_width[wd][i].cost_s < best_pl.cost_s:
+                    best_wd, best_pl = wd, per_width[wd][i]
+            detail = dict(best_pl.detail)
+            detail["bits"] = best_wd
+            detail["compression"] = {
+                str(wd): float(per_width[wd][i].cost_s) for wd in widths}
+            merged.append(replace(best_pl, detail=detail))
+        return merged
+    if bits < 1 or bits > 32:
+        raise ValueError("wire width must satisfy 1 <= bits <= 32")
     p = params or CostParams.tpu_v5e()
     if failures is not None and failures.empty:
         failures = None
@@ -324,31 +392,31 @@ def plan_buckets(
         # conservative channel shrink (worst per-node λ loss halves `links`
         # symmetrically, matching wrht.effective_wavelengths)
         w_eff = max(1, p.links // 2 - failures.max_dead_lambda_per_node())
-        p = CostParams(alpha_s=p.alpha_s, link_bw_Bps=p.link_bw_Bps,
-                       links=2 * w_eff)
+        p = replace(p, links=2 * w_eff)
     b = np.asarray(list(byte_sizes), dtype=np.float64)
     if allow is None:
         allow = DEFAULT_STRATEGIES[collective]
     if collective != "allreduce":
         plans = _plan_buckets_collective(axis_size, b, p, m_candidates, allow,
                                          max_hops, backend, optical,
-                                         collective, failures)
+                                         collective, failures, bits)
     elif backend == "simulated":
         plans = _plan_buckets_simulated(axis_size, b, p, m_candidates, allow,
-                                        max_hops, optical, failures)
+                                        max_hops, optical, failures, bits)
     elif backend != "analytic":
         raise ValueError(f"unknown backend {backend!r} "
                          "(expected 'analytic' or 'simulated')")
     else:
+        bw = _wire_bytes(b, bits)
         best, consider = _bucket_argmin(b.size)
 
         # candidate enumeration order matches plan_bucket exactly, so the
         # strict-< update reproduces its first-argmin tie-breaking
         if "flat" in allow:
-            consider(_t_flat_ring_arr(axis_size, b, p),
+            consider(_t_flat_ring_arr(axis_size, bw, p),
                      lambda i, c: Plan("flat", c))
         if "rd" in allow and axis_size & (axis_size - 1) == 0:
-            consider(_t_rd_arr(axis_size, b, p), lambda i, c: Plan("rd", c))
+            consider(_t_rd_arr(axis_size, bw, p), lambda i, c: Plan("rd", c))
         if "wrht_tree" in allow:
             fan_out_cap = None if max_hops is None else 2 * max_hops + 1
             for m in m_candidates:
@@ -358,20 +426,31 @@ def plan_buckets(
                     continue
                 for a2a in (True, False):
                     consider(
-                        _t_wrht_tree_arr(axis_size, b, p, m, a2a),
+                        _t_wrht_tree_arr(axis_size, bw, p, m, a2a),
                         lambda i, c, m=m, a2a=a2a: Plan("wrht_tree", c, m=m,
                                                         alltoall=a2a))
         if "hier_scatter" in allow:
             for factors in _factorizations(axis_size):
-                consider(_t_hier_scatter_arr(factors, b, p),
+                consider(_t_hier_scatter_arr(factors, bw, p),
                          lambda i, c, f=factors: Plan("hier_scatter", c,
                                                       factors=f))
         assert all(pl is not None for pl in best)
         plans = best
+    if bits != 32:
+        # strategy-independent per-bucket compression compute: added after
+        # the strategy argmin (cannot disturb it), before the pipeline
+        # comparison (each serial phase pays it, see _cost_pipelined)
+        over = _t_quant_arr(b, p, bits)
+        plans = [
+            replace(pl, cost_s=pl.cost_s + float(over[i]),
+                    detail={**pl.detail, "bits": bits,
+                            "quant_s": float(over[i])})
+            for i, pl in enumerate(plans)
+        ]
     if depth > 1 and axis_size > 1:
         plans = _cost_pipelined(axis_size, b, p, params, plans, depth,
                                 m_candidates, max_hops, backend, optical,
-                                collective, failures)
+                                collective, failures, bits)
     return plans
 
 
@@ -406,6 +485,7 @@ def _cost_pipelined(
     optical,
     collective: str,
     failures,
+    bits: int = 32,
 ) -> list[Plan]:
     """Cost the depth-k composed pipeline against the serial baseline
     (DESIGN.md §13) and adopt it per bucket where it wins.
@@ -438,7 +518,7 @@ def _cost_pipelined(
         by_coll[c] = np.asarray(
             [pl.cost_s for pl in plan_buckets(
                 axis_size, b, params, m_candidates, None, max_hops, backend,
-                optical, c, failures)], dtype=np.float64)
+                optical, c, failures, 1, bits)], dtype=np.float64)
     serial_sum = np.sum([by_coll[c] for c in colls], axis=0)
 
     composed_total = None
@@ -458,17 +538,23 @@ def _cost_pipelined(
             composed_total = timing.collective_times(
                 collective, axis_size, b * 8, opt, opt.timing,
                 max_hops=max_hops, keep_per_step=False, failures=failures,
-                depth=depth).total_s
+                depth=depth, bits=bits).total_s
         except (InsertionLossError, WavelengthConflictError,
                 wrht.DegradedInfeasibleError) as e:
             reason = f"composed pipeline infeasible: {e}"
     elif ring_pass_only:
         w = max(1, p.links // 2)
         composed_total = (math.ceil(depth / w)
-                          * _t_ring_pass_arr(axis_size, b, p))
+                          * _t_ring_pass_arr(axis_size, _wire_bytes(b, bits),
+                                             p))
     else:
         reason = ("analytic backend has no overlap model for "
                   f"constituents {sorted(set(colls))}")
+    if composed_total is not None and bits != 32:
+        # fairness vs the serial baseline: every serial phase's cost already
+        # carries the per-bucket quantize/dequantize term, so the composed
+        # timeline pays it once per constituent phase too
+        composed_total = composed_total + depth * _t_quant_arr(b, p, bits)
 
     out = []
     for i, pl in enumerate(plans):
@@ -504,6 +590,7 @@ def _plan_buckets_simulated(
     max_hops: int | None,
     optical,
     failures=None,
+    bits: int = 32,
 ) -> list[Plan]:
     """The simulated backend: candidate schedules costed by the flit-level
     simulator over the whole ``d_bits`` axis at once, so every bucket shares
@@ -512,8 +599,12 @@ def _plan_buckets_simulated(
     ``wrht_tree`` → the WRHT sweep of :func:`repro.core.timing.tune_wrht`,
     ``hier_scatter`` → the H-Ring schedule per two-level factorization; all
     costed under the optical model's timing engine, like ``run_optical``.
-    Imports the simulator stack lazily so the analytic planner keeps zero
-    package dependencies."""
+    ``bits<32`` evaluates every candidate at the compressed wire width: the
+    tuner compiles width-scaled profiles under ``bits``-stamped keys, and
+    the fixed flat/H-Ring profiles evaluate at the width-scaled payload
+    (bit-identical — the width factor is a power-of-two exponent shift that
+    commutes with every division chain).  Imports the simulator stack
+    lazily so the analytic planner keeps zero package dependencies."""
     from . import step_models, timing, wrht
     from .wavelength import InsertionLossError
 
@@ -529,12 +620,13 @@ def _plan_buckets_simulated(
     if axis_size == 1:
         return [Plan("flat", 0.0, detail=dict(detail)) for _ in range(b.size)]
     d_bits = b * 8
+    d_wire = d_bits if bits == 32 else d_bits * (bits / 32.0)
     best, consider = _bucket_argmin(b.size)
 
     if "flat" in allow and failures is None:
         # the flat ring is a fixed wavelength-0 neighbour pattern with no
         # route-around — under a mask only the WRHT builder can replan
-        cost = timing.ring_times(axis_size, d_bits, opt, opt.timing).total_s
+        cost = timing.ring_times(axis_size, d_wire, opt, opt.timing).total_s
         consider(cost, lambda i, c: Plan("flat", c, detail=dict(detail)))
     if "wrht_tree" in allow:
         cap = wrht.feasible_group_size(opt.wavelengths, max_hops,
@@ -544,7 +636,8 @@ def _plan_buckets_simulated(
             try:
                 tuned = timing.tune_wrht(axis_size, opt.wavelengths, d_bits,
                                          max_hops, p=opt, timing=opt.timing,
-                                         m_candidates=ms, failures=failures)
+                                         m_candidates=ms, failures=failures,
+                                         bits=bits)
             except wrht.DegradedInfeasibleError:
                 tuned = None
             if tuned is not None:
@@ -559,7 +652,7 @@ def _plan_buckets_simulated(
             if len(factors) != 2 or factors[0] < 2 or axis_size % factors[0]:
                 continue
             try:
-                cost = timing.hring_times(axis_size, d_bits, opt, opt.timing,
+                cost = timing.hring_times(axis_size, d_wire, opt, opt.timing,
                                           g=factors[0]).total_s
             except InsertionLossError:
                 continue
@@ -592,6 +685,7 @@ def _plan_buckets_collective(
     optical,
     collective: str,
     failures=None,
+    bits: int = 32,
 ) -> list[Plan]:
     """Candidate scan for the non-all-reduce collectives (DESIGN.md §11).
 
@@ -627,23 +721,24 @@ def _plan_buckets_collective(
                 return timing.collective_times(
                     coll, axis_size, d_bits, opt, opt.timing,
                     max_hops=max_hops, keep_per_step=False,
-                    failures=failures, **kw).total_s
+                    failures=failures, bits=bits, **kw).total_s
             except (InsertionLossError, WavelengthConflictError,
                     wrht.DegradedInfeasibleError):
                 return None
 
+    bw = _wire_bytes(b, bits)
     ring_pass = collective if collective in ("reduce_scatter",
                                              "all_gather") else None
     if "flat" in allow and ring_pass is not None:
         cost = (simulated_cost(ring_pass) if simulated
-                else _t_ring_pass_arr(axis_size, b, p))
+                else _t_ring_pass_arr(axis_size, bw, p))
         if cost is not None:
             consider(cost, lambda i, c: Plan("flat", c, detail=dict(detail)))
     if "alltoall" in allow:
         if simulated:
             cost = simulated_cost("alltoall")
         else:
-            cost = (_t_alltoall_arr(axis_size, b, p)
+            cost = (_t_alltoall_arr(axis_size, bw, p)
                     if _alltoall_feasible(axis_size, p, max_hops) else None)
         if cost is not None:
             consider(cost, lambda i, c: Plan("alltoall", c,
@@ -668,7 +763,7 @@ def _plan_buckets_collective(
                                              timing=opt.timing,
                                              m_candidates=ms,
                                              collective="broadcast",
-                                             failures=failures)
+                                             failures=failures, bits=bits)
                 except wrht.DegradedInfeasibleError:
                     tuned = None
                 if tuned is not None:
@@ -678,7 +773,7 @@ def _plan_buckets_collective(
                                                detail=dict(detail)))
         else:
             for m in ms:
-                consider(_t_bcast_tree_arr(axis_size, b, p, m),
+                consider(_t_bcast_tree_arr(axis_size, bw, p, m),
                          lambda i, c, m=m: Plan("wrht_tree", c, m=m,
                                                 detail=dict(detail)))
     if any(pl is None for pl in best):
@@ -704,17 +799,21 @@ def crossover_table(
     max_hops: int | None = None,
     optical: "object | None" = None,
     collective: str = "allreduce",
+    bits: int = 32,
+    bits_candidates: "tuple[int, ...] | None" = None,
 ) -> list[dict]:
     """Bucket-size sweep: which schedule wins where (benchmark + tests).
 
-    ``backend``/``max_hops``/``optical`` pass straight through to the
-    planner, so the crossover benchmark can sweep the flit-level simulated
-    backend (and a hop budget) next to the analytic closed forms; the whole
-    sweep is one :func:`plan_buckets` call.
+    ``backend``/``max_hops``/``optical``/``bits``/``bits_candidates`` pass
+    straight through to the planner, so the crossover benchmarks can sweep
+    the flit-level simulated backend (and a hop budget, and compressed wire
+    widths) next to the analytic closed forms; the whole sweep is one
+    :func:`plan_buckets` call.
     """
     plans = plan_buckets(axis_size, byte_sizes, params, backend=backend,
                          max_hops=max_hops, optical=optical,
-                         collective=collective)
+                         collective=collective, bits=bits,
+                         bits_candidates=bits_candidates)
     return [
         {
             "bytes": int(b),
@@ -722,6 +821,7 @@ def crossover_table(
             "m": plan.m,
             "factors": plan.factors,
             "cost_us": plan.cost_s * 1e6,
+            **({"bits": plan.detail["bits"]} if "bits" in plan.detail else {}),
         }
         for b, plan in zip(byte_sizes, plans)
     ]

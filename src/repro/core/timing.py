@@ -51,16 +51,33 @@ from .wavelength import InsertionLossError, validate_no_conflicts
 class PayloadClass:
     """How one group of transfers derives its bits from the payload ``d``.
 
-    ``bits(d) = d / divisors[0] / divisors[1] / ...`` — kept as the explicit
-    division *chain* (not a collapsed fraction) so the floating-point result
-    is bit-identical to the schedule builders'.  E.g. the H-Ring inter-group
-    chunk is ``(d / g) / n_groups``, which differs in the last ulp from
-    ``d / (g · n_groups)``.
+    ``bits(d) = d / divisors[0] / divisors[1] / ... · width_bits/32`` — kept
+    as the explicit division *chain* (not a collapsed fraction) so the
+    floating-point result is bit-identical to the schedule builders'.  E.g.
+    the H-Ring inter-group chunk is ``(d / g) / n_groups``, which differs in
+    the last ulp from ``d / (g · n_groups)``.
+
+    ``width_bits`` is the wire width per element (DESIGN.md §15): ``d`` is
+    always the *logical* fp32 payload, and a compressed schedule's β-term
+    shrinks by the exact factor ``width_bits/32``.  The supported widths
+    (32/16/8/4) are power-of-two fractions of 32, so the scaling is a pure
+    FP exponent shift that commutes with the division chain — width-scaled
+    evaluation at ``d`` is bit-identical to width-32 evaluation at
+    ``d·width_bits/32``.  Class *matching* in :meth:`ScheduleProfile.from_steps`
+    uses :meth:`structural_bits` (chain only): builders emit width-32
+    structure, width is a pure evaluation-time attribute.
     """
 
     divisors: tuple[float, ...] = ()
+    width_bits: float = 32.0
 
     def bits(self, d: np.ndarray) -> np.ndarray:
+        b = self.structural_bits(d)
+        if self.width_bits != 32.0:
+            b = b * (self.width_bits / 32.0)
+        return b
+
+    def structural_bits(self, d: np.ndarray) -> np.ndarray:
         b = np.asarray(d, dtype=np.float64)
         for q in self.divisors:
             b = b / q
@@ -192,8 +209,11 @@ class ScheduleProfile:
         cand_cls_parts, cand_hops_parts = [], []
         cand_ptr = [0]
         max_wavelengths = 0
+        # match on the structural chain only: builders emit width-32 bits,
+        # a class's wire width is evaluation-time (PayloadClass docstring)
         ref_bits = np.array(
-            [c.bits(np.float64(d_ref)) for c in self.classes], dtype=np.float64
+            [c.structural_bits(np.float64(d_ref)) for c in self.classes],
+            dtype=np.float64
         )
         for batch in seg_batches:
             t = len(batch)
@@ -269,6 +289,7 @@ class ScheduleProfile:
         d_ref: float = 1.0,
         validate: bool = False,
         seg_cache: dict | None = None,
+        width_bits: float = 32.0,
     ) -> "ScheduleProfile":
         """Compile a :class:`~repro.core.compose.ComposedSchedule`
         (DESIGN.md §13) through the same machinery as :meth:`from_steps`.
@@ -295,7 +316,8 @@ class ScheduleProfile:
             seen: list[PayloadClass] = []
             for s in composed.schedules:
                 c = PayloadClass(
-                    wrht.COLLECTIVES[s.collective].payload_divisors(s.n))
+                    wrht.COLLECTIVES[s.collective].payload_divisors(s.n),
+                    width_bits)
                 if all(c.divisors != o.divisors for o in seen):
                     seen.append(c)
             classes = tuple(seen)
@@ -558,6 +580,7 @@ def profile_to_arrays(prof: ScheduleProfile) -> tuple[dict, dict[str, np.ndarray
         "num_steps": prof.num_steps,
         "max_wavelengths": prof.max_wavelengths,
         "classes": [list(c.divisors) for c in prof.classes],
+        "class_widths": [c.width_bits for c in prof.classes],
     }
     return meta, {name: getattr(prof, name) for name in _PROFILE_ARRAYS}
 
@@ -573,7 +596,9 @@ def profile_from_arrays(meta: dict, arrays: dict) -> ScheduleProfile:
     prof.n = int(meta["n"])
     prof.num_steps = int(meta["num_steps"])
     prof.max_wavelengths = int(meta["max_wavelengths"])
-    prof.classes = tuple(PayloadClass(tuple(d)) for d in meta["classes"])
+    widths = meta.get("class_widths") or [32.0] * len(meta["classes"])
+    prof.classes = tuple(PayloadClass(tuple(d), float(w))
+                         for d, w in zip(meta["classes"], widths))
     for name in _PROFILE_ARRAYS:
         setattr(prof, name, np.asarray(arrays[name]))
     prof.scatter_src = None   # lazy, like from_steps (_ensure_scatters)
@@ -593,18 +618,19 @@ def _ring_of(n: int, p: step_models.OpticalParams) -> Ring:
 def _collective_profile(
     collective: str, n: int, p: step_models.OpticalParams, m: int | None,
     allow_alltoall: bool = True, max_hops: int | None = None,
-    failures: FailureMask | None = None, depth: int = 1,
+    failures: FailureMask | None = None, depth: int = 1, bits: int = 32,
 ) -> ScheduleProfile:
     """Any scheduled collective's profile via the two-tier plan cache
     (DESIGN.md §10, §11).
 
     The cache key is the d-independent structure ``(collective, n, w, m,
-    alltoall, max_hops, rwa, depth)`` — deliberately *not* the whole
+    alltoall, max_hops, rwa, depth, bits)`` — deliberately *not* the whole
     ``OpticalParams``: bandwidth/reconfiguration only enter at evaluation
     time, so every parameter flavour shares one compiled profile.  ``(m,
     alltoall)`` are normalized per collective so keys never fragment on
     axes the collective does not have.  ``depth>1`` yields the composed
-    pipeline's profile (DESIGN.md §13).
+    pipeline's profile (DESIGN.md §13); ``bits<32`` a width-scaled
+    compressed profile (DESIGN.md §15).
     """
     from . import plan_cache
 
@@ -615,7 +641,7 @@ def _collective_profile(
     hops = ring.max_hops if max_hops is None else max_hops
     return plan_cache.get_default().profile(plan_cache.PlanKey(
         n=n, w=p.wavelengths, m=m, alltoall=allow_alltoall, max_hops=hops,
-        collective=collective, failures=failures, depth=depth))
+        collective=collective, failures=failures, depth=depth, bits=bits))
 
 
 def _wrht_profile(
@@ -687,7 +713,7 @@ def collective_times(
     timing: str = "lockstep", m: int | None = None,
     allow_alltoall: bool = True, max_hops: int | None = None,
     keep_per_step: bool = True, failures: FailureMask | None = None,
-    depth: int = 1,
+    depth: int = 1, bits: int = 32,
 ) -> BatchedTimes:
     """Batched timing of any scheduled collective over a payload grid
     (DESIGN.md §11): the profile comes from the plan cache (one compile per
@@ -701,6 +727,11 @@ def collective_times(
     *each*, to be compared against the sum of the constituents' serial
     totals.
 
+    ``bits<32`` times the compressed schedule: ``d_bits`` stays the
+    *logical* fp32 payload and the profile's width-scaled classes shrink
+    the β-term by exactly ``bits/32`` (DESIGN.md §15 — the quantize compute
+    overhead is the planner's, not the wire model's).
+
     Infeasible collectives raise like the builders do — a single-step
     all-to-all beyond the wavelength or hop budget is an error here, not a
     silently worse schedule.
@@ -709,7 +740,7 @@ def collective_times(
     p = p or step_models.OpticalParams()
     ring = _ring_of(n, p)
     prof = _collective_profile(collective, n, p, m, allow_alltoall, max_hops,
-                               failures, depth=depth)
+                               failures, depth=depth, bits=bits)
     label = collective if depth == 1 else f"{collective}:pipe{depth}"
     return _with_meta(prof.evaluate(ring, d_bits, timing, keep_per_step),
                       label)
@@ -1005,6 +1036,7 @@ def tune_wrht(
     m_candidates=None,
     collective: str = "allreduce",
     failures: FailureMask | None = None,
+    bits: int = 32,
 ) -> TuneResult:
     """Sweep every feasible WRHT fan-out ``m`` (and the final all-to-all
     on/off) through the batched simulator; return the simulated argmin.
@@ -1037,6 +1069,12 @@ def tune_wrht(
     which is exactly why a mid-run failure re-plans instead of reusing the
     healthy winner.  Raises ``wrht.DegradedInfeasibleError`` when no
     candidate survives the mask.
+
+    ``bits<32`` tunes the compressed schedule (DESIGN.md §15): candidate
+    structure is width-independent (one batched build serves every width),
+    but each candidate evaluates with width-scaled payload classes and the
+    compiled profiles publish under ``bits``-stamped keys — the argmin can
+    move because the α/β balance shifts when the wire shrinks.
     """
     from . import plan_cache
 
@@ -1068,11 +1106,14 @@ def tune_wrht(
             key = plan_cache.PlanKey(n=n, w=p.wavelengths, m=m,
                                      alltoall=alltoall, max_hops=hops,
                                      collective=collective,
-                                     failures=failures)
+                                     failures=failures, bits=bits)
             prof = cache.peek_profile(key)   # memory, then disk tier
             if prof is None:
+                classes = ((FULL_VECTOR,) if bits == 32
+                           else (PayloadClass((), float(bits)),))
                 prof = ScheduleProfile.from_steps(
-                    sched.steps, ring, validate=False, seg_cache=seg_cache)
+                    sched.steps, ring, validate=False, seg_cache=seg_cache,
+                    classes=classes)
                 cache.put_profile(key, prof)
             times = prof.evaluate(ring, d, timing, keep_per_step=False)
             candidates.append((m, alltoall))

@@ -69,6 +69,17 @@ def quantize_blocks(x, *, block=1024, bits=8, interpret=None):
     return _q.quantize_blocks(x, block=block, bits=bits, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("block", "bits", "interpret"))
+def ef_quantize_bucketize(grad, residual, *, block=1024, bits=8,
+                          interpret=None):
+    """Fused EF quantize+bucketize (one pass: t = grad + residual, per-block
+    absmax scale, round/clip into the int8 wire buffer, dequantized value,
+    new residual)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _q.ef_quantize_bucketize(grad, residual, block=block, bits=bits,
+                                    interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("block", "interpret"))
 def dequant_add(q, scales, acc, *, block=1024, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret

@@ -4,6 +4,12 @@ The compute hot-spot of the compressed cross-pod all-reduce
 (core.compression): quantize before the wire, fused dequant+add after.
 Per-block scales ([block] f32 alongside the int8 payload) keep the VPU busy
 and the error bounded; block size 1024 aligns with the lane width.
+
+``ef_quantize_bucketize`` is the planned-compressed hot path (DESIGN.md §15):
+one pass per block fuses the error-feedback add (grad + residual), the
+absmax scan, the scale, round/clip into the bucket's int8 wire buffer, the
+dequantized value the collective reduces, and the new EF residual — five
+reads/writes that the unfused jnp path spreads over as many kernels.
 """
 
 from __future__ import annotations
@@ -53,6 +59,63 @@ def quantize_blocks(x: jax.Array, *, block: int = 1024, bits: int = 8,
         interpret=interpret,
     )(x)
     return q, s, n
+
+
+def _ef_quant_kernel(g_ref, e_ref, q_ref, s_ref, d_ref, r_ref, *, qmax: float):
+    t = g_ref[...].astype(jnp.float32) + e_ref[...].astype(jnp.float32)
+    # explicit reciprocal multiply, NOT `/ qmax`: XLA rewrites division by a
+    # compile-time constant to a reciprocal multiply in some fusion contexts
+    # but not others, which would break bit-equality with the reference
+    scale = jnp.maximum(jnp.max(jnp.abs(t)), 1e-30) * (1.0 / qmax)
+    q = jnp.clip(jnp.round(t / scale), -qmax, qmax)
+    deq = q * scale
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = jnp.full_like(s_ref, scale)
+    d_ref[...] = deq
+    r_ref[...] = t - deq
+
+
+def ef_quantize_bucketize(grad: jax.Array, residual: jax.Array, *,
+                          block: int = 1024, bits: int = 8,
+                          interpret: bool = False):
+    """Fused EF quantize+bucketize: grad/residual [n] ->
+    (q int8 [n_pad], scales f32 [nblocks], deq f32 [n_pad],
+    new_residual f32 [n_pad], n).
+
+    q/scales/deq (the wire contract) are bit-equal to
+    ``ref.ef_quantize_bucketize_ref``; the residual matches to 1 ulp because
+    the fused ``t - q*scale`` contracts into an FMA here while the reference
+    rounds the dequantized product first.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    n = grad.shape[0]
+    pad = (-n) % block
+    if pad:
+        grad = jnp.pad(grad, (0, pad))
+        residual = jnp.pad(residual, (0, pad))
+    nb = grad.shape[0] // block
+    q, s, deq, new_r = pl.pallas_call(
+        functools.partial(_ef_quant_kernel, qmax=qmax),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * block,), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb * block,), jnp.float32),
+            jax.ShapeDtypeStruct((nb * block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(grad, residual)
+    return q, s, deq, new_r, n
 
 
 def dequant_add(q: jax.Array, scales: jax.Array, acc: jax.Array, *,

@@ -63,6 +63,25 @@ def quantize_blocks_ref(x, *, block=1024, bits=8):
     return q.reshape(-1), scales, n
 
 
+def ef_quantize_bucketize_ref(grad, residual, *, block=1024, bits=8):
+    """Oracle for the fused EF quantize+bucketize kernel: returns
+    (q [n_pad] int8, scales [nblocks] f32, deq [n_pad] f32,
+    new_residual [n_pad] f32, n)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    n = grad.shape[0]
+    pad = (-n) % block
+    t = grad.astype(jnp.float32) + residual.astype(jnp.float32)
+    tp = jnp.pad(t, (0, pad)) if pad else t
+    tb = tp.reshape(-1, block)
+    # reciprocal multiply to match the kernel bit-for-bit (see quant.py)
+    scales = jnp.maximum(jnp.max(jnp.abs(tb), axis=1), 1e-30) * (1.0 / qmax)
+    qb = jnp.clip(jnp.round(tb / scales[:, None]), -qmax, qmax)
+    deq = qb * scales[:, None]
+    resid = tb - deq
+    return (qb.astype(jnp.int8).reshape(-1), scales, deq.reshape(-1),
+            resid.reshape(-1), n)
+
+
 def dequant_add_ref(q, scales, acc, *, block=1024):
     qb = q.reshape(-1, block).astype(jnp.float32)
     deq = (qb * scales[:, None]).reshape(-1)

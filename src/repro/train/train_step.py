@@ -37,6 +37,19 @@ Gradient-sync modes (``TrainConfig.sync_algorithm``):
                 costs the interleaving via ``plan_buckets(depth=...)`` and
                 the RS+AG pair fuses onto disjoint wavelengths.  Per-bucket
                 numerics are identical to planned_sharded.
+  planned_compressed | planned_sharded_compressed
+                the planned / planned_sharded sync with bits-per-element as
+                a plan axis (DESIGN.md §15): at setup each bucket is swept
+                over ``compress_bits`` wire widths and the cheapest wins —
+                small latency-bound buckets *decline* compression because
+                the quantize overhead exceeds the β saving.  Compressed
+                buckets run int8/int4 symmetric quantization with per-block
+                scales and error feedback (the residual rides in the train
+                state and is checkpointed); the planned collective reduces
+                the dequantized values, so convergence follows the EF-SGD
+                guarantee.  The chosen widths are frozen per run — an
+                online re-plan (SyncController) swaps strategies only,
+                never widths, preserving the zero-retrace property.
 
 ``compress_pod_axis`` swaps the pod level for int8+error-feedback recursive
 doubling (cross-pod links are the scarce resource at 512+ chips).
@@ -63,11 +76,17 @@ from repro.optim import adamw_init, adamw_update, make_lr_schedule
 
 MANUAL_ALGOS = ("psum", "ring", "rd", "bt", "wrht", "hier_faithful",
                 "hier_scatter", "planned", "planned_sharded",
-                "planned_pipelined")
+                "planned_pipelined", "planned_compressed",
+                "planned_sharded_compressed")
 
 # modes that plan per-(axis, bucket) RS/AG schedules at setup and support
 # the no-retrace online re-plan path (SyncController)
-SHARDED_ALGOS = ("planned_sharded", "planned_pipelined")
+SHARDED_ALGOS = ("planned_sharded", "planned_pipelined",
+                 "planned_sharded_compressed")
+
+# modes that carry EF residual state and quantize each bucket to the
+# planner-chosen wire width before its collective (DESIGN.md §15)
+COMPRESSED_ALGOS = ("planned_compressed", "planned_sharded_compressed")
 
 
 def _dtype(name: str):
@@ -90,7 +109,7 @@ def make_train_state(cfg: ModelConfig, tc: TrainConfig, key) -> dict:
         "opt": adamw_init(params, _dtype(tc.opt_state_dtype)),
         "step": jnp.zeros((), jnp.int32),
     }
-    if tc.compress_pod_axis:
+    if tc.compress_pod_axis or tc.sync_algorithm in COMPRESSED_ALGOS:
         state["ef"] = compression.init_ef_state(params)
     return state
 
@@ -110,12 +129,37 @@ class GradSyncPlans:
     gradient bucket partition plus one schedule choice per (DP axis,
     bucket).  For ``"planned_sharded"`` the monolithic per-axis plan is
     replaced by a reduce-scatter plan and an all-gather plan per (axis,
-    bucket) (DESIGN.md §11)."""
+    bucket) (DESIGN.md §11).
+
+    ``bits`` (the compressed modes, DESIGN.md §15) is the per-bucket wire
+    width the planner's compression sweep picked at setup — 32 on buckets
+    that declined.  It is frozen for the run: :meth:`SyncController.replan`
+    re-plans *strategies* under the frozen widths so the traced step's
+    quantization graph never changes (no retrace)."""
 
     spec: bucketing.BucketSpec
     plans: dict[str, tuple[planner.Plan, ...]]   # DP axis -> per-bucket plan
     rs_plans: dict[str, tuple[planner.Plan, ...]] | None = None
     ag_plans: dict[str, tuple[planner.Plan, ...]] | None = None
+    bits: tuple[int, ...] | None = None          # per-bucket wire width
+
+
+def _plan_axis_with_bits(size, bucket_bytes, bits, cost, backend, failures,
+                         collective: str = "allreduce", depth: int = 1):
+    """Plan one DP axis's buckets at *fixed* per-bucket wire widths by
+    grouping buckets of equal width into one batched planner call each —
+    the frozen-bits path of a compressed re-plan (widths never re-swept)."""
+    out: list = [None] * len(bucket_bytes)
+    groups: dict[int, list[int]] = {}
+    for i, w in enumerate(bits):
+        groups.setdefault(int(w), []).append(i)
+    for w, idx in groups.items():
+        sub = planner.plan_buckets(
+            size, [bucket_bytes[i] for i in idx], cost, backend=backend,
+            collective=collective, failures=failures, depth=depth, bits=w)
+        for i, pl in zip(idx, sub):
+            out[i] = pl
+    return tuple(out)
 
 
 def plan_gradient_sync(grads, tc: TrainConfig, mesh,
@@ -123,7 +167,9 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
                        backend: str = "analytic",
                        sharded: bool = False,
                        failures=None,
-                       depth: int = 1) -> GradSyncPlans:
+                       depth: int = 1,
+                       compress: bool = False,
+                       bits_overrides=None) -> GradSyncPlans:
     """Partition the gradient pytree into size-capped buckets and plan every
     bucket's schedule for every DP axis in one batched planner call.
 
@@ -150,31 +196,75 @@ def plan_gradient_sync(grads, tc: TrainConfig, mesh,
     §13): winning buckets carry ``detail["pipeline"]`` with the measured
     composed-vs-serial gain, and their ``cost_s`` is the amortized
     per-constituent share of the composed total.
+
+    ``compress=True`` (the ``*_compressed`` modes, DESIGN.md §15) sweeps
+    each bucket over ``tc.compress_bits`` wire widths on the *first* DP
+    axis (the outermost sync level, which moves the most bytes), freezes
+    the winning width per bucket — ``GradSyncPlans.bits`` — and plans every
+    remaining axis/phase at those fixed widths, since a bucket is quantized
+    once before its first collective and stays compressed on the wire
+    through all levels.  ``bits_overrides`` skips the sweep and plans at
+    the given per-bucket widths — the re-plan path, which must keep the
+    widths the traced step was compiled with.
     """
     spec = bucketing.plan_buckets(grads, tc.bucket_bytes)
     itemsize = jnp.dtype(_dtype(tc.sync_dtype)).itemsize
     bucket_bytes = [s * itemsize for s in spec.bucket_sizes]
     axes = dp_axes_of(mesh)
+    bits = tuple(int(w) for w in bits_overrides) if bits_overrides else None
     if not sharded:
-        plans = {
-            ax: tuple(planner.plan_buckets(mesh.shape[ax], bucket_bytes, cost,
-                                           backend=backend,
-                                           failures=failures))
-            for ax in axes
-        }
-        return GradSyncPlans(spec, plans)
+        if not compress and bits is None:
+            plans = {
+                ax: tuple(planner.plan_buckets(mesh.shape[ax], bucket_bytes,
+                                               cost, backend=backend,
+                                               failures=failures))
+                for ax in axes
+            }
+            return GradSyncPlans(spec, plans)
+        plans = {}
+        for ax in axes:
+            if bits is None:
+                swept = planner.plan_buckets(
+                    mesh.shape[ax], bucket_bytes, cost, backend=backend,
+                    failures=failures,
+                    bits_candidates=tuple(tc.compress_bits))
+                bits = tuple(int(p.detail.get("bits", 32)) for p in swept)
+                plans[ax] = tuple(swept)
+            else:
+                plans[ax] = _plan_axis_with_bits(
+                    mesh.shape[ax], bucket_bytes, bits, cost, backend,
+                    failures)
+        return GradSyncPlans(spec, plans, bits=bits)
     rs_plans, ag_plans = {}, {}
     shard_bytes = list(bucket_bytes)
     for ax in axes:
         size = mesh.shape[ax]
-        rs_plans[ax] = tuple(planner.plan_buckets(
-            size, shard_bytes, cost, backend=backend,
-            collective="reduce_scatter", failures=failures, depth=depth))
-        ag_plans[ax] = tuple(planner.plan_buckets(
-            size, shard_bytes, cost, backend=backend,
-            collective="all_gather", failures=failures))
+        if compress and bits is None:
+            swept = planner.plan_buckets(
+                size, shard_bytes, cost, backend=backend,
+                collective="reduce_scatter", failures=failures, depth=depth,
+                bits_candidates=tuple(tc.compress_bits))
+            bits = tuple(int(p.detail.get("bits", 32)) for p in swept)
+            rs_plans[ax] = tuple(swept)
+        elif bits is not None:
+            rs_plans[ax] = _plan_axis_with_bits(
+                size, shard_bytes, bits, cost, backend, failures,
+                collective="reduce_scatter", depth=depth)
+        else:
+            rs_plans[ax] = tuple(planner.plan_buckets(
+                size, shard_bytes, cost, backend=backend,
+                collective="reduce_scatter", failures=failures, depth=depth))
+        if bits is not None:
+            ag_plans[ax] = _plan_axis_with_bits(
+                size, shard_bytes, bits, cost, backend, failures,
+                collective="all_gather")
+        else:
+            ag_plans[ax] = tuple(planner.plan_buckets(
+                size, shard_bytes, cost, backend=backend,
+                collective="all_gather", failures=failures))
         shard_bytes = [b / size for b in shard_bytes]
-    return GradSyncPlans(spec, {}, rs_plans=rs_plans, ag_plans=ag_plans)
+    return GradSyncPlans(spec, {}, rs_plans=rs_plans, ag_plans=ag_plans,
+                         bits=bits)
 
 
 def _dispatch_planned(flat, axis, size, plan: planner.Plan):
@@ -330,13 +420,18 @@ class SyncController:
         # interleaving (DESIGN.md §13); planned_sharded costs serially
         self.depth = (tc.pipeline_depth
                       if tc.sync_algorithm == "planned_pipelined" else 1)
+        # compressed mode: sweep per-bucket wire widths once here; every
+        # re-plan below re-picks strategies at these *frozen* widths so the
+        # compiled step's quantization graph is untouched (DESIGN.md §15)
+        self.compress = tc.sync_algorithm in COMPRESSED_ALGOS
         self.failures = None
         self.last_replan_s: float | None = None
         self.last_replan_cached = False
         self.replan_count = 0
         self.plans = plan_gradient_sync(abstract_grads, tc, mesh, cost,
                                         backend, sharded=True,
-                                        depth=self.depth)
+                                        depth=self.depth,
+                                        compress=self.compress)
         # seed the memo with the healthy plan: recovery back to the empty
         # mask is always a hit (DESIGN.md §14)
         self._plan_memo = OrderedDict({self._memo_key(None): self.plans})
@@ -374,7 +469,11 @@ class SyncController:
             plans = plan_gradient_sync(self._grads, self._tc, self._mesh,
                                        self._cost, self._backend,
                                        sharded=True, failures=failure_mask,
-                                       depth=self.depth)
+                                       depth=self.depth,
+                                       compress=self.compress,
+                                       bits_overrides=(self.plans.bits
+                                                       if self.compress
+                                                       else None))
             self._plan_memo[key] = plans
             while len(self._plan_memo) > self.MEMO_CAP:
                 self._plan_memo.popitem(last=False)
@@ -460,6 +559,42 @@ def sync_gradients(grads, tc: TrainConfig, mesh, ef_state=None,
 
         grads = bucketing.bucketed_apply_indexed(
             grads, bucket_fn, plans.spec, sync_dtype=_dtype(tc.sync_dtype))
+        grads = jax.tree.map(lambda g: g / total, grads)
+        return grads, new_ef
+
+    elif alg == "planned_compressed":
+        plans = sync_plans or plan_gradient_sync(grads, tc, mesh,
+                                                 compress=True)
+        if ef_state is None:
+            ef_state = jax.tree.map(jnp.zeros_like, grads)
+
+        def bucket_fn(flat, nbytes, i):
+            for ax in axes:
+                flat = _dispatch_planned(flat, ax, sizes[ax],
+                                         plans.plans[ax][i])
+            return flat
+
+        grads, new_ef = bucketing.bucketed_apply_compressed(
+            grads, ef_state, bucket_fn, plans.spec, bits=plans.bits,
+            block=tc.compress_block, fused=tc.compress_fused_kernel,
+            sync_dtype=_dtype(tc.sync_dtype))
+        grads = jax.tree.map(lambda g: g / total, grads)
+        return grads, new_ef
+
+    elif alg == "planned_sharded_compressed":
+        plans = sync_plans or plan_gradient_sync(grads, tc, mesh,
+                                                 sharded=True, compress=True)
+        if ef_state is None:
+            ef_state = jax.tree.map(jnp.zeros_like, grads)
+
+        def bucket_fn(flat, nbytes, i):
+            return _sharded_sync_axes(flat, axes, sizes, plans, i,
+                                      codes=plan_codes)
+
+        grads, new_ef = bucketing.bucketed_apply_compressed(
+            grads, ef_state, bucket_fn, plans.spec, bits=plans.bits,
+            block=tc.compress_block, fused=tc.compress_fused_kernel,
+            sync_dtype=_dtype(tc.sync_dtype))
         grads = jax.tree.map(lambda g: g / total, grads)
         return grads, new_ef
 
@@ -560,7 +695,7 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     # just dispatches bucket i to its precomputed plan (DESIGN.md §10)
     sync_plans = None
     controller = None
-    if (tc.sync_algorithm in ("planned",) + SHARDED_ALGOS
+    if (tc.sync_algorithm in ("planned", "planned_compressed") + SHARDED_ALGOS
             and mesh is not None and dp_axes_of(mesh)):
         g_dtype = _dtype(tc.grad_accum_dtype if tc.microbatches > 1
                          else tc.param_dtype)
@@ -571,7 +706,9 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
             controller = SyncController(abstract_grads, tc, mesh)
             sync_plans = controller.plans
         else:
-            sync_plans = plan_gradient_sync(abstract_grads, tc, mesh)
+            sync_plans = plan_gradient_sync(
+                abstract_grads, tc, mesh,
+                compress=tc.sync_algorithm == "planned_compressed")
 
     def loss_fn(params, batch):
         return api.loss(params, batch)
@@ -599,6 +736,17 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     assert mesh is not None, "manual sync modes need the mesh"
     dp = dp_axes_of(mesh)
 
+    def _shard_map(fn, in_specs, out_specs):
+        try:
+            sm = jax.shard_map
+        except AttributeError:  # pre-jax.shard_map fallback
+            from jax.experimental.shard_map import shard_map as sm_old
+
+            return sm_old(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=set(dp), check_vma=False)
+
     # state replicated over DP axes, sharded over 'model' per param rules is
     # delegated to GSPMD ('model' stays an auto axis inside shard_map).
     state_specs = P()   # replicated across manual axes
@@ -609,27 +757,21 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
 
     def wrapped(state, batch, plan_codes=None):
         if plan_codes is None:
-            f = jax.shard_map(
+            f = _shard_map(
                 step_body,
-                mesh=mesh,
                 in_specs=(state_specs,
                           jax.tree.map(lambda _: batch_spec, batch)),
                 out_specs=(state_specs, P()),
-                axis_names=set(dp),
-                check_vma=False,
             )
             return f(state, batch)
         # the strategy codes ride in replicated (P()) so every device takes
         # the same lax.cond branch — a requirement for the collectives inside
-        f = jax.shard_map(
+        f = _shard_map(
             step_body,
-            mesh=mesh,
             in_specs=(state_specs,
                       jax.tree.map(lambda _: batch_spec, batch),
                       jax.tree.map(lambda _: P(), plan_codes)),
             out_specs=(state_specs, P()),
-            axis_names=set(dp),
-            check_vma=False,
         )
         return f(state, batch, plan_codes)
 

@@ -266,7 +266,7 @@ def test_depth_keys_never_mix():
     assert cache.stats.memory_hits == 2
     # distinct disk identities, both stamped with their depth
     assert k1.filename() != k2.filename()
-    assert "-D1." in k1.filename() and "-D2." in k2.filename()
+    assert "-D1-" in k1.filename() and "-D2-" in k2.filename()
     assert k1.filename().endswith(f".v{plan_cache.SCHEMA_VERSION}.npz")
     assert k1.meta()["depth"] == 1 and k2.meta()["depth"] == 2
     with pytest.raises(ValueError, match="depth"):
