@@ -1,0 +1,218 @@
+"""Multi-tenant ring contention: p50/p99 collective latency vs offered load
+(DESIGN.md §16, EXPERIMENTS.md §Traffic).
+
+Written to ``BENCH_traffic.json`` by ``python -m benchmarks.bench_traffic``:
+
+* ``load_sweep`` — one fixed Poisson arrival trace (two training tenants'
+  all-reduces + one serving tenant's all-gathers) compressed/dilated by
+  ``traffic.scale_jobs`` across offered loads, served under both wavelength
+  policies.  Same sample path at every load, so p99 must grow monotonically
+  with load per policy — the CI smoke asserts it.  Records p50/p99/mean
+  overall and per tenant, fusion accounting (groups fused, slots saved) and
+  the plan-memo hit/miss split.
+* ``zero_load`` — the acceptance anchor: a single tenant's lone job under
+  either policy must time *bit-identically* to ``simulate_composed`` on the
+  same schedule (depth-1 composition reuses the original Step objects).
+  ``bit_identical`` is an exact ``==``, not an approx.
+* ``serving`` — the serve-engine bridge: rounds of a
+  ``qwen2-1.5b``-configured engine (synthetic ``RoundStats``; the live
+  ``Engine.round_log`` path is pinned in ``tests/test_serve.py``) become
+  KV/activation-sized all-gathers via ``ServingTrafficSource``, measured
+  alone, sharing the pool with training, and λ-partitioned from it —
+  the isolation-vs-utilization trade the two policies embody.
+
+``rows()`` exposes a cheap subset to the ``benchmarks.run`` harness;
+``--quick`` shrinks the sweep for the CI smoke (the workflow uploads the
+JSON as an artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.configs import registry
+from repro.core import compose, simulator, step_models as sm, traffic, wrht
+from repro.serve.engine import RoundStats
+
+N = 64
+W = 64
+MB = 2**20 * 8.0
+LOADS = (0.25, 0.5, 1.0, 2.0, 4.0)
+QUICK_LOADS = (0.25, 1.0, 4.0)
+HORIZON_S = 1.0
+QUICK_HORIZON_S = 0.4
+SEED = 17
+SERVE_ARCH = "qwen2-1.5b"
+ROUNDS = 32          # synthetic serving rounds fed to ServingTrafficSource
+ROUND_PERIOD_S = 2e-3
+
+
+def _optical() -> sm.OpticalParams:
+    return sm.OpticalParams(wavelengths=W)
+
+
+def _tenants() -> list[traffic.TenantSpec]:
+    """Two training tenants + one serving tenant, rates sized so load 1.0
+    sits near the ring's fused service capacity."""
+    return [
+        traffic.TenantSpec("train-a", rate_hz=30.0, d_bits=32 * MB),
+        traffic.TenantSpec("train-b", rate_hz=30.0, d_bits=8 * MB),
+        traffic.TenantSpec("serve", rate_hz=60.0, d_bits=2 * MB,
+                           collective="all_gather"),
+    ]
+
+
+def measure_load_sweep(loads=LOADS, horizon_s=HORIZON_S) -> list[dict]:
+    tenants = _tenants()
+    base = traffic.PoissonSource(tenants, seed=SEED).jobs(horizon_s)
+    rows = []
+    for policy in traffic.POLICIES:
+        for load in loads:
+            sim = traffic.RingTrafficSim(N, _optical(), policy=policy)
+            res = sim.run(traffic.scale_jobs(base, load), tenants=tenants)
+            row = {"load": load, **res.summary()}
+            rows.append(row)
+    return rows
+
+
+def measure_zero_load() -> list[dict]:
+    """One tenant, one job, idle ring: the traffic path must reduce to the
+    single-job composed simulation exactly."""
+    d = 32 * MB
+    p = _optical()
+    sched = wrht.build_collective_schedule("allreduce", N, W, d,
+                                           validate=False)
+    direct = simulator.simulate_composed(
+        compose.compose_schedules([sched]), d, p).total_s
+    rows = []
+    for policy in traffic.POLICIES:
+        sim = traffic.RingTrafficSim(N, p, policy=policy)
+        res = sim.run([traffic.CollectiveJob("solo", 0.0, "allreduce", d)])
+        lat = res.jobs[0].latency_s
+        rows.append({
+            "policy": policy, "d_bits": d,
+            "traffic_s": lat, "simulate_composed_s": float(direct),
+            "bit_identical": lat == direct,
+        })
+    return rows
+
+
+def _serve_jobs(horizon_s: float) -> list[traffic.CollectiveJob]:
+    cfg = registry.get(SERVE_ARCH)
+    log = [RoundStats(admitted=4, batch=4, prefill_len=128, decode_steps=64)
+           for _ in range(ROUNDS)]
+    src = traffic.ServingTrafficSource(cfg, log,
+                                       round_period_s=ROUND_PERIOD_S)
+    return src.jobs(horizon_s)
+
+
+def measure_serving(horizon_s=HORIZON_S) -> dict:
+    """Three tenants (serve + two training jobs' streams) so the
+    partitioned policy's λ split is non-trivial: at K=2 the n=64
+    collectives fit either half-pool unchanged (allreduce peaks at 32 λ,
+    the all_gather ring pass at 1) and both policies time identically;
+    at K=3 the 21-λ slice stretches the all-reduce and the isolation
+    cost shows up."""
+    serve_jobs = _serve_jobs(horizon_s)
+    train = [traffic.TenantSpec("train", rate_hz=40.0, d_bits=32 * MB),
+             traffic.TenantSpec("train-b", rate_hz=40.0, d_bits=8 * MB)]
+    train_jobs = traffic.PoissonSource(train, seed=SEED + 1).jobs(horizon_s)
+    mixed = sorted(serve_jobs + train_jobs,
+                   key=lambda j: (j.arrival_s, j.tenant))
+
+    alone = traffic.RingTrafficSim(N, _optical(), policy="shared") \
+        .run(serve_jobs)
+    cells = {"serve_alone": {"p50_s": alone.percentile(50),
+                             "p99_s": alone.percentile(99),
+                             "jobs": len(alone.jobs)}}
+    for policy in traffic.POLICIES:
+        sim = traffic.RingTrafficSim(N, _optical(), policy=policy)
+        res = sim.run(mixed)
+        cells[f"mixed_{policy}"] = {
+            "serve_p50_s": res.percentile(50, "serve"),
+            "serve_p99_s": res.percentile(99, "serve"),
+            "train_p99_s": res.percentile(99, "train"),
+            "train_b_p99_s": res.percentile(99, "train-b"),
+            "fused_groups": sum(1 for g in res.groups if len(g.jobs) > 1),
+        }
+        cells[f"mixed_{policy}"]["serve_p99_interference"] = (
+            cells[f"mixed_{policy}"]["serve_p99_s"]
+            / cells["serve_alone"]["p99_s"])
+    cfg = registry.get(SERVE_ARCH)
+    cells["shapes"] = {
+        "arch": SERVE_ARCH,
+        "kv_bits_per_token": traffic.kv_bits_per_token(cfg),
+        "activation_bits_per_token": traffic.activation_bits_per_token(cfg),
+        "rounds": ROUNDS, "round_period_s": ROUND_PERIOD_S,
+    }
+    return cells
+
+
+def rows() -> list[dict]:
+    """Cheap subset for the ``benchmarks.run`` CSV harness."""
+    out = []
+    for row in measure_load_sweep(loads=QUICK_LOADS,
+                                  horizon_s=QUICK_HORIZON_S):
+        out.append({
+            "name": f"traffic_{row['policy']}_load{row['load']:g}",
+            "us_per_call": row["p99_s"] * 1e6,
+            "derived": {"p50_ms": round(row["p50_s"] * 1e3, 3),
+                        "p99_ms": round(row["p99_s"] * 1e3, 3),
+                        "fused_groups": row["fused_groups"],
+                        "slots_saved": row["slots_saved"]},
+        })
+    for row in measure_zero_load():
+        out.append({
+            "name": f"traffic_zero_load_{row['policy']}",
+            "us_per_call": row["traffic_s"] * 1e6,
+            "derived": {"bit_identical": row["bit_identical"]},
+        })
+    return out
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    loads = QUICK_LOADS if quick else LOADS
+    horizon_s = QUICK_HORIZON_S if quick else HORIZON_S
+    payload = {
+        "config": {
+            "n": N, "wavelengths": W, "seed": SEED,
+            "horizon_s": horizon_s, "loads": list(loads),
+            "tenants": [{"name": t.name, "rate_hz": t.rate_hz,
+                         "d_bits": t.d_bits, "collective": t.collective}
+                        for t in _tenants()],
+            "quick": quick,
+            "note": "load_sweep scales ONE fixed arrival trace by 1/load "
+                    "(traffic.scale_jobs), so p99 is monotone in load along "
+                    "the same sample path per policy.  zero_load must be "
+                    "bit_identical: an uncontended job composes depth-1 and "
+                    "reuses the original Step objects, so its latency IS "
+                    "simulate_composed on that schedule.",
+        },
+        "load_sweep": measure_load_sweep(loads=loads, horizon_s=horizon_s),
+        "zero_load": measure_zero_load(),
+        "serving": measure_serving(horizon_s=horizon_s),
+    }
+    out = Path(__file__).resolve().parents[1] / "BENCH_traffic.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    for row in payload["load_sweep"]:
+        print(f"  {row['policy']:12s} load={row['load']:<5g} "
+              f"p50 {row['p50_s'] * 1e3:9.3f} ms  "
+              f"p99 {row['p99_s'] * 1e3:9.3f} ms  "
+              f"({row['jobs']} jobs, {row['fused_groups']} fused groups, "
+              f"{row['slots_saved']} slots saved)")
+    for row in payload["zero_load"]:
+        print(f"  zero-load {row['policy']:12s} "
+              f"{row['traffic_s'] * 1e3:.6f} ms "
+              f"bit_identical={row['bit_identical']}")
+    s = payload["serving"]
+    print(f"  serve alone p99 {s['serve_alone']['p99_s'] * 1e3:.3f} ms; "
+          f"vs train shared ×{s['mixed_shared']['serve_p99_interference']:.2f}, "
+          f"partitioned ×{s['mixed_partitioned']['serve_p99_interference']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

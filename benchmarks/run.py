@@ -39,6 +39,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
                      decline boundary (full sweep writes
                      BENCH_compression.json via
                      `python -m benchmarks.bench_compression`)
+  traffic            multi-tenant ring contention: p50/p99 collective
+                     latency vs offered load under shared vs partitioned
+                     wavelength policies + the zero-load bit-identity
+                     anchor (full sweep writes BENCH_traffic.json via
+                     `python -m benchmarks.bench_traffic`)
 """
 
 from __future__ import annotations
@@ -58,6 +63,7 @@ def main() -> None:
         bench_schedule_build,
         bench_storm,
         bench_sweep,
+        bench_traffic,
         fig4_optical,
         fig5_electrical,
         planner_crossover,
@@ -80,6 +86,7 @@ def main() -> None:
         "pipeline": bench_pipeline,
         "storm": bench_storm,
         "compression": bench_compression,
+        "traffic": bench_traffic,
     }
     selected = sys.argv[1:] or list(modules)
     print("name,us_per_call,derived")

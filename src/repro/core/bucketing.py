@@ -13,6 +13,7 @@ Why buckets:
 from __future__ import annotations
 
 import math
+from collections import deque
 from dataclasses import dataclass
 
 import jax
@@ -178,12 +179,15 @@ def bucketed_apply_pipelined(tree, rs_fn, ag_fn, spec: BucketSpec,
     buckets = flatten_to_buckets(tree, spec, dtype=sync_dtype)
     nbytes = [b.size * b.dtype.itemsize for b in buckets]
     out: list = [None] * len(buckets)
-    window: list[tuple[int, object, object]] = []
+    # deque: the sliding window drains from the left every bucket, and
+    # list.pop(0) is O(window) per bucket (the StepWatchdog pattern,
+    # DESIGN.md §14) — popleft is O(1) at any depth
+    window: deque[tuple[int, object, object]] = deque()
     for i, b in enumerate(buckets):
         shard, ctx = rs_fn(b, nbytes[i], i)
         window.append((i, shard, ctx))
         if len(window) >= depth:
-            j, shard, ctx = window.pop(0)
+            j, shard, ctx = window.popleft()
             out[j] = ag_fn(shard, ctx, nbytes[j], j)
     for j, shard, ctx in window:
         out[j] = ag_fn(shard, ctx, nbytes[j], j)

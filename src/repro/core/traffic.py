@@ -1,0 +1,596 @@
+"""Multi-tenant optical traffic simulator (DESIGN.md §16).
+
+Every engine below this layer times ONE collective in isolation; the
+paper's premise — WDM wavelengths as the scarce shared resource — only
+bites when many jobs contend for the same ring.  This module is the
+job-level discrete-event simulator of that contention: concurrent tenants
+(Poisson or trace-driven arrivals, heterogeneous collective/payload mixes)
+submit planned collectives that queue for one optical ring, and admitted
+groups run *concurrently* as a :class:`~repro.core.compose.ComposedSchedule`
+timed by :func:`~repro.core.simulator.simulate_composed`.
+
+Wavelength policies (the contention knob):
+
+* ``"shared"`` — every tenant draws on the full λ pool; the admitted
+  group is fused by :func:`~repro.core.compose.compose_schedules`, whose
+  per-slot First-Fit RWA over the union :class:`TransferBatch` grants
+  cross-tenant overlap when the wavelengths fit and *serializes* the slot
+  when they don't.  Full pool per job at low load, RWA contention at high.
+* ``"partitioned"`` — the pool is split evenly among the registered
+  tenants; each tenant's schedule is built under its sub-budget ``w/K``
+  and shifted into its own λ range, so cross-tenant fusion is
+  conflict-free *by construction* (:func:`compose_partitioned` zips the
+  constituents slot-by-slot with no RWA pass).  Perfect isolation, paid
+  for with narrower — hence longer — per-tenant schedules even when the
+  ring is otherwise idle.
+
+Service discipline: FIFO with at most one in-flight job per tenant per
+group (a tenant's own collectives are ordered — successive training steps,
+successive serve rounds — while distinct tenants are mutually concurrent),
+bounded by ``max_concurrent`` fused jobs and an optional ``max_queue``
+admission cap.
+
+Re-planning: per-tenant schedules are memoized in an LRU plan memo keyed
+on the d-independent build inputs *and* the tenant's partition slice —
+the same recovery pattern as the trainer's
+``SyncController`` plan memo (DESIGN.md §14).  A tenant joining or
+leaving re-partitions the pool and therefore re-plans every survivor;
+returning to a previously seen tenant set is a pure memo hit
+(``last_replan_cached``), which ``tests/test_traffic.py`` pins.
+
+Zero-contention invariant: a single tenant submitting one job — under
+either policy — composes a depth-1 schedule that is bit-identical to the
+uncomposed one, so its latency equals ``simulate_composed`` on the same
+schedule exactly (the ``benchmarks/bench_traffic.py`` anchor cell).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+from dataclasses import dataclass, field, replace
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from . import compose, simulator, step_models, wrht
+from .topology import Ring, TransferBatch
+
+
+# ---------------------------------------------------------------------------
+# Jobs, tenants, sources
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CollectiveJob:
+    """One planned collective submitted to the shared ring."""
+
+    tenant: str
+    arrival_s: float
+    collective: str = "allreduce"
+    d_bits: float = 32.0 * 2**20 * 8
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "collective",
+                           wrht.coerce_collective(self.collective))
+        if self.arrival_s < 0:
+            raise ValueError("arrival_s must be >= 0")
+        if self.d_bits <= 0:
+            raise ValueError("d_bits must be > 0")
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's arrival process and collective mix.
+
+    ``rate_hz`` is the Poisson job-arrival rate; ``join_s``/``leave_s``
+    bound the tenant's registration window (arrivals only inside it, and —
+    under the partitioned policy — the tenant owns a λ slice only while
+    registered, so joins/leaves re-partition the pool).
+    """
+
+    name: str
+    rate_hz: float = 1.0
+    d_bits: float = 32.0 * 2**20 * 8
+    collective: str = "allreduce"
+    join_s: float = 0.0
+    leave_s: float | None = None
+
+    def registered_at(self, t: float) -> bool:
+        return self.join_s <= t and (self.leave_s is None or t < self.leave_s)
+
+
+@runtime_checkable
+class TrafficSource(Protocol):
+    """Anything that can emit a job trace for a horizon."""
+
+    def jobs(self, horizon_s: float) -> list[CollectiveJob]:
+        ...
+
+
+class PoissonSource:
+    """Seeded Poisson arrivals per tenant, clipped to the tenant's
+    registration window.  Deterministic for a fixed ``(tenants, seed)``."""
+
+    def __init__(self, tenants: Sequence[TenantSpec], seed: int = 0) -> None:
+        self.tenants = tuple(tenants)
+        if len({t.name for t in self.tenants}) != len(self.tenants):
+            raise ValueError("tenant names must be unique")
+        self.seed = seed
+
+    def jobs(self, horizon_s: float) -> list[CollectiveJob]:
+        out: list[CollectiveJob] = []
+        for k, spec in enumerate(self.tenants):
+            if spec.rate_hz <= 0:
+                continue
+            rng = np.random.default_rng([self.seed, k])
+            t = spec.join_s
+            end = min(horizon_s, spec.leave_s
+                      if spec.leave_s is not None else horizon_s)
+            while True:
+                t += rng.exponential(1.0 / spec.rate_hz)
+                if t >= end:
+                    break
+                out.append(CollectiveJob(spec.name, t, spec.collective,
+                                         spec.d_bits))
+        out.sort(key=lambda j: (j.arrival_s, j.tenant))
+        return out
+
+
+class TraceSource:
+    """A fixed, explicit job trace (replayable measurements)."""
+
+    def __init__(self, jobs: Sequence[CollectiveJob]) -> None:
+        self._jobs = sorted(jobs, key=lambda j: (j.arrival_s, j.tenant))
+
+    def jobs(self, horizon_s: float) -> list[CollectiveJob]:
+        return [j for j in self._jobs if j.arrival_s < horizon_s]
+
+
+def scale_jobs(jobs: Sequence[CollectiveJob],
+               load: float) -> list[CollectiveJob]:
+    """Offered-load sweep on a *fixed* arrival sample path: dividing every
+    arrival time by ``load`` compresses (load > 1) or dilates (load < 1)
+    the same trace, so queueing delay grows with ``load`` along the same
+    sample path — the monotonicity ``bench_traffic`` asserts — instead of
+    comparing unrelated random draws."""
+    if load <= 0:
+        raise ValueError("load must be > 0")
+    return [replace(j, arrival_s=j.arrival_s / load) for j in jobs]
+
+
+# ---------------------------------------------------------------------------
+# serve.Engine as a traffic source (the inference tenant)
+# ---------------------------------------------------------------------------
+
+def kv_bits_per_token(cfg, bits: int = 16) -> float:
+    """Wire size of one token's K+V rows across all layers (the sharded KV
+    shape an inference all-gather moves)."""
+    return 2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.resolved_head_dim * bits
+
+
+def activation_bits_per_token(cfg, bits: int = 16) -> float:
+    """Wire size of one token's residual-stream activations (what a
+    tensor-parallel decode step all-gathers)."""
+    return float(cfg.d_model) * bits
+
+
+class ServingTrafficSource:
+    """``serve.Engine`` rounds as inference collectives (DESIGN.md §16).
+
+    Each :class:`~repro.serve.engine.RoundStats` in an engine's
+    ``round_log`` becomes two all-gather jobs sized from the model's
+    sharded shapes: the *prefill* all-gather moves the round's freshly
+    written KV rows (``admitted × prefill_len`` tokens at
+    :func:`kv_bits_per_token`), the *decode* all-gather the
+    tensor-parallel activations aggregated over the round's decode steps
+    (``admitted × decode_steps`` tokens at
+    :func:`activation_bits_per_token`).  Rounds arrive ``round_period_s``
+    apart — inference all-gathers that compete with training all-reduces
+    in the shared-ring simulation.
+    """
+
+    def __init__(self, cfg, round_log: Sequence, *, tenant: str = "serve",
+                 round_period_s: float = 1e-3, start_s: float = 0.0,
+                 compute_bits: int = 16,
+                 collective: str = "all_gather") -> None:
+        self.cfg = cfg
+        self.round_log = list(round_log)
+        self.tenant = tenant
+        self.round_period_s = round_period_s
+        self.start_s = start_s
+        self.compute_bits = compute_bits
+        self.collective = collective
+
+    @classmethod
+    def from_engine(cls, engine, **kw) -> "ServingTrafficSource":
+        """Wrap a live :class:`~repro.serve.engine.Engine` — call after
+        ``engine.run()`` so ``round_log`` is populated."""
+        return cls(engine.cfg, engine.round_log, **kw)
+
+    def jobs(self, horizon_s: float) -> list[CollectiveJob]:
+        out: list[CollectiveJob] = []
+        for k, r in enumerate(self.round_log):
+            t = self.start_s + k * self.round_period_s
+            if t >= horizon_s:
+                break
+            out.append(CollectiveJob(
+                self.tenant, t, self.collective,
+                r.admitted * r.prefill_len
+                * kv_bits_per_token(self.cfg, self.compute_bits)))
+            if r.decode_steps > 0:
+                out.append(CollectiveJob(
+                    self.tenant, t, self.collective,
+                    r.admitted * r.decode_steps
+                    * activation_bits_per_token(self.cfg,
+                                                self.compute_bits)))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Partitioned cross-tenant composition
+# ---------------------------------------------------------------------------
+
+def shift_wavelengths(sched: wrht.WRHTSchedule, base: int,
+                      w_total: int) -> wrht.WRHTSchedule:
+    """Move a schedule built under a sub-budget into its λ partition:
+    every assigned wavelength is offset by ``base`` and the schedule's
+    budget is re-stamped to the full pool (the constituent then validates
+    under the composed ring).  Batch identity is preserved per *input*
+    batch — a ring pass sharing one batch across steps keeps sharing the
+    shifted one, so the timing profile's segment dedup still applies."""
+    if base == 0 and sched.w == w_total:
+        return sched
+    shifted: dict[int, TransferBatch] = {}
+    steps = []
+    for st in sched.steps:
+        b = st.transfers
+        nb = shifted.get(id(b))
+        if nb is None:
+            nb = b.with_wavelengths(b.wavelength + base)
+            shifted[id(b)] = nb
+        steps.append(wrht.Step(st.kind, st.level, nb, chunks=st.chunks))
+    return replace(sched, w=w_total, steps=steps)
+
+
+def compose_partitioned(
+    schedules: Sequence[wrht.WRHTSchedule], n: int, w: int,
+    max_hops: int | None = None,
+) -> compose.ComposedSchedule:
+    """Zip ``k`` partition-disjoint schedules slot-by-slot.
+
+    The constituents occupy disjoint λ ranges (built under sub-budgets and
+    shifted by :func:`shift_wavelengths`), so slot ``t`` simply
+    concatenates every constituent's step ``t`` — no RWA pass, no
+    serialization fallback, conflict-free by construction
+    (``validate_composed`` re-checks this).  Single-constituent slots keep
+    the original :class:`~repro.core.wrht.Step` object, so ``k = 1``
+    composition is bit-identical to the uncomposed schedule — the same
+    depth-1 invariant as :func:`~repro.core.compose.compose_schedules`."""
+    schedules = tuple(schedules)
+    if not schedules:
+        raise ValueError("need at least one schedule to compose")
+    lens = [len(s.steps) for s in schedules]
+    steps: list[compose.ComposedStep] = []
+    for t in range(max(lens)):
+        live = [(j, schedules[j].steps[t])
+                for j in range(len(schedules)) if t < lens[j]]
+        if len(live) == 1:
+            j, st = live[0]
+            steps.append(compose.ComposedStep(
+                st.transfers,
+                (compose.ComposedPart(j, t, 0, len(st.transfers)),)))
+            continue
+        cat, _ = wrht._concat_batches([st.transfers for _, st in live])
+        ptr = np.zeros(len(live) + 1, dtype=np.int64)
+        np.cumsum([len(st.transfers) for _, st in live], out=ptr[1:])
+        parts = tuple(
+            compose.ComposedPart(j, t, int(ptr[i]), int(ptr[i + 1]))
+            for i, (j, _) in enumerate(live))
+        steps.append(compose.ComposedStep(cat, parts))
+    return compose.ComposedSchedule(n=n, w=w, schedules=schedules,
+                                    steps=steps, max_hops=max_hops)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class JobRecord:
+    job: CollectiveJob
+    start_s: float     # service start (group start)
+    finish_s: float    # service end (group end)
+    group: int         # index into TrafficResult.groups
+
+    @property
+    def latency_s(self) -> float:
+        """Queueing + service: what the tenant observes."""
+        return self.finish_s - self.job.arrival_s
+
+    @property
+    def wait_s(self) -> float:
+        return self.start_s - self.job.arrival_s
+
+
+@dataclass(frozen=True)
+class GroupRecord:
+    """One service batch: the jobs fused onto the ring together."""
+
+    index: int
+    start_s: float
+    service_s: float
+    jobs: tuple[CollectiveJob, ...]
+    slots: int
+    serial_slots: int
+    fused_slots: int
+    composed: compose.ComposedSchedule | None = None  # keep_schedules only
+
+    @property
+    def finish_s(self) -> float:
+        return self.start_s + self.service_s
+
+
+@dataclass
+class TrafficResult:
+    policy: str
+    n: int
+    w: int
+    timing: str
+    jobs: list[JobRecord] = field(default_factory=list)
+    groups: list[GroupRecord] = field(default_factory=list)
+    rejected: list[CollectiveJob] = field(default_factory=list)
+    replans: int = 0             # plan-memo misses (schedules actually built)
+    replan_memo_hits: int = 0    # plan-memo hits (join/leave recovery path)
+    repartitions: int = 0        # registered-set changes observed at service
+
+    def latencies(self, tenant: str | None = None) -> np.ndarray:
+        lat = [r.latency_s for r in self.jobs
+               if tenant is None or r.job.tenant == tenant]
+        return np.asarray(lat, dtype=np.float64)
+
+    def percentile(self, q: float, tenant: str | None = None) -> float:
+        lat = self.latencies(tenant)
+        if lat.size == 0:
+            return math.nan
+        return float(np.percentile(lat, q))
+
+    @property
+    def tenants(self) -> list[str]:
+        return sorted({r.job.tenant for r in self.jobs})
+
+    def summary(self) -> dict:
+        """The benchmark row: p50/p99 overall and per tenant, plus fusion
+        and admission accounting."""
+        out = {
+            "policy": self.policy, "n": self.n, "w": self.w,
+            "jobs": len(self.jobs), "rejected": len(self.rejected),
+            "groups": len(self.groups),
+            "p50_s": self.percentile(50), "p99_s": self.percentile(99),
+            "mean_s": (float(self.latencies().mean())
+                       if self.jobs else math.nan),
+            "replans": self.replans,
+            "replan_memo_hits": self.replan_memo_hits,
+            "repartitions": self.repartitions,
+            "fused_groups": sum(1 for g in self.groups if len(g.jobs) > 1),
+            "slots_saved": sum(g.serial_slots - g.slots
+                               for g in self.groups),
+        }
+        out["per_tenant"] = {
+            t: {"jobs": int(sum(1 for r in self.jobs if r.job.tenant == t)),
+                "p50_s": self.percentile(50, t),
+                "p99_s": self.percentile(99, t)}
+            for t in self.tenants
+        }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The simulator
+# ---------------------------------------------------------------------------
+
+POLICIES = ("shared", "partitioned")
+
+
+class RingTrafficSim:
+    """Job-level contention simulator for one optical ring.
+
+    ``max_concurrent`` bounds the jobs fused per service group (admission
+    control, on top of the one-job-per-tenant rule); ``max_queue`` rejects
+    arrivals beyond the backlog cap (``None`` = unbounded FIFO).
+    ``memo_cap`` bounds the per-tenant schedule plan memo (LRU), the
+    join/leave recovery path: ``last_replan_cached`` mirrors the trainer's
+    ``SyncController`` contract (DESIGN.md §14).
+    """
+
+    def __init__(self, n: int, p: step_models.OpticalParams | None = None,
+                 *, policy: str = "shared", max_concurrent: int = 4,
+                 max_queue: int | None = None, timing: str | None = None,
+                 keep_schedules: bool = False, memo_cap: int = 64) -> None:
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r} "
+                             f"(expected one of {POLICIES})")
+        if max_concurrent < 1:
+            raise ValueError("max_concurrent must be >= 1")
+        self.n = n
+        self.p = p or step_models.OpticalParams()
+        self.w = self.p.wavelengths
+        self.policy = policy
+        self.max_concurrent = max_concurrent
+        self.max_queue = max_queue
+        self.timing = timing or self.p.timing
+        self.keep_schedules = keep_schedules
+        self.memo_cap = memo_cap
+        self.max_hops = Ring(max(n, 2), self.w,
+                             bandwidth_bps=self.p.bandwidth_bps,
+                             reconfig_delay_s=self.p.reconfig_delay_s,
+                             physical=self.p.physical).max_hops
+        # plan memo: d-independent-ish build inputs + the partition slice
+        self._plan_memo: "OrderedDict[tuple, wrht.WRHTSchedule]" = \
+            OrderedDict()
+        # composed-group memo: tuple of plan keys -> (composed, timing stats)
+        self._group_memo: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self.replans = 0
+        self.replan_memo_hits = 0
+        self.last_replan_cached = False
+
+    # -- planning ---------------------------------------------------------
+
+    def _plan_key(self, job: CollectiveJob, w_eff: int,
+                  base: int) -> tuple:
+        return (job.collective, float(job.d_bits), w_eff, base)
+
+    def _plan(self, job: CollectiveJob, w_eff: int,
+              base: int) -> wrht.WRHTSchedule:
+        """The job's schedule inside its λ slice, through the LRU plan
+        memo.  A repartition changes ``(w_eff, base)`` and therefore
+        misses; returning to a previously seen partition hits."""
+        key = self._plan_key(job, w_eff, base)
+        sched = self._plan_memo.get(key)
+        if sched is not None:
+            self._plan_memo.move_to_end(key)
+            self.replan_memo_hits += 1
+            self.last_replan_cached = True
+            return sched
+        sched = wrht.build_collective_schedule(
+            job.collective, self.n, w_eff, job.d_bits,
+            bandwidth_bps=self.p.bandwidth_bps,
+            reconfig_delay_s=self.p.reconfig_delay_s,
+            validate=False, max_hops=self.max_hops)
+        sched = shift_wavelengths(sched, base, self.w)
+        self._plan_memo[key] = sched
+        while len(self._plan_memo) > self.memo_cap:
+            self._plan_memo.popitem(last=False)
+        self.replans += 1
+        self.last_replan_cached = False
+        return sched
+
+    def _partition(self, registered: Sequence[str]) -> dict[str, tuple]:
+        """Even static split of the pool among the registered tenants:
+        tenant ``k`` (in name order) owns ``[k·w/K, (k+1)·w/K)``."""
+        names = sorted(registered)
+        w_eff = self.w // len(names)
+        if w_eff < 1:
+            raise ValueError(
+                f"partitioned policy cannot split w={self.w} wavelengths "
+                f"among {len(names)} tenants")
+        return {t: (w_eff, k * w_eff) for k, t in enumerate(names)}
+
+    def _compose_group(self, group: Sequence[CollectiveJob],
+                       registered: Sequence[str]) -> tuple:
+        """(composed, service stats) for one admitted group, memoized on
+        the per-job plan keys."""
+        if self.policy == "partitioned":
+            slices = self._partition(registered)
+            keys = tuple(self._plan_key(j, *slices[j.tenant])
+                         for j in group)
+        else:
+            keys = tuple(self._plan_key(j, self.w, 0) for j in group)
+        hit = self._group_memo.get(keys)
+        if hit is not None:
+            self._group_memo.move_to_end(keys)
+            # a group hit implies every constituent plan was reused
+            self.replan_memo_hits += len(group)
+            self.last_replan_cached = True
+            return hit
+        if self.policy == "partitioned":
+            scheds = [self._plan(j, *slices[j.tenant]) for j in group]
+            composed = compose_partitioned(scheds, self.n, self.w,
+                                           max_hops=self.max_hops)
+        else:
+            scheds = [self._plan(j, self.w, 0) for j in group]
+            composed = compose.compose_schedules(scheds,
+                                                 max_hops=self.max_hops)
+        res = simulator.simulate_composed(
+            composed, max(j.d_bits for j in group), self.p,
+            timing=self.timing)
+        out = (composed, float(res.total_s))
+        self._group_memo[keys] = out
+        while len(self._group_memo) > self.memo_cap:
+            self._group_memo.popitem(last=False)
+        return out
+
+    # -- the event loop ---------------------------------------------------
+
+    def run(self, source: "TrafficSource | Sequence[CollectiveJob]",
+            horizon_s: float | None = None,
+            tenants: Sequence[TenantSpec] | None = None) -> TrafficResult:
+        """Serve a job trace to completion (arrivals stop at ``horizon_s``;
+        the queue always drains).  ``tenants`` supplies the registration
+        timeline for the partitioned policy — defaulting to the source's
+        own specs (:class:`PoissonSource`) or to always-registered tenants
+        derived from the trace."""
+        if isinstance(source, (list, tuple)):
+            jobs = sorted(source, key=lambda j: (j.arrival_s, j.tenant))
+            if horizon_s is not None:
+                jobs = [j for j in jobs if j.arrival_s < horizon_s]
+        else:
+            if horizon_s is None:
+                raise ValueError("a TrafficSource needs an explicit horizon")
+            jobs = source.jobs(horizon_s)
+        if tenants is None:
+            if isinstance(source, PoissonSource):
+                tenants = source.tenants
+            else:
+                tenants = tuple(TenantSpec(name, rate_hz=0.0)
+                                for name in sorted({j.tenant for j in jobs}))
+        byname = {t.name: t for t in tenants}
+
+        replans0, hits0 = self.replans, self.replan_memo_hits
+        result = TrafficResult(self.policy, self.n, self.w, self.timing)
+        queue: list[CollectiveJob] = []
+        t = 0.0
+        i = 0
+        prev_registered: frozenset[str] | None = None
+        while i < len(jobs) or queue:
+            if not queue:
+                t = max(t, jobs[i].arrival_s)
+            # pull every arrival up to the current clock (the ring just
+            # freed, or idles until this arrival); admission-control the
+            # backlog per arrival
+            while i < len(jobs) and jobs[i].arrival_s <= t:
+                if (self.max_queue is not None
+                        and len(queue) >= self.max_queue):
+                    result.rejected.append(jobs[i])
+                else:
+                    queue.append(jobs[i])
+                i += 1
+            if not queue:
+                continue
+            # FIFO group formation, at most one job per tenant: a tenant's
+            # own collectives are ordered, tenants are mutually concurrent
+            group: list[CollectiveJob] = []
+            seen: set[str] = set()
+            rest: list[CollectiveJob] = []
+            for j in queue:
+                if len(group) < self.max_concurrent and j.tenant not in seen:
+                    group.append(j)
+                    seen.add(j.tenant)
+                else:
+                    rest.append(j)
+            queue = rest
+            # the registered set at service time drives the λ partition;
+            # tenants of in-flight jobs stay registered until served
+            registered = frozenset(
+                name for name, spec in byname.items()
+                if spec.registered_at(t)) | seen
+            if prev_registered is not None and registered != prev_registered:
+                result.repartitions += 1
+            prev_registered = registered
+            composed, service_s = self._compose_group(group,
+                                                      sorted(registered))
+            gi = len(result.groups)
+            result.groups.append(GroupRecord(
+                index=gi, start_s=t, service_s=service_s, jobs=tuple(group),
+                slots=composed.num_steps,
+                serial_slots=composed.serial_steps,
+                fused_slots=composed.fused_steps,
+                composed=composed if self.keep_schedules else None))
+            finish = t + service_s
+            for j in group:
+                result.jobs.append(JobRecord(j, t, finish, gi))
+            t = finish
+        result.jobs.sort(key=lambda r: (r.job.arrival_s, r.job.tenant))
+        result.replans = self.replans - replans0
+        result.replan_memo_hits = self.replan_memo_hits - hits0
+        return result

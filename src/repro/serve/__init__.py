@@ -1,1 +1,1 @@
-from .engine import Engine, Request  # noqa: F401
+from .engine import Engine, Request, RoundStats  # noqa: F401

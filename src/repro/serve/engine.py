@@ -9,7 +9,20 @@ out of scope; the cache layout supports it later.)
 
 Both phases are jit'd once per (batch, seq) bucket; the decode loop runs one
 token per call with a shared scalar position — the same ``serve_step`` the
-decode_32k / long_500k dry-run cells lower.
+decode_32k / long_500k dry-run cells lower.  The batch bucket is sized to
+the *admitted* count, not ``batch_slots``: a half-empty round neither pays
+prefill/decode compute for dead slots nor skews per-round latency, and the
+jit bucket cache stays bounded by the ``batch_slots`` distinct sizes.
+
+``submit`` validates the prompt against the KV-cache geometry up front: a
+prompt whose prefill footprint (``len(prompt)`` plus any frontend stub
+positions) reaches ``max_seq`` would overflow the cache at prefill and
+silently decode garbage, so it is rejected with an actionable ``ValueError``
+instead.  Every request records *why* it finished (``finish_reason``:
+``"eos"`` | ``"budget"`` | ``"seq_limit"``), and every round appends a
+:class:`RoundStats` to ``round_log`` — the hook the multi-tenant traffic
+simulator (``repro.core.traffic``, DESIGN.md §16) uses to size inference
+collectives from real serving behaviour.
 """
 
 from __future__ import annotations
@@ -34,6 +47,20 @@ class Request:
     eos_id: int | None = None
     output: list[int] = field(default_factory=list)
     done: bool = False
+    # why the request finished: "eos" (hit eos_id), "budget" (max_new_tokens
+    # emitted) or "seq_limit" (the shared decode position hit max_seq before
+    # the budget was met) — None while in flight
+    finish_reason: str | None = None
+
+
+@dataclass(frozen=True)
+class RoundStats:
+    """One serve round's shape, recorded in ``Engine.round_log``."""
+
+    admitted: int        # requests actually served this round
+    batch: int           # jit bucket used (== admitted, not batch_slots)
+    prefill_len: int     # KV positions written at prefill (incl. frontend)
+    decode_steps: int    # decode calls issued after prefill
 
 
 class Engine:
@@ -48,15 +75,45 @@ class Engine:
         self.api = mapi.get_api(cfg, compute_dtype=compute_dtype, remat="none")
         self._queue: list[Request] = []
         self._rid = itertools.count()
+        self.round_log: list[RoundStats] = []
+        # retrace counters: the wrapped bodies run once per jit bucket, so
+        # these count compilations, not calls (the bucket-cache-bounded test)
+        self.prefill_traces = 0
+        self.decode_traces = 0
 
-        self._prefill = jax.jit(
-            lambda params, batch, cache: self.api.prefill(params, batch, cache))
-        self._decode = jax.jit(
-            lambda params, tok, pos, cache: self.api.decode(params, tok, pos, cache))
+        def _prefill(params, batch, cache):
+            self.prefill_traces += 1
+            return self.api.prefill(params, batch, cache)
+
+        def _decode(params, tok, pos, cache):
+            self.decode_traces += 1
+            return self.api.decode(params, tok, pos, cache)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    @property
+    def _frontend_extra(self) -> int:
+        return (self.cfg.frontend_seq
+                if self.cfg.frontend == "patch_embed" else 0)
 
     def submit(self, prompt: list[int], max_new_tokens: int = 16,
                eos_id: int | None = None) -> Request:
-        r = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt: prefill needs at least one token")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        extra = self._frontend_extra
+        if len(prompt) + extra >= self.max_seq:
+            frontend = (f" plus {extra} frontend positions" if extra else "")
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens{frontend} does not fit the "
+                f"KV cache: prefill would fill {len(prompt) + extra} of "
+                f"max_seq={self.max_seq} positions, leaving no room to "
+                f"decode — shorten the prompt or raise max_seq")
+        r = Request(next(self._rid), prompt, max_new_tokens, eos_id)
         self._queue.append(r)
         return r
 
@@ -74,9 +131,11 @@ class Engine:
         return done
 
     def _serve_round(self, reqs: list[Request]) -> list[Request]:
-        b = self.batch_slots
+        # size the jit bucket to the admitted count: fewer requests than
+        # batch_slots must not pay full-width prefill/decode, and the
+        # distinct bucket count is bounded by batch_slots
+        b = len(reqs)
         plen = max(len(r.prompt) for r in reqs)
-        plen = max(plen, 1)
         toks = np.full((b, plen), self.pad_id, np.int32)
         for i, r in enumerate(reqs):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad to align ends
@@ -89,22 +148,25 @@ class Engine:
             batch["frames"] = jnp.zeros(
                 (b, self.cfg.encoder_seq, self.cfg.d_model), jnp.bfloat16)
         logits, cache = self._prefill(self.params, batch, cache)
-        pos = plen
-        if self.cfg.frontend == "patch_embed":
-            pos += self.cfg.frontend_seq
+        pos = plen + self._frontend_extra
+        prefill_len = pos
         budget = max(r.max_new_tokens for r in reqs)
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        decode_steps = 0
         for step in range(budget):
             tok_host = np.asarray(jax.device_get(next_tok))
             for i, r in enumerate(reqs):
-                if r.done or len(r.output) >= r.max_new_tokens:
-                    r.done = True
+                if r.done:
                     continue
                 t = int(tok_host[i])
                 r.output.append(t)
                 if r.eos_id is not None and t == r.eos_id:
                     r.done = True
-            if all(r.done or len(r.output) >= r.max_new_tokens for r in reqs):
+                    r.finish_reason = "eos"
+                elif len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    r.finish_reason = "budget"
+            if all(r.done for r in reqs):
                 break
             if pos >= self.max_seq:
                 break
@@ -112,6 +174,14 @@ class Engine:
                                          jnp.asarray(pos, jnp.int32), cache)
             next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
             pos += 1
+            decode_steps += 1
         for r in reqs:
-            r.done = True
+            if not r.done:
+                # the shared decode position hit max_seq before this
+                # request's budget — a truncation, not a completion
+                r.done = True
+                r.finish_reason = "seq_limit"
+        self.round_log.append(RoundStats(admitted=len(reqs), batch=b,
+                                         prefill_len=prefill_len,
+                                         decode_steps=decode_steps))
         return reqs

@@ -1,11 +1,15 @@
-"""Serving engine: determinism, batching equivalence, EOS handling."""
+"""Serving engine: determinism, batching equivalence, EOS handling,
+submit-time KV-geometry validation, finish reasons, bucket-bounded jit
+cache, and the round_log → traffic-source bridge."""
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import registry
+from repro.core import traffic
 from repro.models import api as mapi
 from repro.serve import Engine
 
@@ -57,3 +61,80 @@ def test_queue_drains_multiple_rounds():
     done = eng.run()
     assert len(done) == 5
     assert all(len(r.output) == 3 for r in reqs)
+
+
+def test_submit_rejects_prompt_overflowing_kv_cache():
+    _, eng = _engine()  # max_seq=64
+    with pytest.raises(ValueError, match="max_seq=64"):
+        eng.submit(list(range(1, 65)))  # fills all 64 positions at prefill
+    with pytest.raises(ValueError, match="max_seq=64"):
+        eng.submit(list(range(1, 80)))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit([1, 2], max_new_tokens=0)
+    eng.submit(list(range(1, 64)))  # 63 tokens: one decode slot left — fits
+
+
+def test_finish_reasons():
+    # budget
+    _, eng = _engine()
+    r = eng.submit([1, 2, 3], max_new_tokens=4)
+    eng.run()
+    assert r.finish_reason == "budget" and len(r.output) == 4
+    # eos (probe greedy's first token, then rerun with it as eos_id)
+    eos = r.output[0]
+    _, eng2 = _engine()
+    r2 = eng2.submit([1, 2, 3], max_new_tokens=8, eos_id=eos)
+    eng2.run()
+    assert r2.finish_reason == "eos"
+    # seq_limit: budget larger than the cache positions left after prefill
+    _, eng3 = _engine()
+    r3 = eng3.submit(list(range(1, 61)), max_new_tokens=32)
+    eng3.run()
+    assert r3.finish_reason == "seq_limit"
+    assert len(r3.output) < 32
+
+
+def test_batch_bucket_sized_to_admitted_count():
+    """A half-empty round must trace the admitted-count bucket, not the
+    full batch_slots width — and re-serving the same shape must not
+    retrace (the jit bucket cache stays bounded)."""
+    _, eng = _engine(batch_slots=4)
+    eng.submit([1, 2, 3], max_new_tokens=2)
+    eng.run()  # round of 1
+    assert eng.prefill_traces == 1 and eng.decode_traces == 1
+    assert eng.round_log[-1].batch == 1
+
+    for _ in range(4):
+        eng.submit([4, 5, 6], max_new_tokens=2)
+    eng.run()  # round of 4: new bucket, one more trace each
+    assert eng.prefill_traces == 2 and eng.decode_traces == 2
+    assert eng.round_log[-1].batch == 4
+
+    eng.submit([7, 8], max_new_tokens=2)
+    eng.run()  # round of 1 again, shorter prompt: decode bucket reused
+    assert eng.decode_traces == 2
+    assert eng.round_log[-1].batch == 1
+
+
+def test_round_log_feeds_traffic_source():
+    """The serving bridge end-to-end: a real engine's rounds become
+    all-gather jobs sized from the model's KV/activation shapes, and the
+    traffic simulator serves them alongside a training tenant."""
+    cfg, eng = _engine(batch_slots=2)
+    for i in range(3):
+        eng.submit([i + 1, i + 2, i + 3], max_new_tokens=3)
+    eng.run()
+    assert len(eng.round_log) == 2
+    src = traffic.ServingTrafficSource.from_engine(eng, round_period_s=1e-3)
+    jobs = src.jobs(1.0)
+    assert jobs
+    kv = traffic.kv_bits_per_token(cfg, src.compute_bits)
+    r0 = eng.round_log[0]
+    assert jobs[0].d_bits == r0.admitted * r0.prefill_len * kv
+    train = [traffic.CollectiveJob("train", 0.0, "allreduce", 2**20 * 8)]
+    sim = traffic.RingTrafficSim(8, policy="shared")
+    res = sim.run(sorted(jobs + train,
+                         key=lambda j: (j.arrival_s, j.tenant)))
+    assert set(res.tenants) == {"serve", "train"}

@@ -67,6 +67,52 @@ def test_bucketing_roundtrip_identity(sizes, cap):
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
 
 
+@pytest.mark.parametrize("depth", [2, 3, 5])
+def test_bucketing_pipelined_bit_identical_at_depth(depth):
+    """Regression for the sliding-window drain: pipelining must only
+    reorder *issue*, never change per-bucket numerics — at any depth the
+    result is bit-identical to the serial ag(rs(...)) composition, and
+    every bucket's phases ran exactly once in FIFO window order."""
+    rng = np.random.default_rng(3)
+    tree = {f"p{i}": jnp.asarray(rng.normal(size=(s,)), jnp.float32)
+            for i, s in enumerate([300, 7, 1200, 64, 512, 2, 900])}
+    spec = bucketing.plan_buckets(tree, max_bucket_bytes=2048)
+    assert len(spec.bucket_sizes) > depth  # window actually wraps
+
+    calls = []
+
+    def rs(b, n, i):
+        calls.append(("rs", i))
+        return b * 0.5, {"scale": 2.0, "i": i}
+
+    def ag(shard, ctx, n, j):
+        calls.append(("ag", j))
+        assert ctx["i"] == j  # the ctx carried belongs to this bucket
+        return shard * ctx["scale"]
+
+    out = bucketing.bucketed_apply_pipelined(tree, rs, ag, spec, depth=depth)
+    serial = bucketing.bucketed_apply_indexed(
+        tree, lambda b, n, i: (b * 0.5) * 2.0, spec)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(serial[k]))
+    nb = len(spec.bucket_sizes)
+    rs_order = [i for kind, i in calls[: 2 * nb] if kind == "rs"][:nb]
+    ag_order = [i for kind, i in calls if kind == "ag"][:nb]
+    assert sorted(rs_order) == list(range(nb))
+    assert ag_order == sorted(ag_order)  # FIFO drain: all-gathers in order
+
+
+def test_bucketing_pipelined_depth_validation():
+    tree = {"p": jnp.zeros(8, jnp.float32)}
+    spec = bucketing.plan_buckets(tree)
+    with pytest.raises(ValueError, match="depth"):
+        bucketing.bucketed_apply_pipelined(
+            tree, lambda b, n, i: (b, None),
+            lambda s, c, n, j: s, spec, depth=0)
+
+
 def test_bucket_cap_respected():
     tree = {f"p{i}": jnp.zeros(100, jnp.float32) for i in range(10)}  # 400 B each
     spec = bucketing.plan_buckets(tree, max_bucket_bytes=1000)

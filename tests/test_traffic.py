@@ -1,0 +1,292 @@
+"""Multi-tenant traffic simulator (DESIGN.md §16): determinism, offered-load
+monotonicity, policy conformance, join/leave plan-memo recovery, and the
+serving-engine traffic source."""
+
+import numpy as np
+import pytest
+
+from repro.core import compose, simulator, step_models as sm, traffic, wrht
+
+MB = 2**20 * 8.0
+N = 16
+W = 16
+
+
+def _p(**kw) -> sm.OpticalParams:
+    return sm.OpticalParams(wavelengths=W, **kw)
+
+
+def _tenants():
+    return [
+        traffic.TenantSpec("train-a", rate_hz=120.0, d_bits=4 * MB),
+        traffic.TenantSpec("train-b", rate_hz=120.0, d_bits=1 * MB),
+        traffic.TenantSpec("serve", rate_hz=240.0, d_bits=0.25 * MB,
+                           collective="all_gather"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# sources
+# ---------------------------------------------------------------------------
+
+def test_poisson_source_deterministic():
+    a = traffic.PoissonSource(_tenants(), seed=7).jobs(0.25)
+    b = traffic.PoissonSource(_tenants(), seed=7).jobs(0.25)
+    assert a == b
+    c = traffic.PoissonSource(_tenants(), seed=8).jobs(0.25)
+    assert a != c
+
+
+def test_poisson_source_respects_registration_window():
+    spec = traffic.TenantSpec("t", rate_hz=500.0, join_s=0.1, leave_s=0.2)
+    jobs = traffic.PoissonSource([spec], seed=0).jobs(1.0)
+    assert jobs
+    assert all(0.1 <= j.arrival_s < 0.2 for j in jobs)
+
+
+def test_trace_source_sorts_and_clips():
+    jobs = [traffic.CollectiveJob("t", 0.5), traffic.CollectiveJob("t", 0.1)]
+    out = traffic.TraceSource(jobs).jobs(0.3)
+    assert [j.arrival_s for j in out] == [0.1]
+
+
+def test_scale_jobs_compresses_arrivals():
+    jobs = [traffic.CollectiveJob("t", 1.0), traffic.CollectiveJob("t", 2.0)]
+    scaled = traffic.scale_jobs(jobs, 4.0)
+    assert [j.arrival_s for j in scaled] == [0.25, 0.5]
+    with pytest.raises(ValueError):
+        traffic.scale_jobs(jobs, 0.0)
+
+
+def test_job_validation():
+    with pytest.raises(ValueError):
+        traffic.CollectiveJob("t", -1.0)
+    with pytest.raises(ValueError):
+        traffic.CollectiveJob("t", 0.0, d_bits=0.0)
+    with pytest.raises(ValueError):
+        traffic.PoissonSource([traffic.TenantSpec("x"),
+                               traffic.TenantSpec("x")])
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+def test_run_deterministic_under_fixed_seed():
+    tenants = _tenants()
+    runs = []
+    for _ in range(2):
+        src = traffic.PoissonSource(tenants, seed=3)
+        sim = traffic.RingTrafficSim(N, _p(), policy="shared")
+        res = sim.run(src, horizon_s=0.2)
+        runs.append([(r.job, r.start_s, r.finish_s) for r in res.jobs])
+    assert runs[0] == runs[1]
+
+
+@pytest.mark.parametrize("policy", traffic.POLICIES)
+def test_p99_monotone_in_offered_load(policy):
+    tenants = _tenants()
+    base = traffic.PoissonSource(tenants, seed=11).jobs(0.5)
+    p99s = []
+    for load in (0.25, 1.0, 4.0):
+        sim = traffic.RingTrafficSim(N, _p(), policy=policy)
+        res = sim.run(traffic.scale_jobs(base, load), tenants=tenants)
+        p99s.append(res.percentile(99))
+    assert p99s == sorted(p99s), p99s
+
+
+@pytest.mark.parametrize("policy", traffic.POLICIES)
+def test_policy_conformance(policy):
+    """Every admitted group's composed schedule validates, and every
+    constituent — after cross-tenant fusion — still passes its own
+    per-collective semantic oracle."""
+    tenants = _tenants()
+    src = traffic.PoissonSource(tenants, seed=5)
+    sim = traffic.RingTrafficSim(N, _p(), policy=policy,
+                                 keep_schedules=True)
+    res = sim.run(src, horizon_s=0.1, tenants=tenants)
+    fused = [g for g in res.groups if len(g.jobs) > 1]
+    assert fused, "expected at least one fused cross-tenant group"
+    for g in res.groups:
+        compose.validate_composed(g.composed)
+        for j in range(g.composed.depth):
+            wrht.validate_schedule(g.composed.constituent_view(j))
+
+
+def test_partitioned_fused_slots_use_disjoint_wavelength_slices():
+    tenants = _tenants()
+    src = traffic.PoissonSource(tenants, seed=5)
+    sim = traffic.RingTrafficSim(N, _p(), policy="partitioned",
+                                 keep_schedules=True)
+    res = sim.run(src, horizon_s=0.1, tenants=tenants)
+    checked = 0
+    for g in res.groups:
+        if len(g.jobs) < 2:
+            continue
+        for cs in g.composed.steps:
+            if not cs.fused:
+                continue
+            ranges = []
+            for part in cs.parts:
+                lam = cs.transfers.wavelength[part.lo:part.hi]
+                ranges.append((int(lam.min()), int(lam.max())))
+                checked += 1
+            ranges.sort()
+            for (_, hi), (lo, _) in zip(ranges, ranges[1:]):
+                assert hi < lo, ranges
+    assert checked > 0
+
+
+def test_partitioned_too_many_tenants_raises():
+    jobs = [traffic.CollectiveJob(f"t{i}", 0.0, d_bits=MB)
+            for i in range(W + 1)]
+    sim = traffic.RingTrafficSim(N, _p(), policy="partitioned",
+                                 max_concurrent=1)
+    with pytest.raises(ValueError, match="cannot split"):
+        sim.run(jobs)
+
+
+def test_same_tenant_jobs_serialize():
+    """At most one in-flight job per tenant: a tenant's collectives are
+    ordered, so three same-time submissions become three groups."""
+    jobs = [traffic.CollectiveJob("t", 0.0, d_bits=MB) for _ in range(3)]
+    sim = traffic.RingTrafficSim(N, _p(), policy="shared")
+    res = sim.run(jobs)
+    assert len(res.groups) == 3
+    finishes = sorted(r.finish_s for r in res.jobs)
+    assert finishes[0] < finishes[1] < finishes[2]
+
+
+def test_admission_control_rejects_beyond_queue_cap():
+    jobs = [traffic.CollectiveJob("t", 0.0, d_bits=16 * MB),
+            *[traffic.CollectiveJob(f"u{i}", 0.0, d_bits=16 * MB)
+              for i in range(6)]]
+    sim = traffic.RingTrafficSim(N, _p(), policy="shared",
+                                 max_concurrent=1, max_queue=2)
+    res = sim.run(jobs)
+    # 2 fit the backlog cap at t=0; the other 5 simultaneous arrivals bounce
+    assert len(res.rejected) == 5
+    assert len(res.jobs) == 2
+
+
+def test_zero_contention_matches_simulate_composed_bit_for_bit():
+    """The acceptance anchor: a single tenant's lone job times exactly as
+    simulate_composed on the same (depth-1-composed) schedule."""
+    d = 4 * MB
+    p = _p()
+    sched = wrht.build_collective_schedule("allreduce", N, W, d,
+                                           validate=False)
+    direct = simulator.simulate_composed(
+        compose.compose_schedules([sched]), d, p).total_s
+    for policy in traffic.POLICIES:
+        sim = traffic.RingTrafficSim(N, p, policy=policy)
+        res = sim.run([traffic.CollectiveJob("solo", 0.0, "allreduce", d)])
+        assert res.jobs[0].latency_s == direct
+
+
+def test_tenant_leave_replans_through_plan_memo():
+    """B leaving re-partitions the pool (A re-plans at full width); B's
+    late job restores the original partition — a pure memo hit, the
+    SyncController recovery contract (DESIGN.md §14)."""
+    tenants = [traffic.TenantSpec("a", rate_hz=0.0, d_bits=MB),
+               traffic.TenantSpec("b", rate_hz=0.0, d_bits=MB,
+                                  leave_s=0.5)]
+    jobs = [
+        traffic.CollectiveJob("a", 0.00, d_bits=MB),   # R={a,b}: plan a@half
+        traffic.CollectiveJob("b", 0.00, d_bits=MB),   #          plan b@half
+        traffic.CollectiveJob("a", 0.30, d_bits=MB),   # memo hit
+        traffic.CollectiveJob("a", 0.60, d_bits=MB),   # R={a}: plan a@full
+        traffic.CollectiveJob("a", 0.70, d_bits=MB),   # memo hit
+    ]
+    sim = traffic.RingTrafficSim(N, _p(), policy="partitioned")
+    res = sim.run(jobs, tenants=tenants)
+    assert res.repartitions >= 1
+    assert sim.replans == 3          # a@half, b@half, a@full — nothing else
+    hits_before = sim.replan_memo_hits
+    assert hits_before >= 2
+    # b's straggler job restores the {a, b} partition: zero new plans
+    late = sim.run([traffic.CollectiveJob("b", 1.0, d_bits=MB)],
+                   tenants=tenants)
+    assert late.replans == 0
+    assert late.replan_memo_hits >= 1
+    assert sim.last_replan_cached
+
+
+def test_counters_are_per_run_deltas():
+    sim = traffic.RingTrafficSim(N, _p(), policy="shared")
+    jobs = [traffic.CollectiveJob("t", 0.0, d_bits=MB)]
+    first = sim.run(jobs)
+    assert (first.replans, first.replan_memo_hits) == (1, 0)
+    second = sim.run(jobs)
+    assert second.replans == 0
+    assert second.replan_memo_hits >= 1
+
+
+def test_shared_fusion_saves_slots_vs_serial():
+    """Cross-tenant fusion must actually remove reconfiguration slots at
+    contention (the composer's reason to exist)."""
+    tenants = _tenants()
+    src = traffic.PoissonSource(tenants, seed=5)
+    sim = traffic.RingTrafficSim(N, _p(), policy="shared")
+    res = sim.run(src, horizon_s=0.1, tenants=tenants)
+    assert res.summary()["slots_saved"] > 0
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown policy"):
+        traffic.RingTrafficSim(N, _p(), policy="best-effort")
+
+
+# ---------------------------------------------------------------------------
+# serving traffic source (shape-only; the live-engine path rides
+# tests/test_serve.py where a real model is already spun up)
+# ---------------------------------------------------------------------------
+
+class _Cfg:
+    n_layers = 4
+    n_kv_heads = 2
+    d_model = 64
+    resolved_head_dim = 8
+
+
+def _round(admitted, prefill_len, decode_steps):
+    from repro.serve.engine import RoundStats
+    return RoundStats(admitted=admitted, batch=admitted,
+                      prefill_len=prefill_len, decode_steps=decode_steps)
+
+
+def test_serving_source_sizes_jobs_from_kv_and_activation_shapes():
+    cfg = _Cfg()
+    log = [_round(2, 8, 4), _round(1, 3, 0)]
+    src = traffic.ServingTrafficSource(cfg, log, round_period_s=0.01,
+                                       compute_bits=16)
+    jobs = src.jobs(1.0)
+    # round 0: prefill KV + decode activations; round 1: prefill only
+    assert len(jobs) == 3
+    kv = traffic.kv_bits_per_token(cfg, 16)      # 2*4*2*8*16 = 2048
+    act = traffic.activation_bits_per_token(cfg, 16)   # 64*16 = 1024
+    assert jobs[0].d_bits == 2 * 8 * kv
+    assert jobs[1].d_bits == 2 * 4 * act
+    assert jobs[2].d_bits == 1 * 3 * kv
+    assert jobs[2].arrival_s == pytest.approx(0.01)
+    assert all(j.collective == "all_gather" for j in jobs)
+
+
+def test_serving_source_competes_with_training():
+    cfg = _Cfg()
+    serve_src = traffic.ServingTrafficSource(
+        cfg, [_round(4, 32, 16)] * 20, round_period_s=5e-4,
+        compute_bits=16)
+    train = [traffic.CollectiveJob("train", 1e-4 * k, "allreduce", 2 * MB)
+             for k in range(10)]
+    jobs = sorted(serve_src.jobs(1.0) + train,
+                  key=lambda j: (j.arrival_s, j.tenant))
+    sim = traffic.RingTrafficSim(N, _p(), policy="shared",
+                                 keep_schedules=True)
+    res = sim.run(jobs)
+    assert set(res.tenants) == {"serve", "train"}
+    mixed = [g for g in res.groups
+             if len({j.tenant for j in g.jobs}) > 1]
+    assert mixed, "expected inference and training fused in one group"
+    for g in mixed:
+        compose.validate_composed(g.composed)
